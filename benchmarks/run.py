@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table + kernel/GS micro-benches.
+Prints ``name,us_per_call,derived`` CSV rows (assignment contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,micro,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-list of {table1,table2,table3,micro,kernels}")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from . import table1_glue, table2_subject, table3_lipconvnet
+    from . import micro_gs, kernels_bench
+
+    suites = [
+        ("table1", table1_glue.run),
+        ("table2", table2_subject.run),
+        ("table3", table3_lipconvnet.run),
+        ("micro", micro_gs.run),
+        ("kernels", kernels_bench.run),
+    ]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name, fn in suites:
+        if want and name not in want:
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            print(f"{name}/SUITE_FAILED,0.0,{e!r}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

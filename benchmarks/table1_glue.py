@@ -1,0 +1,111 @@
+"""Paper Table 1 (GLUE, RoBERTa-base) — proxy reproduction.
+
+Offline container => no GLUE/pretrained RoBERTa; we reproduce the table's
+*measurable* claims on a scaled-down encoder + synthetic classification
+task with a FROZEN random backbone (PEFT must rotate frozen features):
+
+  * all five methods (FT / LoRA / OFT / BOFT / GSOFT) train through the
+    same engine; eval accuracy after a fixed budget is the figure of merit
+  * adapter parameter budgets match the paper's formulas exactly
+    (GSOFT_b == BOFT_{m=2,b} == 2*d*b per weight; LoRA_r = r*(din+dout))
+  * GSOFT >= OFT at equal parameter budget (dense vs block-diag Q) is the
+    paper's central comparison
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import peft as peft_lib
+from repro.models.encoder import (classifier_loss, encoder_config,
+                                  init_encoder_classifier)
+from .common import emit, time_fn
+
+CFG = encoder_config(num_layers=2, d_model=64, num_heads=4, d_ff=128,
+                     vocab_size=64)
+NUM_CLASSES = 4
+STEPS = 250
+BATCH = 64
+SEQ = 12
+
+
+def make_task(key, n):
+    """Synthetic 'GLUE' task: label = last-token class, read out at the CLS
+    position. The rule is trivial; the *routing* (moving last-token identity
+    across the frozen backbone to the CLS readout) is what the adapters must
+    re-wire — the paper's feature-rotation story. Batches stream fresh from
+    the key (no memorization shortcut)."""
+    toks = jax.random.randint(key, (n, SEQ), 0, CFG.vocab_size)
+    labels = toks[:, -1] % NUM_CLASSES
+    return {"tokens": toks, "labels": labels}
+
+
+METHODS = {
+    "FT": None,
+    "LoRA_r8": peft_lib.PEFTConfig(method="lora", rank=8, alpha=16),
+    "OFT_b16": peft_lib.PEFTConfig(method="oft", block_size=16),
+    "BOFT_m2_b8": peft_lib.PEFTConfig(method="boft", block_size=8,
+                                      boft_factors=2),
+    "GSOFT_b8": peft_lib.PEFTConfig(method="gsoft", block_size=8),
+}
+
+
+def run_method(name, pcfg):
+    key = jax.random.PRNGKey(0)
+    params = init_encoder_classifier(CFG, NUM_CLASSES, key)
+    test = make_task(jax.random.PRNGKey(2), 512)
+
+    if pcfg is None:
+        trainable, frozen = params, {}
+        def materialize(t):
+            return t
+        n_params = peft_lib.count_params(params)
+    else:
+        adapters = peft_lib.init_peft(pcfg, params, jax.random.PRNGKey(3))
+        # head must always train for classification
+        trainable = {"adapters": adapters, "head": params["head"]}
+        frozen = params
+
+        def materialize(t):
+            eff = peft_lib.materialize_tree(pcfg, frozen, t["adapters"])
+            return {**eff, "head": t["head"]}
+        n_params = peft_lib.count_params(adapters)
+
+    ocfg = optim.OptimizerConfig(learning_rate=5e-3 if pcfg else 1e-3)
+    opt_state = optim.init(ocfg, trainable)
+
+    @jax.jit
+    def step(tr, opt, batch):
+        def loss_fn(t):
+            return classifier_loss(CFG, materialize(t), batch)
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(tr)
+        tr, opt, _ = optim.update(ocfg, g, opt, tr)
+        return tr, opt, m
+
+    @jax.jit
+    def evaluate(tr, batch):
+        return classifier_loss(CFG, materialize(tr), batch)[1]["accuracy"]
+
+    for s in range(STEPS):
+        mb = make_task(jax.random.fold_in(jax.random.PRNGKey(1), s), BATCH)
+        trainable, opt_state, metrics = step(trainable, opt_state, mb)
+    acc = float(evaluate(trainable, test))
+    us = time_fn(lambda: step(trainable, opt_state, mb), iters=5)
+    return acc, n_params, us
+
+
+def run():
+    results = {}
+    for name, pcfg in METHODS.items():
+        acc, n_params, us = run_method(name, pcfg)
+        results[name] = acc
+        emit(f"table1/{name}", us,
+             f"eval_acc={acc:.3f};trainable_params={n_params}")
+    # paper claims to validate structurally:
+    assert results["GSOFT_b8"] >= results["OFT_b16"] - 0.05, \
+        "GSOFT should match/beat OFT (dense vs block-diagonal Q)"
+    emit("table1/claim_gsoft_vs_oft", 0.0,
+         f"gsoft={results['GSOFT_b8']:.3f};oft={results['OFT_b16']:.3f}")
+    return results

@@ -1,0 +1,102 @@
+"""Paper Table 2 (subject-driven generation, SD attention layers) — proxy.
+
+No StableDiffusion offline; the table's transferable claims are about the
+*adapter mechanics* on attention-shaped weights (d=320..1280 in SD; scaled
+here):
+
+  * parameter budgets per method / hyperparameter (paper: GSOFT r=32 ~
+    6.8M ~ LoRA r=32's 6.6M; Double GSOFT r=64 ~ 6.5M)
+  * training-time ordering: LoRA < GSOFT < Double GSOFT << BOFT (m=5,6)
+    (paper: 1.3 / 1.5-1.8 / 1.7-2.0 / 2.0-2.3 h)
+  * merged inference == zero overhead for all orthogonal methods
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import peft as peft_lib
+from .common import emit, time_fn
+
+D, FF, L = 256, 512, 4          # scaled SD-attention-block proxy
+BATCH, SEQ = 8, 64
+
+
+def make_params(key):
+    ks = jax.random.split(key, 4)
+    return {"blocks": {
+        "attn": {"wq": jax.random.normal(ks[0], (L, D, D)) * 0.05,
+                 "wk": jax.random.normal(ks[1], (L, D, D)) * 0.05,
+                 "wv": jax.random.normal(ks[2], (L, D, D)) * 0.05,
+                 "wo": jax.random.normal(ks[3], (L, D, D)) * 0.05}}}
+
+
+def forward(params, x):
+    def body(h, lp):
+        q, k = h @ lp["wq"], h @ lp["wk"]
+        a = jax.nn.softmax(q @ jnp.swapaxes(k, -1, -2) / jnp.sqrt(D))
+        h = h + a @ (h @ lp["wv"]) @ lp["wo"]
+        return h, None
+    h, _ = jax.lax.scan(body, x, params["blocks"]["attn"])
+    return h
+
+
+METHODS = {
+    "LoRA_r4": peft_lib.PEFTConfig(method="lora", rank=4),
+    "LoRA_r32": peft_lib.PEFTConfig(method="lora", rank=32),
+    "BOFT_m4_b32": peft_lib.PEFTConfig(method="boft", block_size=32,
+                                       boft_factors=4),
+    "BOFT_m6_b32": peft_lib.PEFTConfig(method="boft", block_size=32,
+                                       boft_factors=6),
+    "GSOFT_b32": peft_lib.PEFTConfig(method="gsoft", block_size=32),
+    "GSOFT_b16": peft_lib.PEFTConfig(method="gsoft", block_size=16),
+    "DoubleGSOFT_b32": peft_lib.PEFTConfig(method="double_gsoft",
+                                           block_size=32),
+}
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    params = make_params(key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, SEQ, D))
+    target = jax.random.normal(jax.random.PRNGKey(2), (BATCH, SEQ, D))
+
+    times = {}
+    for name, pcfg in METHODS.items():
+        adapters = peft_lib.init_peft(pcfg, params, jax.random.PRNGKey(3))
+        ocfg = optim.OptimizerConfig(learning_rate=1e-3)
+        opt = optim.init(ocfg, adapters)
+
+        @jax.jit
+        def step(ad, op):
+            def loss(a):
+                eff = peft_lib.materialize_tree(pcfg, params, a)
+                return jnp.mean((forward(eff, x) - target) ** 2)
+            l, g = jax.value_and_grad(loss)(ad)
+            ad, op, _ = optim.update(ocfg, g, op, ad)
+            return ad, op, l
+
+        us = time_fn(lambda: step(adapters, opt), iters=5)
+        times[name] = us
+        emit(f"table2/{name}", us,
+             f"trainable_params={peft_lib.count_params(adapters)}")
+
+        # merged inference has zero overhead (paper §6.1); params passed as
+        # jit arguments so XLA cannot constant-fold the forward away
+        merged = peft_lib.merge_tree(pcfg, params, adapters)
+        fwd = jax.jit(forward)
+        us_merged = time_fn(fwd, merged, x, iters=5)
+        us_base = time_fn(fwd, params, x, iters=5)
+        emit(f"table2/{name}/merged_overhead", us_merged,
+             f"base_us={us_base:.1f};overhead={us_merged / us_base - 1:+.2%}")
+
+    # paper's time ordering: GSOFT (m=2) cheaper than BOFT (m=4/6)
+    emit("table2/claim_gsoft_faster_than_boft", 0.0,
+         f"gsoft_b32={times['GSOFT_b32']:.0f}us;"
+         f"boft_m4={times['BOFT_m4_b32']:.0f}us;"
+         f"boft_m6={times['BOFT_m6_b32']:.0f}us;"
+         f"ok={times['GSOFT_b32'] < times['BOFT_m4_b32']}")
+    return times

@@ -1,0 +1,71 @@
+"""End-to-end driver: GSOFT fine-tune of a language model with the full
+framework path — config, data pipeline, PEFT engine, AdamW, checkpointing,
+heartbeat, resume.
+
+Default is CPU-sized (~10M params, 300 steps, a couple of minutes); pass
+--hundred-m for the ~100M-parameter variant of the same architecture
+(identical code path — only the config scales).
+
+    PYTHONPATH=src python examples/finetune_lm.py [--hundred-m] [--steps N]
+"""
+import argparse
+import tempfile
+
+from repro import optim
+from repro.config import ModelConfig
+from repro.core import peft as peft_lib
+from repro.data import DataConfig
+from repro.optim import schedules
+from repro.train.loop import LoopConfig, train
+from repro.train.steps import TrainStepConfig
+
+
+def model_config(hundred_m: bool) -> ModelConfig:
+    if hundred_m:
+        return ModelConfig(
+            name="gs-lm-100m", family="decoder", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=12, head_dim=64, d_ff=3072,
+            vocab_size=32768, mlp_type="swiglu", dtype="f32",
+            param_dtype="f32", remat="none", attn_chunk=256)
+    return ModelConfig(
+        name="gs-lm-10m", family="decoder", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=4, head_dim=32, d_ff=1024, vocab_size=512,
+        mlp_type="swiglu", dtype="f32", param_dtype="f32", remat="none",
+        attn_chunk=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--peft", default="gsoft")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = model_config(args.hundred_m)
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="gsoft_ckpt_")
+    print(f"model {cfg.name}; checkpoints -> {ckpt}")
+
+    tcfg = TrainStepConfig(
+        peft=peft_lib.PEFTConfig(method=args.peft, block_size=16),
+        opt=optim.OptimizerConfig(learning_rate=3e-3),
+        num_microbatches=2,
+        schedule=schedules.warmup_cosine(20, args.steps),
+    )
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab_size=min(cfg.vocab_size, 256))
+    loop = LoopConfig(steps=args.steps, log_every=20, ckpt_every=100,
+                      ckpt_dir=ckpt, heartbeat_path=f"{ckpt}/heartbeat")
+    out = train(cfg, tcfg, dcfg, loop)
+    h = out["history"]
+    print(f"\nloss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} over "
+          f"{args.steps} steps; adapters are "
+          f"{peft_lib.count_params(out['trainable'])} params vs "
+          f"{peft_lib.count_params(out['frozen'])} frozen")
+    assert h[-1]["loss"] < h[0]["loss"], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

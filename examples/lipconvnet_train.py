@@ -1,0 +1,53 @@
+"""Certified-robust training with GS orthogonal convolutions (paper §7.3).
+
+Trains LipConvnet-10 with GS-SOC layers on synthetic CIFAR-shaped data and
+reports clean + certified accuracy (margin / sqrt(2) certificate).
+
+    PYTHONPATH=src python examples/lipconvnet_train.py [--steps 30]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models.lipconvnet import (LipConvnetConfig, init_lipconvnet,
+                                     lipconvnet_loss)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--conv", default="gs", choices=["gs", "soc"])
+    args = ap.parse_args()
+
+    cfg = LipConvnetConfig(depth=10, base_width=8, num_classes=10,
+                           image_size=32, groups=(4, 0), terms=4,
+                           conv_layer=args.conv)
+    key = jax.random.PRNGKey(0)
+    params = init_lipconvnet(cfg, key)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 32, 32, 3)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(2), (3, 10))
+    labels = jnp.argmax(x[:, :8, :8].mean(axis=(1, 2)) @ w, axis=-1)
+
+    ocfg = optim.OptimizerConfig(learning_rate=3e-3, weight_decay=0.0)
+    opt = optim.init(ocfg, params)
+
+    @jax.jit
+    def step(p, o):
+        (l, m), g = jax.value_and_grad(
+            lambda q: lipconvnet_loss(cfg, q, x, labels), has_aux=True)(p)
+        p, o, _ = optim.update(ocfg, g, o, p)
+        return p, o, l, m
+
+    for s in range(args.steps):
+        params, opt, loss, metrics = step(params, opt)
+        if s % 5 == 0 or s == args.steps - 1:
+            print(f"step {s:3d} loss {float(loss):.4f} "
+                  f"acc {float(metrics['accuracy']):.3f} "
+                  f"cert@36/255 {float(metrics['certified']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .roofline import Roofline, model_flops, advice, PEAK_FLOPS, HBM_BW, ICI_BW
+from .hlo import collective_stats, total_collective_bytes
+from .hlo_cost import module_cost, HloModuleCost

@@ -1,0 +1,84 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``collective_stats`` parses a post-SPMD-partitioning HLO module
+(compiled.as_text()) and sums *operand* bytes of every communication op:
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(+ their -start async forms).  A symbol table of instruction output shapes
+resolves operand sizes; unresolvable operands fall back to the op's own
+output size.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """-> {kind: {count, operand_bytes}} over the per-device module."""
+    # pass 1: symbol table name -> output bytes
+    table: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # type is everything up to the opcode name; take the leading type expr
+        table[name] = _shape_bytes(rhs.split(" ")[0] if not
+                                   rhs.startswith("(") else
+                                   rhs[:rhs.index(")") + 1])
+
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0.0})
+    op_re = re.compile(
+        r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVES) +
+        r")(?:-start|-done)?\s*\(([^)]*)\)")
+    for ln in lines:
+        m = op_re.search(ln)
+        if not m:
+            continue
+        out_type, kind, operands = m.group(1), m.group(2), m.group(3)
+        if "-done" in ln.split(kind)[1][:8]:
+            continue  # count start, skip done (same transfer)
+        ob = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            op = op.split(" ")[0]
+            ob += table.get(op, 0)
+        if ob == 0:
+            ob = _shape_bytes(out_type)
+        stats[kind]["count"] += 1
+        stats[kind]["operand_bytes"] += float(ob)
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["operand_bytes"] for v in collective_stats(hlo_text).values())

@@ -1,0 +1,109 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+    compute_s    = HLO_FLOPs_total    / (chips * PEAK_FLOPS)
+    memory_s     = HLO_bytes_total    / (chips * HBM_BW)
+    collective_s = coll_bytes_total   / (chips * ICI_BW)
+
+Hardware constants (assignment): TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI, 16 GiB HBM per chip.
+
+``cost_analysis()`` on a GSPMD-partitioned executable reports the per-device
+program; we scale by chip count for the fabric totals (the probe in
+tests/test_roofline.py pins this interpretation down empirically).
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (inference), N = active params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link / chip
+HBM_CAP = 16 * 2 ** 30       # v5e HBM per chip
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float                # 6*N*D or 2*N*D (global, per step)
+    peak_memory_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic overlap model: step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/causal-waste/redundancy."""
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOPs vs what the chips could do in the modeled step
+        time — the headline '% of roofline' number."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_fraction,
+            "roofline_frac": self.roofline_fraction,
+            "peak_mem_gib": self.peak_memory_per_device / 2 ** 30,
+        }
+
+
+def model_flops(active_params: int, tokens: int, kind: str) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference forward."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * active_params * tokens
+
+
+def advice(r: Roofline) -> str:
+    if r.dominant == "compute":
+        if r.useful_flops_fraction < 0.4:
+            return ("compute-bound with low useful-FLOP fraction: cut remat "
+                    "recompute / causal-mask waste (prefix_loop attention), "
+                    "or reduce microbatch recompute")
+        return "compute-bound near useful peak: only kernel-level wins left"
+    if r.dominant == "memory":
+        return ("HBM-bound: increase arithmetic intensity — larger fused "
+                "blocks (gs_fused kernel), bf16 activations, fewer "
+                "materialized intermediates / layouts")
+    return ("collective-bound: reshard to cut cross-device traffic (kv-head "
+            "replication, EP capacity, gradient compression on the DP axes, "
+            "overlap collectives with compute)")

@@ -1,0 +1,196 @@
+"""Config system: model / shape / run configuration + the arch registry.
+
+Every assigned architecture registers a ``ModelConfig`` under its public id
+(see src/repro/configs/*.py); shapes are the assignment's four input-shape
+cells.  Configs are frozen dataclasses — hashable, jit-static, overridable
+from the CLI via ``--set field=value``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # decoder | encdec | hybrid | ssm | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    mlp_type: str = "swiglu"         # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma: embeddings scaled by sqrt(d)
+    logit_softcap: float = 0.0
+
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_segment: int = 2048          # token segment for dispatch transients
+
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    attn_every: int = 0              # hybrid: shared attn block every k layers
+
+    # encoder-decoder
+    enc_layers: int = 0
+
+    # modality frontend stub ([vlm]/[audio]: precomputed embeddings)
+    frontend: str = "none"           # none | patch | frames
+    frontend_dim: int = 0
+    frontend_tokens: int = 0         # patches prepended (vlm)
+
+    # numerics / execution
+    dtype: str = "bf16"
+    param_dtype: str = "bf16"
+    use_pallas: bool = False
+    remat: str = "full"              # full | dots | none
+    attn_chunk: int = 1024
+    ssd_chunk: int = 256
+    attn_impl: str = "dense"         # dense | prefix_loop (perf option)
+    seq_parallel: bool = False       # Megatron-SP: residual sharded on seq
+
+    # notes for DESIGN/roofline
+    source: str = ""
+
+    @property
+    def d_head(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def act_dtype(self):
+        return DTYPES[self.dtype]
+
+    @property
+    def weight_dtype(self):
+        return DTYPES[self.param_dtype]
+
+    def padded_vocab(self, multiple: int = 16) -> int:
+        v = self.vocab_size
+        return ((v + multiple - 1) // multiple) * multiple
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+# the assignment's four shape cells (LM family)
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic decode); the 8 pure
+# full-attention archs skip it (DESIGN §5)
+SUBQUADRATIC = ("zamba2-2.7b", "mamba2-130m")
+
+
+def shape_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch: 500k decode skipped per assignment"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_SMOKE: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE[cfg.name] = smoke
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    _load_all()
+    return _SMOKE[name]
+
+
+def list_archs():
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro import configs  # noqa: F401  (registers everything)
+
+
+def parse_overrides(pairs) -> dict:
+    """--set key=value CLI overrides with literal-ish parsing."""
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out

@@ -1,0 +1,258 @@
+"""PEFT adapters: GSOFT / Double GSOFT (the paper), plus the baselines it
+compares against — OFT (block-diagonal), BOFT (block butterfly), LoRA.
+
+All adapters are *functional*: an ``AdapterSpec`` (static dataclass) plus a
+params pytree.  The framework applies them **weight-side**:
+
+    W_eff = materialize(spec, params, W_frozen)
+
+inside the jitted step — for orthogonal methods W_eff = Q @ W (Q acts on the
+input dim, preserving the frozen weight's output geometry), for Double GSOFT
+W_eff = Q_U @ W @ Q_V, for LoRA W_eff = W + (alpha/r) A B.  Identity init
+guarantees W_eff == W at step 0.  ``merge`` bakes the adapter into the weight
+for inference (zero overhead — paper §6.1).
+
+Weights with leading batch dims (e.g. stacked MoE experts (E, d_in, d_out))
+get independent adapters per batch element, vmapped.
+
+Weight convention: W has shape (d_in, d_out), used as y = x @ W.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gs
+from .gs import BlockDiagSpec, GSLayout, block_diag_matmul, gsoft_layout, pick_block_size
+from .orthogonal import cayley, skew
+from .permutations import PermSpec, apply_perm
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdapterSpec:
+    """Static description of one adapter attached to one weight."""
+    method: str                    # gsoft | double_gsoft | oft | boft | lora
+    d_in: int
+    d_out: int
+    block_size: int = 32           # orthogonal methods (input side)
+    block_size_out: int = 0        # double_gsoft output side (0 -> same rule)
+    rank: int = 8                  # lora
+    alpha: float = 16.0            # lora scaling
+    boft_factors: int = 2          # BOFT m
+    neumann_order: Optional[int] = None   # approximate Cayley (perf option)
+    use_scale: bool = False        # learnable per-output magnitude
+    # leading batch dims of the weight (scan-stacked layers, MoE experts, ...)
+    batch: Tuple[int, ...] = ()
+
+    def resolved_block(self, d: int, b: int) -> int:
+        return b if d % b == 0 and (d // b) <= b else pick_block_size(d, b)
+
+
+# ---------------------------------------------------------------------------
+# BOFT butterfly permutations
+# ---------------------------------------------------------------------------
+
+def butterfly_sigma(d: int, b: int, level: int) -> np.ndarray:
+    """Gather order for BOFT butterfly level (1-indexed).
+
+    Half-blocks of size b/2 are paired at half-block stride 2^(level-1):
+    level 1 groups contiguous blocks; deeper levels pair at doubling
+    distance, reaching density at m = 1 + log2(d/b) (BOFT's bound).
+    """
+    if b % 2 and level > 1:
+        raise ValueError("BOFT butterfly needs even block size")
+    h = b // 2 if b > 1 else 1
+    nh = d // h
+    s = 2 ** (level - 1)
+    if nh % (2 * s):
+        raise ValueError(f"butterfly level {level} invalid for d={d}, b={b}: "
+                         f"{nh} half-blocks not divisible by {2 * s}")
+    order = []
+    for base in range(0, nh, 2 * s):
+        for off in range(s):
+            p1, p2 = base + off, base + off + s
+            order.extend(range(p1 * h, (p1 + 1) * h))
+            order.extend(range(p2 * h, (p2 + 1) * h))
+    return np.asarray(order)
+
+
+def max_butterfly_levels(d: int, b: int) -> int:
+    """Deepest valid level: level l tiles the d/(b/2) half-blocks into
+    groups of 2^l, so it needs 2^l | num_half_blocks (hypothesis-found edge:
+    r not a power of two caps the depth)."""
+    nh = d // max(b // 2, 1)
+    lvl = 0
+    while nh % (2 ** (lvl + 1)) == 0 and 2 ** (lvl + 1) <= nh:
+        lvl += 1
+    return max(1, lvl)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _maybe_batch(shape: Tuple[int, ...], batch: Tuple[int, ...]) -> Tuple[int, ...]:
+    return tuple(batch) + shape
+
+
+def init_adapter(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    """Initialize adapter params. Orthogonal methods start at Q = I (K = 0);
+    LoRA starts at A ~ N, B = 0. Either way W_eff(init) == W."""
+    p: Params = {}
+    if spec.method in ("gsoft", "double_gsoft"):
+        b_in = spec.resolved_block(spec.d_in, spec.block_size)
+        lay = gsoft_layout(spec.d_in, b_in)
+        p["L"] = jnp.zeros(_maybe_batch(lay.lspec.param_shape, spec.batch), dtype)
+        p["R"] = jnp.zeros(_maybe_batch(lay.rspec.param_shape, spec.batch), dtype)
+        if spec.method == "double_gsoft":
+            b_out = spec.resolved_block(spec.d_out,
+                                        spec.block_size_out or spec.block_size)
+            lay_v = gsoft_layout(spec.d_out, b_out)
+            p["L_v"] = jnp.zeros(_maybe_batch(lay_v.lspec.param_shape, spec.batch), dtype)
+            p["R_v"] = jnp.zeros(_maybe_batch(lay_v.rspec.param_shape, spec.batch), dtype)
+    elif spec.method == "oft":
+        b = spec.resolved_block(spec.d_in, spec.block_size)
+        r = spec.d_in // b
+        p["K"] = jnp.zeros(_maybe_batch((r, b, b), spec.batch), dtype)
+    elif spec.method == "boft":
+        b = spec.resolved_block(spec.d_in, spec.block_size)
+        m = min(spec.boft_factors, max_butterfly_levels(spec.d_in, b))
+        r = spec.d_in // b
+        p["K"] = jnp.zeros(_maybe_batch((m, r, b, b), spec.batch), dtype)
+    elif spec.method == "lora":
+        ka, _ = jax.random.split(key)
+        a = jax.random.normal(ka, _maybe_batch((spec.d_in, spec.rank), spec.batch),
+                              dtype) * (1.0 / math.sqrt(spec.d_in))
+        p["A"] = a
+        p["B"] = jnp.zeros(_maybe_batch((spec.rank, spec.d_out), spec.batch), dtype)
+    else:
+        raise ValueError(f"unknown adapter method {spec.method}")
+    if spec.use_scale:
+        p["scale"] = jnp.ones(_maybe_batch((spec.d_out,), spec.batch), dtype)
+    return p
+
+
+def num_adapter_params(spec: AdapterSpec) -> int:
+    p = init_adapter(spec, jax.random.PRNGKey(0))
+    return sum(int(np.prod(v.shape)) for v in p.values())
+
+
+# ---------------------------------------------------------------------------
+# materialization (weight-side application)
+# ---------------------------------------------------------------------------
+
+def _gs_rotate(d: int, b: int, L_k: Array, R_k: Array, W: Array,
+               neumann: Optional[int], transpose_side: bool) -> Array:
+    """Apply Q = P^T L P R (orthogonal GS) to W.
+
+    transpose_side=False:  Q @ W    (Q on rows / input dim)
+    transpose_side=True:   W @ Q    (Q on columns / output dim)
+
+    Perf (§Perf iteration A): the Cayley solve stays fp32 but the rotated
+    blocks are cast to W's dtype before the block matmuls — bf16 weights
+    rotate in bf16, halving the weight-sized HBM traffic of the
+    materialization. Orthogonality error at bf16 is ~1e-2 relative
+    (benchmarks/micro_gs.py) on blocks whose product preserves norms.
+    """
+    lay = gsoft_layout(d, b)
+    L = cayley(skew(L_k), neumann_order=neumann).astype(W.dtype)
+    R = cayley(skew(R_k), neumann_order=neumann).astype(W.dtype)
+    if transpose_side:
+        return gs.gs_apply_T(lay, L, R, W)       # rows w -> w^T Q, i.e. W @ Q
+    return gs.gs_matmul(lay, L, R, W)            # Q @ W
+
+
+def _oft_rotate(K: Array, W: Array, neumann: Optional[int]) -> Array:
+    """Block-diagonal orthogonal Q @ W (OFT)."""
+    Q = cayley(skew(K), neumann_order=neumann)
+    WT = jnp.swapaxes(W, -1, -2)                 # (d_out, d_in)
+    return jnp.swapaxes(block_diag_matmul(Q, WT), -1, -2)
+
+
+def _boft_rotate(K: Array, d: int, b: int, W: Array,
+                 neumann: Optional[int]) -> Array:
+    """Q = B_m .. B_1 with butterfly factors; returns Q @ W."""
+    m = K.shape[0]
+    Q = cayley(skew(K), neumann_order=neumann)   # (m, r, b, b)
+    WT = jnp.swapaxes(W, -1, -2)                 # columns of W as vectors
+    y = WT
+    for lvl in range(m):
+        sig = butterfly_sigma(d, b, lvl + 1)
+        spec_p = PermSpec.from_sigma(sig)
+        y = apply_perm(y, spec_p)                # group
+        y = block_diag_matmul(Q[lvl], y)         # rotate
+        y = apply_perm(y, spec_p.inverse())      # scatter back
+    return jnp.swapaxes(y, -1, -2)
+
+
+def materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
+    """W_eff from frozen W + adapter params. Differentiable w.r.t. params."""
+    if spec.batch:
+        inner = dataclasses.replace(spec, batch=tuple(spec.batch[1:]))
+        fn = lambda p, w: materialize(inner, p, w)
+        return jax.vmap(fn)(params, W)
+
+    dtype = W.dtype
+    Wf = W
+    if spec.method == "gsoft":
+        b = spec.resolved_block(spec.d_in, spec.block_size)
+        Wf = _gs_rotate(spec.d_in, b, params["L"], params["R"], Wf,
+                        spec.neumann_order, transpose_side=False)
+    elif spec.method == "double_gsoft":
+        b_in = spec.resolved_block(spec.d_in, spec.block_size)
+        Wf = _gs_rotate(spec.d_in, b_in, params["L"], params["R"], Wf,
+                        spec.neumann_order, transpose_side=False)
+        b_out = spec.resolved_block(spec.d_out,
+                                    spec.block_size_out or spec.block_size)
+        Wf = _gs_rotate(spec.d_out, b_out, params["L_v"], params["R_v"], Wf,
+                        spec.neumann_order, transpose_side=True)
+    elif spec.method == "oft":
+        Wf = _oft_rotate(params["K"], Wf, spec.neumann_order)
+    elif spec.method == "boft":
+        b = spec.resolved_block(spec.d_in, spec.block_size)
+        Wf = _boft_rotate(params["K"], spec.d_in, b, Wf, spec.neumann_order)
+    elif spec.method == "lora":
+        scale = spec.alpha / spec.rank
+        Wf = Wf + scale * (params["A"] @ params["B"]).astype(dtype)
+    else:
+        raise ValueError(spec.method)
+    if spec.use_scale:
+        Wf = Wf * params["scale"][None, :].astype(dtype)
+    return Wf.astype(dtype)
+
+
+def merge(spec: AdapterSpec, params: Params, W: Array) -> Array:
+    """Bake the adapter into the weight (inference; no runtime overhead)."""
+    return materialize(spec, params, W)
+
+
+# ---------------------------------------------------------------------------
+# activation-side application (config option; wins when tokens << d_out)
+# ---------------------------------------------------------------------------
+
+def apply_activation_side(spec: AdapterSpec, params: Params, x: Array) -> Array:
+    """For input-rotation methods, y = x @ (Q W) == (x Q) @ W: rotate the
+    activations instead of the weight. Only valid for gsoft/oft/boft."""
+    if spec.method == "gsoft":
+        b = spec.resolved_block(spec.d_in, spec.block_size)
+        lay = gsoft_layout(spec.d_in, b)
+        L = cayley(skew(params["L"]), neumann_order=spec.neumann_order)
+        R = cayley(skew(params["R"]), neumann_order=spec.neumann_order)
+        # x Q = (Q^T x^T)^T -> per-vector transpose application
+        return gs.gs_apply_T(lay, L, R, x)
+    if spec.method == "oft":
+        Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)
+        return block_diag_matmul(jnp.swapaxes(Q, -1, -2), x)
+    raise ValueError(f"activation-side not defined for {spec.method}")

@@ -1,0 +1,212 @@
+"""GS orthogonal convolutions (paper §6.3, App. F) — TPU-native JAX.
+
+Building blocks
+---------------
+* ``skew_kernel``       — L = M - ConvTranspose(M): makes the induced conv
+                          matrix (eq. 2) skew-symmetric, so its exponential is
+                          orthogonal (SOC, Singla & Feizi 2021).
+* ``conv_exponential``  — truncated Taylor series of the convolution
+                          exponential L *_e X (Definition 6.1), grouped via
+                          ``feature_group_count`` (TPU-native grouped conv —
+                          no im2col, adapts the paper's GPU grouped conv).
+* ``ChShuffle``         — channel permutation; the *paired* variant
+                          (App. F) keeps MaxMin pairs together.
+* ``MaxMin / MaxMinPermuted`` — gradient-norm-preserving activations.
+* ``gs_soc_layer``      — Y = GrExpConv2(ChShuffle2(GrExpConv1(ChShuffle1 X))),
+                          the GS-SOC layer of eq. (3); second conv is 1x1
+                          (paper finding: keeps quality, restores speed).
+
+Layout: NHWC activations, HWIO kernels (TPU conventions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .permutations import PermSpec, apply_perm
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# skew-symmetric convolution kernels
+# ---------------------------------------------------------------------------
+
+def skew_kernel(m: Array, groups: int = 1) -> Array:
+    """L = M - ConvTranspose(M), per group.
+
+    m: (H, W, c//g, c) HWIO grouped kernel with c_out == c_in == c.
+    ConvTranspose(M)[h, w, i, o] = M[H-1-h, W-1-w, o, i]  (within each group).
+    """
+    H, W, cg, c = m.shape
+    if c % groups or cg != c // groups:
+        raise ValueError(f"bad grouped kernel shape {m.shape} for groups={groups}")
+    mg = m.reshape(H, W, cg, groups, cg)              # split O -> (g, o_local)
+    mt = jnp.flip(mg, axis=(0, 1))                    # spatial flip
+    mt = jnp.swapaxes(mt, 2, 4)                       # (i <-> o_local)
+    return (mg - mt).reshape(H, W, cg, c)
+
+
+def conv2d(x: Array, kernel: Array, groups: int = 1) -> Array:
+    """SAME-padded NHWC grouped convolution."""
+    return jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=x.dtype)
+
+
+def conv_exponential(x: Array, kernel: Array, groups: int = 1,
+                     terms: int = 6) -> Array:
+    """L *_e X = X + LX/1! + L^2 X/2! + ...  truncated at ``terms``.
+
+    With a skew kernel the Jacobian is orthogonal up to truncation error.
+    """
+    acc = x
+    term = x
+    for t in range(1, terms + 1):
+        term = conv2d(term, kernel, groups) / t
+        acc = acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# activations (App. F)
+# ---------------------------------------------------------------------------
+
+def maxmin(x: Array) -> Array:
+    """Original MaxMin: pairs channel i with channel i + c/2 (Def. F.1)."""
+    c = x.shape[-1]
+    a, b = x[..., : c // 2], x[..., c // 2:]
+    return jnp.concatenate([jnp.maximum(a, b), jnp.minimum(a, b)], axis=-1)
+
+
+def maxmin_permuted(x: Array) -> Array:
+    """MaxMinPermuted (Def. F.2): pairs *neighboring* channels (2i, 2i+1), so
+    activations never leak information across ChShuffle groups."""
+    a, b = x[..., 0::2], x[..., 1::2]
+    mx, mn = jnp.maximum(a, b), jnp.minimum(a, b)
+    out = jnp.stack([mx, mn], axis=-1)
+    return out.reshape(x.shape)
+
+
+ACTIVATIONS = {"maxmin": maxmin, "maxmin_permuted": maxmin_permuted,
+               "none": lambda x: x}
+
+
+# ---------------------------------------------------------------------------
+# channel shuffle
+# ---------------------------------------------------------------------------
+
+def ch_shuffle_spec(channels: int, k: int, paired: bool = True) -> PermSpec:
+    """ChShuffle before a k-grouped conv. ``paired`` (App. F) moves channel
+    pairs jointly — optimal information transition AND keeps MaxMinPermuted
+    pairs intact (Table 4 ablation: paired >> not paired)."""
+    if paired and channels % (2 * k) == 0 and channels >= 2 * k:
+        return PermSpec.paired(k)
+    return PermSpec.gs(k)
+
+
+def ch_shuffle(x: Array, spec: PermSpec) -> Array:
+    return apply_perm(x, spec, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GS-SOC layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GSSOCSpec:
+    """One GS-SOC orthogonal convolution layer (paper Table 3 rows).
+
+    groups = (a, b): first grouped exp-conv has ``a`` groups, kernel k1 x k1;
+    second has ``b`` groups with kernel 1x1. b = 0 -> single conv (row "(4,-)").
+    a == b == 1 with no shuffle reduces to plain SOC.
+    """
+    channels: int
+    groups1: int = 4
+    groups2: int = 0
+    k1: int = 3
+    k2: int = 1
+    terms: int = 6
+    paired: bool = True
+
+    def param_shapes(self):
+        c, g1 = self.channels, self.groups1
+        shapes = {"m1": (self.k1, self.k1, c // g1, c)}
+        if self.groups2:
+            shapes["m2"] = (self.k2, self.k2, c // self.groups2, c)
+        return shapes
+
+    @property
+    def num_params(self) -> int:
+        return sum(int(np.prod(s)) for s in self.param_shapes().values())
+
+
+def init_gs_soc(spec: GSSOCSpec, key: jax.Array, dtype=jnp.float32):
+    shapes = spec.param_shapes()
+    params = {}
+    for i, (name, shp) in enumerate(sorted(shapes.items())):
+        scale = 1.0 / np.sqrt(np.prod(shp[:3]))
+        params[name] = jax.random.normal(jax.random.fold_in(key, i), shp,
+                                         dtype) * scale
+    return params
+
+
+def gs_soc_layer(spec: GSSOCSpec, params, x: Array) -> Array:
+    """Eq. (3): GrExpConv2(ChShuffle2(GrExpConv1(ChShuffle1(X)))).
+
+    Orthogonal Jacobian (up to Taylor truncation): permutations are
+    orthogonal, grouped conv exponentials of skew kernels are orthogonal,
+    and compositions of orthogonal maps are orthogonal.
+    """
+    c = spec.channels
+    if spec.groups1 > 1:
+        x = ch_shuffle(x, ch_shuffle_spec(c, spec.groups1, spec.paired))
+    k1 = skew_kernel(params["m1"], spec.groups1)
+    x = conv_exponential(x, k1, spec.groups1, spec.terms)
+    if spec.groups2:
+        if spec.groups2 > 1:
+            x = ch_shuffle(x, ch_shuffle_spec(c, spec.groups2, spec.paired))
+        k2 = skew_kernel(params["m2"], spec.groups2)
+        x = conv_exponential(x, k2, spec.groups2, spec.terms)
+    return x
+
+
+def soc_layer_spec(channels: int, terms: int = 6) -> GSSOCSpec:
+    """Plain SOC baseline = one ungrouped exp conv, no shuffle."""
+    return GSSOCSpec(channels=channels, groups1=1, groups2=0, terms=terms,
+                     paired=False)
+
+
+# ---------------------------------------------------------------------------
+# utilities for Lipschitz nets
+# ---------------------------------------------------------------------------
+
+def space_to_depth(x: Array, factor: int = 2) -> Array:
+    """Invertible (orthogonal) downsampling: (H, W, C) -> (H/2, W/2, 4C)."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // factor, factor, w // factor, factor, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(n, h // factor, w // factor, factor * factor * c)
+
+
+def power_iteration_sn(w: Array, iters: int = 20) -> Array:
+    """Spectral norm estimate of a 2D matrix (for 1-Lipschitz dense heads)."""
+    v = jnp.ones((w.shape[1],), w.dtype) / np.sqrt(w.shape[1])
+    for _ in range(iters):
+        u = w @ v
+        u = u / (jnp.linalg.norm(u) + 1e-12)
+        v = w.T @ u
+        v = v / (jnp.linalg.norm(v) + 1e-12)
+    return jnp.einsum("i,ij,j->", u, w, v)
+
+
+def certified_radius(logits: Array) -> Array:
+    """SOC certificate: margin / sqrt(2) for 1-Lipschitz nets."""
+    top2 = jax.lax.top_k(logits, 2)[0]
+    return (top2[..., 0] - top2[..., 1]) / np.sqrt(2.0)

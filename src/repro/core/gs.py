@@ -1,0 +1,342 @@
+"""Group-and-Shuffle (GS) matrices — the paper's core structured class.
+
+A (two-factor) GS matrix is
+
+    A = P_L (L P R) P_R                                         (paper eq. 1)
+
+with L = diag(L_1..L_{k_L}), R = diag(R_1..R_{k_R}) block-diagonal and
+P_L, P, P_R permutations.  The class generalizes Monarch matrices (App. C:
+Monarch adds the coupling k_L = b_R, k_R = b_L) and — with the right
+permutations — block-butterfly matrices (Remark 2).
+
+Higher-order GS (Definition 5.1):
+
+    A = P_{m+1} * prod_{i=m..1} (B_i P_i)
+
+Everything here is functional: parameters are plain arrays (stacked block
+tensors), layouts are hashable dataclasses that become jit-static arguments.
+
+Key results implemented / verified in tests:
+  * Proposition 1  — block-low-rank interpretation of GS(I, P, I)
+  * Theorem 2      — m = 1 + ceil(log_b r) factors form a dense matrix with
+                     P_(k, n) shuffles; fewer factors cannot
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .permutations import PermSpec, apply_perm, inverse_sigma
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# layouts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockDiagSpec:
+    """diag(B_1..B_k) with every block of shape (rows, cols)."""
+    num_blocks: int
+    rows: int
+    cols: int
+
+    @property
+    def in_dim(self) -> int:
+        return self.num_blocks * self.cols
+
+    @property
+    def out_dim(self) -> int:
+        return self.num_blocks * self.rows
+
+    @property
+    def param_shape(self) -> Tuple[int, int, int]:
+        return (self.num_blocks, self.rows, self.cols)
+
+    @property
+    def num_params(self) -> int:
+        return self.num_blocks * self.rows * self.cols
+
+
+@dataclasses.dataclass(frozen=True)
+class GSLayout:
+    """Two-factor layout  A = P_L (L P R) P_R  (sizes per Definition 3.1)."""
+    lspec: BlockDiagSpec
+    rspec: BlockDiagSpec
+    perm_left: PermSpec
+    perm_mid: PermSpec
+    perm_right: PermSpec
+
+    def __post_init__(self):
+        if self.lspec.in_dim != self.rspec.out_dim:
+            raise ValueError(
+                f"inner dims disagree: L takes {self.lspec.in_dim}, "
+                f"R produces {self.rspec.out_dim}")
+
+    @property
+    def in_dim(self) -> int:
+        return self.rspec.in_dim
+
+    @property
+    def out_dim(self) -> int:
+        return self.lspec.out_dim
+
+    @property
+    def inner_dim(self) -> int:
+        return self.rspec.out_dim
+
+    @property
+    def num_params(self) -> int:
+        return self.lspec.num_params + self.rspec.num_params
+
+
+def gsoft_layout(d: int, block_size: int) -> GSLayout:
+    """The layout used by GSOFT:  Q = P^T L P R  (square, equal b x b blocks).
+
+    P = P_(r, d) with r = d / b.  Dense iff r <= b (Theorem 2 with m = 2).
+    """
+    if d % block_size != 0:
+        raise ValueError(f"block size {block_size} must divide d={d}")
+    r = d // block_size
+    spec = BlockDiagSpec(r, block_size, block_size)
+    return GSLayout(
+        lspec=spec, rspec=spec,
+        perm_left=PermSpec.gs_inv(r),   # P^T = P^{-1}
+        perm_mid=PermSpec.gs(r),
+        perm_right=PermSpec.identity(),
+    )
+
+
+def pick_block_size(d: int, target_b: int) -> int:
+    """Largest divisor b of d with b <= target_b and d/b <= b when possible.
+
+    Guarantees the m=2 GSOFT density condition (r <= b) whenever any divisor
+    satisfies it; otherwise returns the largest divisor <= target_b (caller
+    may switch to higher-order GS).
+    """
+    divs = [b for b in range(1, d + 1) if d % b == 0]
+    ok = [b for b in divs if b <= target_b and d // b <= b]
+    if ok:
+        return max(ok)
+    le = [b for b in divs if b <= target_b]
+    return max(le) if le else min(divs)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_blocks(spec: BlockDiagSpec, rng: Optional[np.random.Generator] = None,
+                scale: float = 0.02, identity: bool = False,
+                dtype=jnp.float32) -> Array:
+    """Stacked block tensor of shape (k, rows, cols)."""
+    if identity:
+        if spec.rows != spec.cols:
+            raise ValueError("identity init needs square blocks")
+        eye = np.eye(spec.rows)
+        return jnp.asarray(np.broadcast_to(eye, spec.param_shape).copy(), dtype)
+    rng = rng or np.random.default_rng(0)
+    w = rng.normal(0.0, scale, size=spec.param_shape)
+    return jnp.asarray(w, dtype)
+
+
+# ---------------------------------------------------------------------------
+# application (the hot path — also the contract for the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def block_diag_matmul(blocks: Array, x: Array) -> Array:
+    """y = diag(B_1..B_k) x  along the last axis of x.
+
+    blocks: (k, rows, cols); x: (..., k*cols) -> (..., k*rows).
+    Lowered as a batched dot_general — this is the op the `bdmm` Pallas
+    kernel implements for TPU (tokens on the 128-lane axis).
+    """
+    k, rows, cols = blocks.shape
+    lead = x.shape[:-1]
+    xg = x.reshape(lead + (k, cols))
+    yg = jnp.einsum("gij,...gj->...gi", blocks, xg,
+                    preferred_element_type=x.dtype)
+    return yg.reshape(lead + (k * rows,))
+
+
+def gs_apply(layout: GSLayout, L: Array, R: Array, x: Array) -> Array:
+    """y = A x with A = P_L (L P R) P_R, x: (..., in_dim)."""
+    y = apply_perm(x, layout.perm_right)
+    y = block_diag_matmul(R, y)
+    y = apply_perm(y, layout.perm_mid)
+    y = block_diag_matmul(L, y)
+    y = apply_perm(y, layout.perm_left)
+    return y
+
+
+def gs_apply_T(layout: GSLayout, L: Array, R: Array, x: Array) -> Array:
+    """y = A^T x  (transpose application; used for activation-side adapters)."""
+    y = apply_perm(x, layout.perm_left.inverse())
+    y = block_diag_matmul(jnp.swapaxes(L, -1, -2), y)
+    y = apply_perm(y, layout.perm_mid.inverse())
+    y = block_diag_matmul(jnp.swapaxes(R, -1, -2), y)
+    y = apply_perm(y, layout.perm_right.inverse())
+    return y
+
+
+def gs_matmul(layout: GSLayout, L: Array, R: Array, W: Array) -> Array:
+    """A @ W for a matrix W of shape (in_dim, n) — weight-side application.
+
+    Equivalent to applying A to every column of W; we transpose so the
+    block-diagonal matmuls run with n on the lane axis.
+    """
+    return jnp.swapaxes(gs_apply(layout, L, R, jnp.swapaxes(W, -1, -2)), -1, -2)
+
+
+# ---------------------------------------------------------------------------
+# materialization & structure (tests / analysis — small sizes only)
+# ---------------------------------------------------------------------------
+
+def materialize_block_diag(blocks: np.ndarray) -> np.ndarray:
+    k, r, c = blocks.shape
+    out = np.zeros((k * r, k * c), dtype=blocks.dtype)
+    for i in range(k):
+        out[i * r:(i + 1) * r, i * c:(i + 1) * c] = blocks[i]
+    return out
+
+
+def gs_materialize(layout: GSLayout, L, R) -> np.ndarray:
+    Lm = materialize_block_diag(np.asarray(L))
+    Rm = materialize_block_diag(np.asarray(R))
+    P_L = layout.perm_left.matrix(layout.out_dim)
+    P = layout.perm_mid.matrix(layout.inner_dim)
+    P_R = layout.perm_right.matrix(layout.in_dim)
+    return P_L @ Lm @ P @ Rm @ P_R
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1: block-low-rank interpretation of GS(I, P, I)
+# ---------------------------------------------------------------------------
+
+def block_ranks(layout: GSLayout) -> np.ndarray:
+    """rank bound r_{k1,k2} of block (k1,k2) of P_L^T A P_R^T, from P alone.
+
+    With our gather convention (Px)[j] = x[sigma(j)], the L column j pairs
+    with the R row sigma(j); the paper states u_{sigma(i)} v_i^T under the
+    scatter convention (their sigma is our sigma^{-1} — same statement).
+    The paper's division by k_L/k_R is a typo for the block sizes; App. B
+    uses row/column block membership, which is what this computes.
+    """
+    bL, bR = layout.lspec.cols, layout.rspec.rows
+    kL, kR = layout.lspec.num_blocks, layout.rspec.num_blocks
+    sigma = layout.perm_mid.sigma(layout.inner_dim)
+    ranks = np.zeros((kL, kR), dtype=np.int64)
+    for j in range(layout.inner_dim):
+        ranks[j // bL, sigma[j] // bR] += 1
+    return ranks
+
+
+def lowrank_blocks(layout: GSLayout, L, R) -> np.ndarray:
+    """Materialize the middle factor L P R via the Prop. 1 sum-of-outer-products.
+
+    Returns the dense (out_dim, inner... in_dim) matrix built block by block —
+    used in tests to confirm the proposition against gs_materialize.
+    """
+    L = np.asarray(L)
+    R = np.asarray(R)
+    kL, bL1, bL2 = L.shape
+    kR, bR1, bR2 = R.shape
+    sigma = layout.perm_mid.sigma(layout.inner_dim)
+    # u_j: columns of L blocks in consecutive order; v_i: rows of R blocks.
+    # Gather convention: (P R)[j, :] = R[sigma(j), :], so u_j pairs v_{sigma(j)}.
+    out = np.zeros((kL * bL1, kR * bR2), dtype=np.result_type(L, R))
+    for j in range(layout.inner_dim):
+        i = sigma[j]
+        k1, k2 = j // bL2, i // bR1
+        col = L[k1][:, j % bL2]                  # u_j
+        row = R[k2][i % bR1, :]                  # v_{sigma(j)}^T
+        out[k1 * bL1:(k1 + 1) * bL1, k2 * bR2:(k2 + 1) * bR2] += np.outer(col, row)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# higher-order GS  (Definition 5.1)  + Theorem 2 density tools
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GSFactors:
+    """A = P_{m+1} * prod_{i=m..1} (B_i P_i).
+
+    specs[i] / perms[i] correspond to (B_{i+1}, P_{i+1}) in paper indexing,
+    i.e. factors are stored in application order (P_1 first).
+    """
+    specs: Tuple[BlockDiagSpec, ...]
+    perms: Tuple[PermSpec, ...]        # len = m + 1 (last = P_{m+1})
+
+    def __post_init__(self):
+        if len(self.perms) != len(self.specs) + 1:
+            raise ValueError("need m block specs and m+1 permutations")
+        for a, b in zip(self.specs[:-1], self.specs[1:]):
+            if a.out_dim != b.in_dim:
+                raise ValueError("factor dims must chain")
+
+    @property
+    def in_dim(self) -> int:
+        return self.specs[0].in_dim
+
+    @property
+    def out_dim(self) -> int:
+        return self.specs[-1].out_dim
+
+    @property
+    def num_params(self) -> int:
+        return sum(s.num_params for s in self.specs)
+
+
+def gs_order_layout(d: int, block_size: int, m: int) -> GSFactors:
+    """m-factor square GS layout with P_(r, d) shuffles between factors."""
+    if d % block_size:
+        raise ValueError("block must divide d")
+    r = d // block_size
+    spec = BlockDiagSpec(r, block_size, block_size)
+    perms = [PermSpec.identity()]                      # P_1
+    for _ in range(m - 1):
+        perms.append(PermSpec.gs(r))                   # P_2..P_m
+    perms.append(PermSpec.identity())                  # P_{m+1}
+    return GSFactors(specs=(spec,) * m, perms=tuple(perms))
+
+
+def gs_factors_apply(factors: GSFactors, blocks: Sequence[Array], x: Array) -> Array:
+    y = x
+    for i, spec in enumerate(factors.specs):
+        y = apply_perm(y, factors.perms[i])
+        y = block_diag_matmul(blocks[i], y)
+    return apply_perm(y, factors.perms[-1])
+
+
+def gs_factors_materialize(factors: GSFactors, blocks) -> np.ndarray:
+    out = factors.perms[0].matrix(factors.in_dim)
+    for i in range(len(factors.specs)):
+        out = materialize_block_diag(np.asarray(blocks[i])) @ out
+        out = factors.perms[i + 1].matrix(out.shape[0]) @ out
+    return out
+
+
+def min_factors_dense(block_size: int, num_blocks: int) -> int:
+    """Theorem 2:  m = 1 + ceil(log_b r)  (vs 1 + ceil(log2 r) for butterfly)."""
+    if num_blocks <= 1:
+        return 1
+    if block_size <= 1:
+        raise ValueError("b = 1 can never densify")
+    return 1 + math.ceil(math.log(num_blocks, block_size) - 1e-12)
+
+
+def support_pattern(factors: GSFactors) -> np.ndarray:
+    """Boolean reachability pattern of the class (1 where entries CAN be nonzero)."""
+    ones = [np.ones(s.param_shape, dtype=np.float64) for s in factors.specs]
+    pat = gs_factors_materialize(factors, ones)
+    return pat > 0
+
+
+def is_dense_class(factors: GSFactors) -> bool:
+    return bool(np.all(support_pattern(factors)))

@@ -1,0 +1,93 @@
+"""Orthogonality machinery: Cayley parametrization of GS blocks.
+
+OFT / BOFT / GSOFT all enforce orthogonality per block via the Cayley map
+
+    Q = (I + K)(I - K)^{-1},      K = A - A^T  (skew-symmetric)
+
+K = 0  =>  Q = I, which gives the identity initialization all orthogonal
+fine-tuning methods rely on.  Theorem 1 of the paper guarantees block-wise
+Cayley loses no orthogonal GS matrix (up to the measure-zero Cayley domain).
+
+Two evaluation paths:
+  * exact  — batched LU solve in fp32 (default; blocks are tiny, b <= 128)
+  * neumann — truncated series (I-K)^{-1} ~ sum K^t, as in BOFT's codebase;
+    cheaper on MXU (matmuls only, no solve), used in §Perf experiments.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+def skew(a: Array) -> Array:
+    """K = A - A^T over the last two dims (batched)."""
+    return a - jnp.swapaxes(a, -1, -2)
+
+
+def cayley(k_skew: Array, *, neumann_order: Optional[int] = None) -> Array:
+    """Batched Cayley map Q = (I + K)(I - K)^{-1} over the last two dims.
+
+    ``k_skew`` must already be skew-symmetric (use ``skew``).  Solve runs in
+    fp32 regardless of input dtype; the result is cast back.
+    """
+    dtype = k_skew.dtype
+    k32 = k_skew.astype(jnp.float32)
+    eye = jnp.eye(k32.shape[-1], dtype=jnp.float32)
+    if neumann_order is not None:
+        # (I - K)^{-1} ~ I + K + K^2 + ... + K^order  (Horner)
+        inv = eye
+        for _ in range(neumann_order):
+            inv = eye + k32 @ inv
+        q = (eye + k32) @ inv
+    else:
+        # solve(I + K, I - K)^T = (I + K)(I - K)^{-1}   since (I-K)^T = I+K
+        q = jnp.swapaxes(jnp.linalg.solve(eye + k32, eye - k32), -1, -2)
+    return q.astype(dtype)
+
+
+def cayley_inverse(q: Array) -> Array:
+    """K with cayley(K) = Q (for Q without -1 eigenvalue): K = (Q-I)(Q+I)^{-1}.
+
+    Computed as solve((Q+I)^T, (Q-I)^T)^T so it stays a single batched LU.
+    """
+    q32 = q.astype(jnp.float32)
+    eye = jnp.eye(q32.shape[-1], dtype=jnp.float32)
+    k = jnp.linalg.solve(jnp.swapaxes(q32 + eye, -1, -2),
+                         jnp.swapaxes(q32 - eye, -1, -2))
+    return jnp.swapaxes(k, -1, -2).astype(q.dtype)
+
+
+def orthogonal_blocks(params: Array, *, neumann_order: Optional[int] = None) -> Array:
+    """Map free parameters (k, b, b) -> orthogonal blocks via skew + Cayley."""
+    return cayley(skew(params), neumann_order=neumann_order)
+
+
+def orthogonality_error(q: Array) -> Array:
+    """max |Q^T Q - I| over a batch of blocks (diagnostic / tests)."""
+    eye = jnp.eye(q.shape[-1], dtype=q.dtype)
+    gram = jnp.swapaxes(q, -1, -2) @ q
+    return jnp.max(jnp.abs(gram - eye))
+
+
+def project_orthogonal(a: Array) -> Array:
+    """Nearest orthogonal matrix (polar factor) per block, via SVD."""
+    u, _, vt = jnp.linalg.svd(a.astype(jnp.float32), full_matrices=False)
+    return (u @ vt).astype(a.dtype)
+
+
+def random_orthogonal_blocks(rng: np.random.Generator, k: int, b: int,
+                             dtype=jnp.float32) -> Array:
+    """Haar-ish random orthogonal blocks (QR of Gaussian), for tests."""
+    g = rng.normal(size=(k, b, b))
+    qs = []
+    for i in range(k):
+        q, r = np.linalg.qr(g[i])
+        q = q * np.sign(np.diag(r))[None, :]
+        qs.append(q)
+    return jnp.asarray(np.stack(qs), dtype=dtype)

@@ -1,0 +1,196 @@
+"""Permutations used by Group-and-Shuffle (GS) matrices.
+
+Conventions
+-----------
+A permutation is described by an index map ``sigma`` with the *gather*
+semantics of the paper (Definition 5.2):
+
+    y = P x   with   y[i] = x[sigma(i)],        P[i, sigma(i)] = 1.
+
+The canonical GS shuffle ``P_(k, n)`` uses
+
+    sigma(i) = (i mod k) * (n // k) + i // k,
+
+which is exactly ``reshape(k, n/k) -> transpose -> reshape(n)`` applied to the
+vector — on TPU this lowers to a relayout, never a gather, which is why GS
+matrices are hardware-friendly.  The inverse of ``P_(k, n)`` is ``P_(n/k, n)``.
+
+The "paired" variant (paper Appendix F) moves *pairs* of adjacent channels
+together so that MaxMinPermuted activations and ChShuffle cooperate:
+
+    sigma_paired(i) = (floor(i/2) mod k) * (n/k) + 2*floor(i/(2k)) + (i mod 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# sigma construction (static / numpy — these become compile-time constants)
+# ---------------------------------------------------------------------------
+
+def gs_sigma(k: int, n: int) -> np.ndarray:
+    """Index map of ``P_(k, n)`` from Definition 5.2 (gather semantics)."""
+    if n % k != 0:
+        raise ValueError(f"P_(k,n) requires k | n, got k={k}, n={n}")
+    i = np.arange(n)
+    return (i % k) * (n // k) + i // k
+
+
+def paired_sigma(k: int, n: int) -> np.ndarray:
+    """Paired variant of ``P_(k, n)`` (paper App. F): shuffles channel *pairs*."""
+    if n % (2 * k) != 0:
+        raise ValueError(f"paired perm requires 2k | n, got k={k}, n={n}")
+    i = np.arange(n)
+    return ((i // 2) % k) * (n // k) + 2 * (i // (2 * k)) + (i % 2)
+
+
+def inverse_sigma(sigma: np.ndarray) -> np.ndarray:
+    """sigma^{-1}: if y = x[sigma] then x = y[inverse_sigma(sigma)]."""
+    inv = np.empty_like(sigma)
+    inv[sigma] = np.arange(sigma.shape[0])
+    return inv
+
+
+def compose_sigma(s1: np.ndarray, s2: np.ndarray) -> np.ndarray:
+    """sigma of the matrix product ``P_{s1} @ P_{s2}``  (apply s2 first)."""
+    return s2[s1]
+
+
+def perm_matrix(sigma: np.ndarray, dtype=np.float32) -> np.ndarray:
+    """Dense matrix P with P[i, sigma[i]] = 1 (for tests / materialization)."""
+    return np.eye(sigma.shape[0], dtype=dtype)[sigma]
+
+
+def is_permutation(sigma: np.ndarray) -> bool:
+    return bool(np.all(np.sort(sigma) == np.arange(sigma.shape[0])))
+
+
+# ---------------------------------------------------------------------------
+# PermSpec — a jit-friendly symbolic description of a permutation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PermSpec:
+    """Symbolic permutation.
+
+    kind:
+      - "identity":  no-op
+      - "gs":        P_(k, n)       (reshape/transpose fast path)
+      - "gs_inv":    P_(k, n)^{-1}  = P_(n/k, n)
+      - "paired":    paired GS shuffle (gather path; used in conv nets)
+      - "paired_inv"
+      - "index":     arbitrary sigma (gather path); ``table`` holds the array
+    """
+    kind: str
+    k: int = 0
+    table: Optional[tuple] = None  # hashable storage for "index" kind
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def identity() -> "PermSpec":
+        return PermSpec("identity")
+
+    @staticmethod
+    def gs(k: int) -> "PermSpec":
+        return PermSpec("gs", k=k)
+
+    @staticmethod
+    def gs_inv(k: int) -> "PermSpec":
+        return PermSpec("gs_inv", k=k)
+
+    @staticmethod
+    def paired(k: int) -> "PermSpec":
+        return PermSpec("paired", k=k)
+
+    @staticmethod
+    def from_sigma(sigma: np.ndarray) -> "PermSpec":
+        return PermSpec("index", table=tuple(int(v) for v in sigma))
+
+    # -- conversions -------------------------------------------------------
+    def sigma(self, n: int) -> np.ndarray:
+        """Materialize the index map for size-n vectors."""
+        if self.kind == "identity":
+            return np.arange(n)
+        if self.kind == "gs":
+            return gs_sigma(self.k, n)
+        if self.kind == "gs_inv":
+            return inverse_sigma(gs_sigma(self.k, n))
+        if self.kind == "paired":
+            return paired_sigma(self.k, n)
+        if self.kind == "paired_inv":
+            return inverse_sigma(paired_sigma(self.k, n))
+        if self.kind == "index":
+            assert self.table is not None and len(self.table) == n
+            return np.asarray(self.table, dtype=np.int64)
+        raise ValueError(f"unknown perm kind {self.kind}")
+
+    def inverse(self) -> "PermSpec":
+        if self.kind == "identity":
+            return self
+        if self.kind == "gs":
+            return PermSpec("gs_inv", k=self.k)
+        if self.kind == "gs_inv":
+            return PermSpec("gs", k=self.k)
+        if self.kind == "paired":
+            return PermSpec("paired_inv", k=self.k)
+        if self.kind == "paired_inv":
+            return PermSpec("paired", k=self.k)
+        if self.kind == "index":
+            return PermSpec.from_sigma(inverse_sigma(np.asarray(self.table)))
+        raise ValueError(self.kind)
+
+    def matrix(self, n: int, dtype=np.float32) -> np.ndarray:
+        return perm_matrix(self.sigma(n), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# application to arrays (jit-traceable)
+# ---------------------------------------------------------------------------
+
+def _move_last(x: Array, axis: int):
+    axis = axis % x.ndim
+    if axis == x.ndim - 1:
+        return x, None
+    return jnp.moveaxis(x, axis, -1), axis
+
+
+def apply_perm(x: Array, spec: PermSpec, axis: int = -1) -> Array:
+    """Compute ``P x`` along ``axis`` (gather semantics y[i] = x[sigma(i)]).
+
+    The "gs"/"gs_inv" kinds use the reshape/transpose fast path: zero FLOPs,
+    relayout-only on TPU.  Other kinds gather with a static index table.
+    """
+    if spec.kind == "identity":
+        return x
+    x, orig_axis = _move_last(x, axis)
+    n = x.shape[-1]
+    if spec.kind == "gs":
+        m = n // spec.k
+        y = x.reshape(x.shape[:-1] + (spec.k, m))
+        y = jnp.swapaxes(y, -1, -2)
+        y = y.reshape(x.shape[:-1] + (n,))
+    elif spec.kind == "gs_inv":
+        # inverse of reshape(k, m).T is reshape(m, k).T
+        m = n // spec.k
+        y = x.reshape(x.shape[:-1] + (m, spec.k))
+        y = jnp.swapaxes(y, -1, -2)
+        y = y.reshape(x.shape[:-1] + (n,))
+    else:
+        sig = jnp.asarray(spec.sigma(n))
+        y = jnp.take(x, sig, axis=-1)
+    if orig_axis is not None:
+        y = jnp.moveaxis(y, -1, orig_axis)
+    return y
+
+
+def apply_perm_T(x: Array, spec: PermSpec, axis: int = -1) -> Array:
+    """Compute ``P^T x`` (= P^{-1} x for permutations)."""
+    return apply_perm(x, spec.inverse(), axis=axis)

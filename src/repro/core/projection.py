@@ -1,0 +1,74 @@
+"""Algorithm 1 — Frobenius projection onto the GS(P_L, P, P_R) class.
+
+Via Proposition 1, P_L^T A P_R^T is a block matrix whose (k1, k2) block is a
+sum of outer products u_{sigma(i)} v_i^T over a rank budget r_{k1,k2}
+determined by the middle permutation.  The optimal projection truncates the
+SVD of each block (Eckart–Young) and packs the factors back into the L / R
+block-diagonal tensors at positions dictated by sigma.
+
+Used for: (a) initializing GS adapters from a dense target (e.g. distilling a
+full orthogonal fine-tune into GSOFT form), (b) tests of Theorem 1, (c) the
+projected-orthogonalization utilities.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .gs import GSLayout, block_ranks
+from .permutations import inverse_sigma
+
+__all__ = ["project_to_gs", "gs_reconstruction_error"]
+
+
+def project_to_gs(a: np.ndarray, layout: GSLayout) -> Tuple[np.ndarray, np.ndarray]:
+    """Project dense ``a`` (out_dim x in_dim) onto GS(P_L, P, P_R).
+
+    Returns stacked block tensors (L, R) with shapes
+    (k_L, b_L, b_L2) and (k_R, b_R, b_R2) minimizing ||A - P_L L P R P_R||_F.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    if a.shape != (layout.out_dim, layout.in_dim):
+        raise ValueError(f"expected {(layout.out_dim, layout.in_dim)}, got {a.shape}")
+
+    # strip the outer permutations:  B = P_L^T A P_R^T.
+    # With gather semantics P[i, sigma(i)] = 1:
+    #   P_L^T A  permutes rows by inv(sigma_L);  A P_R^T  takes columns [sigma_R].
+    sig_l = layout.perm_left.sigma(layout.out_dim)
+    sig_r = layout.perm_right.sigma(layout.in_dim)
+    b = a[inverse_sigma(sig_l), :][:, sig_r]
+
+    kL, bL1, bL2 = layout.lspec.param_shape
+    kR, bR1, bR2 = layout.rspec.param_shape
+    sigma = layout.perm_mid.sigma(layout.inner_dim)
+
+    L = np.zeros((kL, bL1, bL2), dtype=np.float64)
+    R = np.zeros((kR, bR1, bR2), dtype=np.float64)
+
+    # bucket inner indices j (L column / R' row) by
+    # (k1, k2) = (j // b_L2, sigma(j) // b_R1)  [gather convention]
+    buckets: dict = {}
+    for j in range(layout.inner_dim):
+        key = (j // bL2, sigma[j] // bR1)
+        buckets.setdefault(key, []).append(j)
+
+    for (k1, k2), idxs in buckets.items():
+        blk = b[k1 * bL1:(k1 + 1) * bL1, k2 * bR2:(k2 + 1) * bR2]
+        r = len(idxs)
+        u, s, vt = np.linalg.svd(blk, full_matrices=False)
+        r = min(r, s.shape[0])
+        ssqrt = np.sqrt(s[:r])
+        ucols = u[:, :r] * ssqrt[None, :]          # columns of L_{k1}
+        vrows = vt[:r, :] * ssqrt[:, None]         # rows of R_{k2}
+        for t, j in enumerate(idxs[:r]):
+            L[k1][:, j % bL2] = ucols[:, t]
+            R[k2][sigma[j] % bR1, :] = vrows[t, :]
+        # surplus budget (r_{k1,k2} > matrix rank bound) stays zero-filled.
+    return L, R
+
+
+def gs_reconstruction_error(a: np.ndarray, layout: GSLayout,
+                            L: np.ndarray, R: np.ndarray) -> float:
+    from .gs import gs_materialize
+    return float(np.linalg.norm(np.asarray(a) - gs_materialize(layout, L, R)))

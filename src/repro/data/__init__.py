@@ -1,0 +1,3 @@
+"""Data substrate: deterministic resumable pipeline + synthetic streams."""
+from .pipeline import DataConfig, LMDataSource, ByteCorpus
+from .synthetic import lm_batch

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  bdmm     — block-diagonal (grouped) matmul: the GS "group" primitive
+  gs_fused — fused GSOFT rotation P^T L P R x (one HBM round-trip)
+  ssd      — Mamba2 state-space-dual chunked scan (mamba2/zamba2 archs)
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the jit-friendly
+dispatch used by the model code (use_pallas flag; interpret mode on CPU).
+"""
+from .ops import bdmm, gs_transform, ssd
+from . import ref

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: block-diagonal matmul (the GS "group" primitive).
+
+y[t, g*bo:(g+1)*bo] = blocks[g] @ x[t, g*bi:(g+1)*bi]
+
+TPU mapping (DESIGN §3): paper-scale GS blocks (b in 8..128) are smaller than
+the 128x128 MXU, so putting the *block* dim on the systolic array wastes it.
+Instead we put tokens on the lane axis (token_tile rows per grid step) and
+process ``group_tile`` consecutive blocks per grid step, issuing one
+(token_tile x bi) @ (bi x bo) dot per block — contraction dim bi stays on
+sublanes, tokens saturate lanes.  One HBM read of x / one write of y total.
+
+VMEM per grid step:
+    token_tile * group_tile * (bi + bo) * dtype  +  group_tile * bo * bi * 4
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+Array = jnp.ndarray
+
+
+def _bdmm_kernel(x_ref, w_ref, o_ref, *, group_tile: int, bi: int, bo: int):
+    x = x_ref[...]                       # (tt, group_tile * bi)
+    for g in range(group_tile):          # static unroll
+        xg = x[:, g * bi:(g + 1) * bi]
+        w = w_ref[g]                     # (bo, bi)
+        yg = jax.lax.dot_general(
+            xg, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[:, g * bo:(g + 1) * bo] = yg.astype(o_ref.dtype)
+
+
+def bdmm_pallas(blocks: Array, x: Array, *, token_tile: int = 128,
+                group_tile: int = 0, interpret: bool = False) -> Array:
+    """blocks: (r, bo, bi); x: (T, r*bi) -> (T, r*bo)."""
+    r, bo, bi = blocks.shape
+    t, d = x.shape
+    assert d == r * bi, (blocks.shape, x.shape)
+    if group_tile <= 0:
+        # target >= 128 lanes of weight columns per step, capped at r
+        group_tile = max(1, min(r, 128 // max(bi, 1) or 1))
+    while r % group_tile:
+        group_tile -= 1
+    tt = min(token_tile, t)
+    pad = (-t) % tt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    tp = x.shape[0]
+
+    grid = (tp // tt, r // group_tile)
+    out = pl.pallas_call(
+        functools.partial(_bdmm_kernel, group_tile=group_tile, bi=bi, bo=bo),
+        out_shape=jax.ShapeDtypeStruct((tp, r * bo), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tt, group_tile * bi), lambda ti, gi: (ti, gi)),
+            pl.BlockSpec((group_tile, bo, bi), lambda ti, gi: (gi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tt, group_tile * bo), lambda ti, gi: (ti, gi)),
+        interpret=interpret,
+    )(x, blocks)
+    return out[:t] if pad else out

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: flash attention (online-softmax, causal-block skip).
+
+The roofline analysis (EXPERIMENTS.md §Roofline) shows every attention cell
+is memory-dominant on the XLA fallback path because the (Sq, Sk) score/prob
+tensors are materialized in HBM per KV chunk.  This kernel keeps the
+(blk_q, blk_k) score tile, the running (m, l) statistics and the output
+accumulator in VMEM scratch across the KV grid dimension — HBM traffic drops
+to one read of Q/K/V and one write of O (the flash-attention bound).
+
+Causality is exploited structurally: KV blocks strictly above the diagonal
+are skipped with pl.when (predicated out on TPU), halving causal FLOPs —
+the same win the prefix_loop schedule gets on the XLA path (§Perf iter 3a).
+
+Grid: (heads, Sq/blk_q, Sk/blk_k), KV innermost so scratch carries the
+running statistics for one (head, q-block) row. GQA: callers map/bcast KV
+heads (ops.flash_mha handles (B, S, H, D) + group broadcast).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  blk_q: int, blk_k: int, scale: float, causal: bool,
+                  nk: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * blk_q
+    k_lo = ki * blk_k
+    live = (q_lo + blk_q - 1 >= k_lo) if causal else True
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0]                                    # (blk_q, D)
+        k = k_ref[0]                                    # (blk_k, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (blk_q, blk_k), 0)
+            cols = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (blk_q, blk_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    scale: float = 0.0, blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False) -> Array:
+    """q: (H, Sq, D); k, v: (H, Sk, D) -> (H, Sq, D).
+
+    Sq/Sk are padded to block multiples internally; padded KV rows are
+    masked by construction (padded K rows produce pad-query interactions
+    only in the pad region which is sliced off; for non-causal use callers
+    must pass exact lengths or pre-mask — ops.flash_mha handles this).
+    """
+    h, sq, d = q.shape
+    sk = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(d)
+    bq, bk = min(blk_q, sq), min(blk_k, sk)
+    pq, pk = (-sq) % bq, (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        # pad keys with a large-negative sentinel via masking: pad rows of K
+        # are zeros; mask them through an additive bias on the scores is not
+        # expressible per-block here, so require causal or exact multiples.
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+        if not causal:
+            raise ValueError("non-causal flash needs Sk % blk_k == 0")
+    sqp, skp = q.shape[1], k.shape[1]
+    nk = skp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, blk_q=bq, blk_k=bk, scale=scale,
+                          causal=causal, nk=nk),
+        out_shape=jax.ShapeDtypeStruct((h, sqp, d), q.dtype),
+        grid=(h, sqp // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hi, qi, ki: (hi, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda hi, qi, ki: (hi, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda hi, qi, ki: (hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hi, qi, ki: (hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq] if pq else out

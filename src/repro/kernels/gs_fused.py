@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused GSOFT transform  y = P^T L P R x.
+
+The unfused path costs 4 HBM round-trips of the activation (R-matmul, shuffle,
+L-matmul, unshuffle — XLA usually fuses some but keeps the transpose copies).
+This kernel keeps a (token_tile, d) slab resident in VMEM and performs
+group -> shuffle -> group -> unshuffle entirely on-chip: exactly one HBM read
+of x and one write of y.  The P_(r,d) shuffle is a reshape/swap on VMEM data
+(a Mosaic relayout, no HBM traffic) — the TPU-native realization of the
+paper's "shuffle is free" property.
+
+Constraint: token_tile * d * (2 dtypes) + 2*d*b*4 bytes must fit VMEM
+(~16 MB); ops.py falls back to two bdmm calls for oversized d.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+Array = jnp.ndarray
+
+
+def _gs_fused_kernel(x_ref, l_ref, r_ref, o_ref, *, r: int, b: int):
+    t = x_ref.shape[0]
+    d = r * b
+    x = x_ref[...]                                   # (t, d)
+    f32 = jnp.float32
+
+    # R x  — grouped right-multiplication (tokens on lanes)
+    xg = x.reshape(t, r, b)
+    R = r_ref[...]                                   # (r, b, b)
+    y = jax.lax.dot_general(xg, R, (((2,), (2,)), ((1,), (0,))),
+                            preferred_element_type=f32)   # (r, t, b)
+
+    # P (k = r): flat feature index g*b+i  ->  i*r+g. y is (r, t, b); laying it
+    # out as (t, i, g) IS the shuffled order, so one transpose + regroup does P.
+    y = y.transpose(1, 2, 0)                         # (t, b, r): [t, i, g]
+    L = l_ref[...]                                   # (r, b, b) blocks of L
+    y = y.reshape(t, r, b)                           # regroup for L's blocks
+    z = jax.lax.dot_general(y, L, (((2,), (2,)), ((1,), (0,))),
+                            preferred_element_type=f32)   # (r, t, b)
+    # P^T: inverse shuffle (k = b): (r_groups, b) -> interleave back
+    z = z.transpose(1, 0, 2)                         # (t, r, b)
+    z = z.reshape(t, d).reshape(t, b, r).transpose(0, 2, 1).reshape(t, d)
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+def gs_fused_pallas(L: Array, R: Array, x: Array, *, token_tile: int = 128,
+                    interpret: bool = False) -> Array:
+    """L, R: (r, b, b); x: (T, d=r*b) -> (T, d). y = P^T L P R x."""
+    r, b, _ = L.shape
+    t, d = x.shape
+    assert d == r * b
+    tt = min(token_tile, t)
+    pad = (-t) % tt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    tp = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_gs_fused_kernel, r=r, b=b),
+        out_shape=jax.ShapeDtypeStruct((tp, d), x.dtype),
+        grid=(tp // tt,),
+        in_specs=[
+            pl.BlockSpec((tt, d), lambda ti: (ti, 0)),
+            pl.BlockSpec((r, b, b), lambda ti: (0, 0, 0)),
+            pl.BlockSpec((r, b, b), lambda ti: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tt, d), lambda ti: (ti, 0)),
+        interpret=interpret,
+    )(x, L, R)
+    return out[:t] if pad else out

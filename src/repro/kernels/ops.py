@@ -1,0 +1,96 @@
+"""Dispatch layer for the Pallas kernels.
+
+``use_pallas`` semantics (plumbed from model configs):
+  * False  — pure-jnp reference path (XLA). Always used by launch/dryrun.py:
+             TPU kernels cannot lower on the CPU dry-run backend, and the
+             reference path is semantically identical (tests prove it).
+  * True   — pl.pallas_call; on a non-TPU backend this transparently runs in
+             interpret mode so examples/tests exercise the kernel body on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bdmm import bdmm_pallas
+from .flash_attention import flash_attention
+from .gs_fused import gs_fused_pallas
+from .ssd import ssd_pallas
+
+Array = jnp.ndarray
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bdmm(blocks: Array, x: Array, use_pallas: bool = False) -> Array:
+    """Block-diagonal matmul; supports leading batch dims on x."""
+    if not use_pallas:
+        lead = x.shape[:-1]
+        y = ref.bdmm_ref(blocks, x.reshape(-1, x.shape[-1]))
+        return y.reshape(lead + (y.shape[-1],))
+    lead = x.shape[:-1]
+    y = bdmm_pallas(blocks, x.reshape(-1, x.shape[-1]), interpret=_interpret())
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def gs_transform(L: Array, R: Array, x: Array, use_pallas: bool = False) -> Array:
+    """y = P^T L P R x (GSOFT rotation) over the last dim of x."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_pallas:
+        y = gs_fused_pallas(L, R, x2, interpret=_interpret())
+    else:
+        y = ref.gs_fused_ref(L, R, x2)
+    return y.reshape(lead + (x.shape[-1],))
+
+
+def ssd(x: Array, loga: Array, B: Array, C: Array, chunk: int = 64,
+        use_pallas: bool = False) -> Array:
+    """Mamba2 SSD scan. Accepts (T,H,P) or batched (N,T,H,P) inputs."""
+    if x.ndim == 4:
+        fn = partial(ssd, chunk=chunk, use_pallas=use_pallas)
+        return jax.vmap(fn)(x, loga, B, C)
+    if use_pallas:
+        t = x.shape[0]
+        q = chunk
+        while t % q:
+            q //= 2
+        return ssd_pallas(x, loga, B, C, chunk=max(q, 1),
+                          interpret=_interpret())
+    return ref.ssd_chunked_ref(x, loga, B, C,
+                               chunk=_pick_chunk(x.shape[0], chunk))
+
+
+def _pick_chunk(t: int, chunk: int) -> int:
+    q = min(chunk, t)
+    while t % q:
+        q -= 1
+    return max(q, 1)
+
+
+def flash_mha(q: Array, k: Array, v: Array, *, causal: bool = True,
+              use_pallas: bool = False, blk: int = 128) -> Array:
+    """Multi-head attention over (B, S, H, D) activations with GQA support
+    (kv heads broadcast to query heads). Kernel path keeps scores in VMEM."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qh = jnp.swapaxes(q, 1, 2)          # (B, H, S, D)
+    kkh = jnp.swapaxes(k, 1, 2)
+    vvh = jnp.swapaxes(v, 1, 2)
+    if use_pallas:
+        fn = lambda qq, kk, vv: flash_attention(
+            qq, kk, vv, causal=causal, blk_q=blk, blk_k=blk,
+            interpret=_interpret())
+    else:
+        fn = lambda qq, kk, vv: ref.flash_ref(qq, kk, vv, causal=causal)
+    out = jax.vmap(fn)(qh, kkh, vvh)
+    return jnp.swapaxes(out, 1, 2)

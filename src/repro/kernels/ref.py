@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the semantic definition; kernels/*.py must match these to
+numerical tolerance across the shape/dtype sweeps in tests/test_kernels_*.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def bdmm_ref(blocks: Array, x: Array) -> Array:
+    """Block-diagonal matmul.
+
+    blocks: (r, b_out, b_in);  x: (T, r * b_in)  ->  (T, r * b_out)
+    y[t, g*b_out : (g+1)*b_out] = blocks[g] @ x[t, g*b_in : (g+1)*b_in]
+    """
+    r, b_out, b_in = blocks.shape
+    t = x.shape[0]
+    xg = x.reshape(t, r, b_in)
+    yg = jnp.einsum("gij,tgj->tgi", blocks.astype(jnp.float32),
+                    xg.astype(jnp.float32))
+    return yg.reshape(t, r * b_out).astype(x.dtype)
+
+
+def gs_fused_ref(L: Array, R: Array, x: Array) -> Array:
+    """Fused GSOFT transform  y = P^T L P R x  with P = P_(r, d).
+
+    L, R: (r, b, b); x: (T, d) with d = r*b. Matches
+    core.gs.gs_apply(gsoft_layout(d, b), L, R, x).
+    """
+    r, b, _ = L.shape
+    t, d = x.shape
+    y = bdmm_ref(R, x)                               # R x
+    y = y.reshape(t, r, b).swapaxes(1, 2).reshape(t, d)   # P   (gather k=r)
+    y = bdmm_ref(L, y)                               # L .
+    y = y.reshape(t, b, r).swapaxes(1, 2).reshape(t, d)   # P^T (gather k=b)
+    return y
+
+
+def flash_ref(q: Array, k: Array, v: Array, causal: bool = True,
+              scale: float = 0.0) -> Array:
+    """Plain softmax attention oracle. q: (H, Sq, D); k, v: (H, Sk, D)."""
+    h, sq, d = q.shape
+    sk = k.shape[1]
+    scale = scale or 1.0 / (d ** 0.5)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x: Array, loga: Array, B: Array, C: Array,
+            initial_state: Array | None = None,
+            return_state: bool = False):
+    """Mamba2 SSD (state-space dual) — sequential-scan oracle.
+
+    x:    (T, H, P)   inputs (already multiplied by dt)
+    loga: (T, H)      log decay per step (dt * A, A < 0)
+    B:    (T, H, N)   input projections (already multiplied by dt where
+                      applicable; per-head — groups broadcast upstream)
+    C:    (T, H, N)   output projections
+    state: (H, N, P)
+
+    y_t = C_t^T S_t,   S_t = exp(loga_t) S_{t-1} + B_t x_t^T
+    """
+    T, H, P = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+    if initial_state is None:
+        initial_state = jnp.zeros((H, N, P), f32)
+
+    def step(S, inp):
+        xt, lat, Bt, Ct = inp
+        S = jnp.exp(lat)[:, None, None] * S + Bt[:, :, None] * xt[:, None, :]
+        yt = jnp.einsum("hn,hnp->hp", Ct, S)
+        return S, yt
+
+    S, y = jax.lax.scan(step, initial_state.astype(f32),
+                        (x.astype(f32), loga.astype(f32),
+                         B.astype(f32), C.astype(f32)))
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, S
+    return y
+
+
+def ssd_chunked_ref(x: Array, loga: Array, B: Array, C: Array,
+                    chunk: int = 16) -> Array:
+    """Chunk-parallel SSD formulation (the algorithm the kernel implements).
+
+    Equivalent to ssd_ref; exists to make the chunking math independently
+    testable. All in fp32.
+    """
+    T, H, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0
+    nc = T // chunk
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(nc, chunk, H, P)
+    lac = loga.astype(f32).reshape(nc, chunk, H)
+    Bc = B.astype(f32).reshape(nc, chunk, H, N)
+    Cc = C.astype(f32).reshape(nc, chunk, H, N)
+
+    def per_chunk(S, inp):
+        xq, laq, Bq, Cq = inp          # (Q,H,*)
+        cum = jnp.cumsum(laq, axis=0)  # (Q,H) inclusive
+        total = cum[-1]                # (H,)
+        # intra-chunk: causal decay-weighted attention  (Q,Q,H)
+        rel = cum[:, None, :] - cum[None, :, :]
+        mask = jnp.tril(jnp.ones((xq.shape[0], xq.shape[0]), bool))
+        gamma = jnp.where(mask[:, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("thn,shn->tsh", Cq, Bq) * gamma
+        y_intra = jnp.einsum("tsh,shp->thp", scores, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("thn,hnp->thp", Cq * jnp.exp(cum)[..., None], S)
+        # state update
+        w = jnp.exp(total[None, :] - cum)              # (Q,H)
+        S_new = jnp.exp(total)[:, None, None] * S + \
+            jnp.einsum("qhn,qhp->hnp", Bq * w[..., None], xq)
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((H, N, P), f32)
+    _, y = jax.lax.scan(per_chunk, S0, (xc, lac, Bc, Cc))
+    return y.reshape(T, H, P).astype(x.dtype)

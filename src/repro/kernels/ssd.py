@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD recurrence  S_t = exp(loga_t) S_{t-1} + B_t x_t^T,  y_t = C_t^T S_t
+is evaluated chunk-parallel (Dao & Gu 2024): within a chunk of Q steps the
+output is a causal decay-masked attention (three MXU matmuls); across chunks
+a small (N x P) state carries the recurrence.  This turns an elementwise scan
+(memory-bound on TPU) into MXU work with O(T/Q) sequential steps.
+
+Grid: (batch*heads, T/Q) — the chunk axis is innermost, so the VMEM scratch
+state persists across chunk iterations of one (batch, head) row (TPU grid
+execution is sequential).  All state math in fp32.
+
+This is the compute hot-spot of the mamba2/zamba2 architectures at
+long_500k; the pure-jnp oracle lives in ref.py (ssd_ref / ssd_chunked_ref).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, state, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        state[...] = jnp.zeros_like(state)
+
+    f32 = jnp.float32
+    x = x_ref[0].astype(f32)            # (Q, P)
+    la = la_ref[0].astype(f32)          # (Q,)
+    B = b_ref[0].astype(f32)            # (Q, N)
+    C = c_ref[0].astype(f32)            # (Q, N)
+
+    cum = jnp.cumsum(la)                # inclusive
+    total = cum[-1]
+
+    # intra-chunk: causal decay attention
+    rel = cum[:, None] - cum[None, :]
+    causal = jnp.tril(jnp.ones((q, q), dtype=jnp.bool_))
+    gamma = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=f32) * gamma  # (Q,Q)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=f32)               # (Q,P)
+
+    # inter-chunk: carried state contribution
+    s_in = state[...]
+    y += jax.lax.dot_general(C * jnp.exp(cum)[:, None], s_in,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=f32)
+
+    # state update: S' = exp(total) S + sum_q exp(total - cum_q) B_q x_q^T
+    w = jnp.exp(total - cum)[:, None] * B                             # (Q,N)
+    state[...] = jnp.exp(total) * s_in + jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())), preferred_element_type=f32)   # (N,P)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_pallas(x: Array, loga: Array, B: Array, C: Array, *, chunk: int = 64,
+               interpret: bool = False) -> Array:
+    """x: (T, H, P); loga: (T, H); B, C: (T, H, N)  ->  y: (T, H, P).
+
+    Matches kernels.ref.ssd_ref. T must be a multiple of ``chunk`` (callers
+    pad; decode paths use the O(1) recurrent update instead).
+    """
+    t, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+
+    # (T, H, *) -> (H, T, *): head-major so the grid rows are contiguous
+    xh = jnp.swapaxes(x, 0, 1)
+    lah = jnp.swapaxes(loga, 0, 1)
+    Bh = jnp.swapaxes(B, 0, 1)
+    Ch = jnp.swapaxes(C, 0, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        out_shape=jax.ShapeDtypeStruct((h, t, p), x.dtype),
+        grid=(h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda hi, ci: (hi, ci, 0)),
+            pl.BlockSpec((1, q), lambda hi, ci: (hi, ci)),
+            pl.BlockSpec((1, q, n), lambda hi, ci: (hi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda hi, ci: (hi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda hi, ci: (hi, ci, 0)),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xh, lah, Bh, Ch)
+    return jnp.swapaxes(out, 0, 1)

@@ -1,0 +1,27 @@
+"""Mesh factories. Functions, not module-level constants — importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: 16x16 = 256 chips per pod;
+    multi-pod adds a leading pod axis (2 x 16 x 16 = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(data: int, model: int, pods: int = 1):
+    """Elastic variant: any (pods x data x model) that fits the device count
+    (used by tests and by elastic-restart re-sharding)."""
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
+                             axis_types=_auto(3))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,69 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell —
+weak-type-correct, shardable, zero allocation.  The dry-run lowers
+train_step / serve_step against exactly these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import api
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _i32(shape):
+    return SDS(shape, jnp.int32)
+
+
+def _f(shape, cfg: ModelConfig):
+    return SDS(shape, cfg.act_dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        p = cfg.frontend_tokens
+        st = s - p
+        return {"tokens": _i32((b, st)), "labels": _i32((b, st)),
+                "mask": SDS((b, st), jnp.float32),
+                "patches": _f((b, p, cfg.frontend_dim), cfg)}
+    if cfg.family == "encdec":
+        return {"frames": _f((b, s // 4, cfg.d_model), cfg),
+                "tokens": _i32((b, s)), "labels": _i32((b, s)),
+                "mask": SDS((b, s), jnp.float32)}
+    return {"tokens": _i32((b, s)), "labels": _i32((b, s)),
+            "mask": SDS((b, s), jnp.float32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"tokens": _i32((b, s))}
+    if cfg.family == "vlm":
+        batch = {"tokens": _i32((b, s - cfg.frontend_tokens)),
+                 "patches": _f((b, cfg.frontend_tokens, cfg.frontend_dim), cfg)}
+    if cfg.family == "encdec":
+        batch["frames"] = _f((b, s // 4, cfg.d_model), cfg)
+    state = api.abstract_decode_state(cfg, b, s, enc_len=s // 4)
+    return batch, state
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """One new token against a KV cache / SSM state of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = _i32((b, 1))
+    state = api.abstract_decode_state(cfg, b, s, enc_len=max(s // 4, 8))
+    pos = SDS((), jnp.int32)
+    return tokens, state, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.kind == "train":
+        return {"batch": train_input_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        batch, state = prefill_input_specs(cfg, shape)
+        return {"batch": batch, "state": state}
+    tokens, state, pos = decode_input_specs(cfg, shape)
+    return {"tokens": tokens, "state": state, "pos": pos}

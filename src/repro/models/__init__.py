@@ -1,0 +1,3 @@
+"""Model zoo: decoder-only LMs (dense/MoE), SSM, hybrid, VLM/audio backbones,
+LipConvnet. Use repro.models.api for family-agnostic access."""
+from . import api

@@ -1,0 +1,71 @@
+"""Family-dispatched model API — the single entry point the trainer, server,
+dry-run and tests use.  Everything downstream is family-agnostic."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from . import encdec, transformer
+from .layers import no_shard
+
+Array = jnp.ndarray
+
+
+def _is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.family == "encdec"
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return (encdec.init_encdec if _is_encdec(cfg) else transformer.init_lm)(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def forward(cfg: ModelConfig, params, batch, shard=no_shard):
+    return (encdec.forward if _is_encdec(cfg) else transformer.forward)(
+        cfg, params, batch, shard)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, shard=no_shard):
+    return (encdec.lm_loss if _is_encdec(cfg) else transformer.lm_loss)(
+        cfg, params, batch, shard)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int = 0):
+    if _is_encdec(cfg):
+        return encdec.init_decode_state(cfg, batch, max_len, enc_len)
+    return transformer.init_decode_state(cfg, batch, max_len)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                          enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_len, enc_len))
+
+
+def prefill(cfg: ModelConfig, params, batch, state, shard=no_shard):
+    return (encdec.prefill if _is_encdec(cfg) else transformer.prefill)(
+        cfg, params, batch, state, shard)
+
+
+def decode_step(cfg: ModelConfig, params, tokens, state, pos, shard=no_shard):
+    return (encdec.decode_step if _is_encdec(cfg) else transformer.decode_step)(
+        cfg, params, tokens, state, pos, shard)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    return sum(int(math.prod(l.shape))
+               for l in jax.tree.leaves(abstract_params(cfg)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    if _is_encdec(cfg):
+        return param_count(cfg)
+    return transformer.active_param_count(cfg)

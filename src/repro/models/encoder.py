@@ -1,0 +1,79 @@
+"""Bidirectional encoder classifier (RoBERTa-style) — the paper's GLUE
+fine-tuning setting (Table 1).  Used by benchmarks/table1 and the
+finetune example: a frozen backbone + classification head, adapted with
+GSOFT / OFT / BOFT / LoRA through the same PEFT engine as the LM zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from .attention import attention_block, init_attention
+from .layers import (Shard, apply_mlp, embed_init, init_stacked_mlp, no_shard,
+                     rms_norm, stacked_dense_init)
+
+Array = jnp.ndarray
+
+
+def encoder_config(name="roberta-proxy", num_layers=2, d_model=64,
+                   num_heads=4, d_ff=128, vocab_size=128,
+                   num_classes=2) -> ModelConfig:
+    return ModelConfig(
+        name=name, family="decoder",  # reuses decoder layer params
+        num_layers=num_layers, d_model=d_model, num_heads=num_heads,
+        num_kv_heads=num_heads, head_dim=d_model // num_heads, d_ff=d_ff,
+        vocab_size=vocab_size, mlp_type="gelu", rope_theta=1e4,
+        dtype="f32", param_dtype="f32", remat="none", attn_chunk=64,
+    )
+
+
+def init_encoder_classifier(cfg: ModelConfig, num_classes: int,
+                            key: jax.Array) -> Dict:
+    ks = jax.random.split(key, 6)
+    L = cfg.num_layers
+    return {
+        "embed": {"table": embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                      jnp.float32)},
+        "layers": {
+            "attn_norm": jnp.zeros((L, cfg.d_model)),
+            "attn": init_attention(ks[1], cfg, stacked=L, dtype=jnp.float32),
+            "mlp_norm": jnp.zeros((L, cfg.d_model)),
+            "mlp": init_stacked_mlp(ks[2], L, cfg.d_model, cfg.d_ff,
+                                    cfg.mlp_type, jnp.float32),
+        },
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "head": {"w": stacked_dense_init(ks[3], 1, cfg.d_model,
+                                         num_classes, jnp.float32)[0],
+                 "b": jnp.zeros((num_classes,))},
+    }
+
+
+def encoder_forward(cfg: ModelConfig, params, tokens: Array,
+                    shard: Shard = no_shard) -> Array:
+    h = jnp.take(params["embed"]["table"], tokens, axis=0)
+
+    def body(hc, lp):
+        a, _ = attention_block(lp["attn"],
+                               rms_norm(hc, lp["attn_norm"], cfg.norm_eps),
+                               cfg, causal=False, shard=shard)
+        hc = hc + a
+        m = apply_mlp(lp["mlp"], rms_norm(hc, lp["mlp_norm"], cfg.norm_eps),
+                      cfg.mlp_type, shard)
+        return hc + m, None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    pooled = h[:, 0]                       # CLS-style pooling (RoBERTa)
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def classifier_loss(cfg: ModelConfig, params, batch, shard: Shard = no_shard):
+    logits = encoder_forward(cfg, params, batch["tokens"], shard)
+    onehot = jax.nn.one_hot(batch["labels"], logits.shape[-1])
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,177 @@
+"""Mamba2 (SSD — state-space duality) blocks: train scan + O(1) decode.
+
+Faithful to the Mamba2 block structure (Dao & Gu 2024, arXiv:2405.21060):
+separate z/x/B/C/dt projections (kept unfused so tensor-parallel sharding
+never slices across component boundaries — DESIGN §4), short causal
+depthwise conv over (x, B, C), softplus dt with bias, negative-exponential
+A, SSD scan (kernels/ssd.py with pure-jnp oracle), per-head skip D, gated
+RMSNorm, output projection.
+
+Train/prefill use the chunk-parallel SSD; decode advances the (H, N, P)
+state recurrently per token — this is what makes long_500k an O(1)-per-token
+shape for mamba2/zamba2 (the assignment's sub-quadratic cells).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from .layers import Shard, no_shard, stacked_dense_init
+
+Array = jnp.ndarray
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig, stacked, dtype) -> Dict[str, Array]:
+    """stacked: tuple of leading dims (e.g. (L,) or (nsuper, per_super))."""
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    lead = tuple(stacked)
+    ks = jax.random.split(key, 8)
+
+    def w(k, di_, do_):
+        v = jax.random.normal(k, lead + (di_, do_), jnp.float32)
+        return (v / math.sqrt(di_)).astype(dtype)
+
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2)
+    u = jax.random.uniform(ks[6], lead + (H,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    a0 = jax.random.uniform(ks[7], lead + (H,), jnp.float32, 1.0, 16.0)
+
+    return {
+        "wz": w(ks[0], d, di), "wx": w(ks[1], d, di),
+        "wb": w(ks[2], d, G * N), "wc": w(ks[3], d, G * N),
+        "wdt": w(ks[4], d, H),
+        "conv_w": (jax.random.normal(ks[5], lead + (cfg.ssm_conv, _conv_dim(cfg)),
+                                     jnp.float32) / math.sqrt(cfg.ssm_conv)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros(lead + (_conv_dim(cfg),), dtype),
+        "A_log": jnp.log(a0),
+        "D": jnp.ones(lead + (H,), jnp.float32),
+        "dt_bias": dt_bias,
+        "gate_norm": jnp.zeros(lead + (di,), dtype),
+        "out_proj": {"wo": w(jax.random.fold_in(key, 9), di, d)},
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, width W (static shift-and-sum unroll).
+    x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i:i + s, :] * w[i][None, None, :].astype(x.dtype)
+    return y + b[None, None, :].astype(x.dtype)
+
+
+def _gated_rms_norm(y: Array, z: Array, scale: Array, eps: float) -> Array:
+    dt = y.dtype
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + eps)
+    return (g * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def _project(p, u, cfg: ModelConfig, shard: Shard):
+    """Shared pre-SSD computation: projections + conv + head reshape."""
+    b, s, _ = u.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    z = shard(u @ p["wz"], "act_inner")
+    xin = shard(u @ p["wx"], "act_inner")
+    Bc = u @ p["wb"]
+    Cc = u @ p["wc"]
+    dt = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    return z, xin, Bc, Cc, dt
+
+
+def _heads(cfg, xin, Bc, Cc):
+    b, s = xin.shape[:2]
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    xh = xin.reshape(b, s, H, P)
+    rep = H // G
+    Bh = jnp.repeat(Bc.reshape(b, s, G, N), rep, axis=2)
+    Ch = jnp.repeat(Cc.reshape(b, s, G, N), rep, axis=2)
+    return xh, Bh, Ch
+
+
+def mamba_block(p: Dict[str, Array], u: Array, cfg: ModelConfig,
+                shard: Shard = no_shard) -> Array:
+    """Train/prefill path. u: (B, S, d) (already normed) -> (B, S, d)."""
+    b, s, _ = u.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    z, xin, Bc, Cc, dt = _project(p, u, cfg, shard)
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xin = xbc[..., :di]
+    Bc = xbc[..., di:di + cfg.ssm_groups * N]
+    Cc = xbc[..., di + cfg.ssm_groups * N:]
+    xh, Bh, Ch = _heads(cfg, xin, Bc, Cc)
+
+    loga = (-jnp.exp(p["A_log"].astype(jnp.float32)))[None, None, :] * dt
+    xs = (xh.astype(jnp.float32) * dt[..., None])
+    y = ops.ssd(xs, loga, Bh.astype(jnp.float32), Ch.astype(jnp.float32),
+                chunk=cfg.ssd_chunk, use_pallas=cfg.use_pallas)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = _gated_rms_norm(y, z, p["gate_norm"], cfg.norm_eps)
+    return shard(y @ p["out_proj"]["wo"], "act_d")
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ModelConfig, batch: int, lead=()):
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    return {
+        "conv": jnp.zeros(tuple(lead) + (batch, cfg.ssm_conv - 1,
+                                         _conv_dim(cfg)), cfg.act_dtype),
+        "ssm": jnp.zeros(tuple(lead) + (batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, u: Array, state: Dict[str, Array], cfg: ModelConfig,
+                      shard: Shard = no_shard) -> Tuple[Array, Dict[str, Array]]:
+    """u: (B, 1, d) -> (y (B,1,d), new_state)."""
+    b = u.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xin, Bc, Cc, dt = _project(p, u, cfg, shard)
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)        # (B,1,C)
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)  # (B,W,C)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc_t = jax.nn.silu(conv_out)[:, None, :].astype(u.dtype)
+    new_conv = hist[:, 1:, :]
+
+    xin = xbc_t[..., :di]
+    Bc = xbc_t[..., di:di + cfg.ssm_groups * N]
+    Cc = xbc_t[..., di + cfg.ssm_groups * N:]
+    xh, Bh, Ch = _heads(cfg, xin, Bc, Cc)                 # (B,1,H,*)
+
+    la = (-jnp.exp(p["A_log"].astype(jnp.float32)))[None, :] * dt[:, 0]  # (B,H)
+    S = state["ssm"]
+    xt = (xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None])   # (B,H,P)
+    S = jnp.exp(la)[..., None, None] * S + \
+        Bh[:, 0].astype(jnp.float32)[..., None] * xt[:, :, None, :]
+    yt = jnp.einsum("bhn,bhnp->bhp", Ch[:, 0].astype(jnp.float32), S)
+    yt = yt + p["D"].astype(jnp.float32)[None, :, None] * \
+        xh[:, 0].astype(jnp.float32)
+    y = yt.reshape(b, 1, di).astype(u.dtype)
+    y = _gated_rms_norm(y, z, p["gate_norm"], cfg.norm_eps)
+    y = shard(y @ p["out_proj"]["wo"], "act_d")
+    return y, {"conv": new_conv, "ssm": S}

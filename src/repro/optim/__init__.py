@@ -1,0 +1,7 @@
+"""Optimizers, schedules, gradient compression (built from scratch — the
+container has no optax)."""
+from .adamw import (OptimizerConfig, init, update, clip_by_global_norm,
+                    global_norm)
+from .schedules import constant, warmup_cosine, warmup_linear
+from .compression import (quantize_int8, dequantize_int8, ef_compress,
+                          init_error_buffer, compressed_psum_mean)

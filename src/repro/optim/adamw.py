@@ -1,0 +1,97 @@
+"""AdamW + SGD-momentum, built from scratch (no optax in this container).
+
+Functional: ``init`` returns a state pytree, ``update`` maps
+(grads, state, params) -> (new_params, new_state).  Weight decay is masked
+off 1-D params (norm scales, biases).  Global-norm clipping included.
+The PEFT split means these states exist only for adapter params in
+fine-tuning runs — a few MB even for the 123B config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"              # adamw | sgd
+    learning_rate: float = 1e-3      # peak LR (schedules scale it)
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    momentum: float = 0.9            # sgd
+
+
+def _decay_mask(params: Tree) -> Tree:
+    return jax.tree.map(lambda p: jnp.asarray(1.0 if p.ndim >= 2 else 0.0,
+                                              jnp.float32), params)
+
+
+def global_norm(tree: Tree) -> Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves) + 1e-30)
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> Tuple[Tree, Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def init(cfg: OptimizerConfig, params: Tree) -> Tree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.kind == "adamw":
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "sgd":
+        return {"mu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def update(cfg: OptimizerConfig, grads: Tree, state: Tree, params: Tree,
+           lr_scale: Array = 1.0) -> Tuple[Tree, Tree, dict]:
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cfg.learning_rate * lr_scale
+    mask = _decay_mask(params)
+
+    if cfg.kind == "adamw":
+        mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                          state["nu"], grads)
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v, dm):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            delta = delta + cfg.weight_decay * dm * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu, mask)
+        return new_params, {"mu": mu, "nu": nu, "step": step}, {"grad_norm": gn}
+
+    if cfg.kind == "sgd":
+        mu = jax.tree.map(lambda m, g: cfg.momentum * m + g,
+                          state["mu"], grads)
+
+        def upd(p, m, dm):
+            delta = m + cfg.weight_decay * dm * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, mask)
+        return new_params, {"mu": mu, "step": step}, {"grad_norm": gn}
+    raise ValueError(cfg.kind)

@@ -1,0 +1,90 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+At 1000+ node scale the data-parallel gradient all-reduce over DCI (the
+"pod" axis) is the slowest collective; int8 quantization cuts its bytes 4x
+(vs fp32) / 2x (vs bf16).  Error feedback keeps the *accumulated* quantizer
+error in an fp32 buffer added back before the next quantization — the
+standard fix that restores convergence for biased compressors.
+
+``compressed_psum_mean`` is built on shard_map: quantize locally ->
+all_gather int8 (+ fp32 scales) -> dequantize-mean locally.  The dry-run
+lowers it to measure the collective-byte reduction (§Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads: Tree, err: Tree) -> Tuple[Tree, Tree, Tree]:
+    """Error-feedback quantization: returns (q_tree, scale_tree, new_err)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        new_e = corrected - dequantize_int8(q, s)
+        return (q, s), new_e
+    qs = jax.tree.map(one, grads, err)
+    q_tree = jax.tree.map(lambda t: t[0][0], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    s_tree = jax.tree.map(lambda t: t[0][1], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    e_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return q_tree, s_tree, e_tree
+
+
+def init_error_buffer(grads_like: Tree) -> Tree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compressed_psum_mean(tree: Tree, err: Tree, mesh, axes: Tuple[str, ...]):
+    """Mean-reduce ``tree`` over mesh ``axes`` with int8 compression.
+
+    Returns (reduced_tree fp32, new_error_buffer). Each leaf is assumed
+    replicated over ``axes`` holding the *local* contribution (the standard
+    per-shard gradient before psum).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def inner(t, e):
+        q, s, new_e = ef_compress(t, e)
+
+        def reduce_leaf(qq, ss):
+            allq, alls = qq, ss
+            for a in axes:                               # each gather prepends
+                allq = jax.lax.all_gather(allq, a)       # one mesh-axis dim
+                alls = jax.lax.all_gather(alls, a)
+            lead = len(axes)
+            deq = allq.astype(jnp.float32) * alls.reshape(
+                alls.shape + (1,) * qq.ndim)
+            return jnp.mean(deq, axis=tuple(range(lead)))
+
+        red = jax.tree.map(reduce_leaf, q, s)
+        return red, new_e
+
+    spec = jax.tree.map(lambda _: P(), tree)
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(spec, spec), out_specs=(spec, spec),
+                   check_rep=False)
+    return fn(tree, err)

@@ -1,0 +1,30 @@
+"""LR schedules as pure step -> scale functions (multiply the peak LR)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.asarray(1.0, jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        w = jnp.maximum(warmup_steps, 1)
+        warm = s / w
+        prog = jnp.clip((s - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear(warmup_steps: int, total_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        decay = jnp.clip(1.0 - (s - warmup_steps) /
+                         jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(s < warmup_steps, warm, decay)
+    return fn

@@ -1,0 +1,2 @@
+from .specs import ShardingRules, named, dp_axes, dp_size, tp_size
+from .pipeline import gpipe_forward, pipeline_bubble_fraction

@@ -1,0 +1,249 @@
+"""Partition rules: DP / TP (Megatron) / EP on the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+DP = pod x data (gradient all-reduce only crosses pods); TP = model.
+
+All rules are divisibility-guarded: a dim that doesn't divide its mesh axis
+falls back to replication (e.g. GQA kv-heads < |model| replicate; the
+mamba2-130m 24-head SSD replicates over 'model' — DESIGN §5).  That makes
+every (arch x shape x mesh) cell lowerable by construction; the roofline
+report then shows the cost of whatever replication was forced.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+Tree = Any
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _ax(axes):
+    """Normalize an axis entry: () -> None (replicated)."""
+    if axes is None or (isinstance(axes, tuple) and len(axes) == 0):
+        return None
+    return axes
+
+
+class ShardingRules:
+    """Derives parameter / activation / state PartitionSpecs for one arch."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = tp_size(mesh)
+        self.dp = dp_axes(mesh)
+        c = cfg
+        self.attn_heads_shardable = _div(c.num_heads, self.tp)
+        self.kv_heads_shardable = _div(c.num_kv_heads, self.tp)
+        self.ff_shardable = _div(c.d_ff, self.tp) if c.d_ff else False
+        self.expert_ff_shardable = _div(c.expert_d_ff, self.tp) if c.is_moe else False
+        self.experts_shardable = c.is_moe and _div(c.moe_experts, self.tp)
+        self.vocab_shardable = _div(c.padded_vocab(), self.tp)
+        self.mamba_shardable = (c.ssm_state > 0 and _div(c.ssm_heads, self.tp)
+                                and _div(c.d_inner, self.tp))
+
+    # -- parameters ---------------------------------------------------------
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        tp = "model"
+        none_lead = (None,) * max(len(shape) - 2, 0)
+
+        def guarded(axis_idx_from_end: int, ok: bool) -> P:
+            if not ok:
+                return P()
+            spec = [None] * len(shape)
+            spec[len(shape) - axis_idx_from_end] = tp
+            return P(*spec)
+
+        if re.search(r"embed/table$", path):
+            return P(tp, None) if self.vocab_shardable else P()
+        if re.search(r"lm_head/w$", path):
+            return P(None, tp) if self.vocab_shardable else P()
+        if re.search(r"moe/router$", path):
+            return P()
+        if re.search(r"moe/(wi|wg|wo)$", path):
+            # (L, E, din, dout): EP if possible, else shard the ff dim
+            if self.experts_shardable:
+                return P(None, tp, None, None)
+            if self.expert_ff_shardable:
+                return (P(None, None, None, tp) if path.endswith(("wi", "wg"))
+                        else P(None, None, tp, None))
+            return P()
+        if re.search(r"attn/(wq)$", path) or re.search(r"cross/(wq)$", path):
+            return guarded(1, self.attn_heads_shardable)
+        if re.search(r"(attn|cross)/(wk|wv)$", path):
+            return guarded(1, self.kv_heads_shardable)
+        if re.search(r"(attn|cross)/(bq)$", path):
+            return guarded(1, self.attn_heads_shardable)
+        if re.search(r"(attn|cross)/(bk|bv)$", path):
+            return guarded(1, self.kv_heads_shardable)
+        if re.search(r"(attn|cross)/wo$", path):
+            return guarded(2, self.attn_heads_shardable)
+        if re.search(r"(mlp|shared_attn)/wi$", path) or re.search(r"mlp/(wi|wg)$", path) \
+                or re.search(r"/wg$", path):
+            return guarded(1, self.ff_shardable)
+        if re.search(r"mlp/wo$", path):
+            return guarded(2, self.ff_shardable)
+        if re.search(r"patch_proj/wi$", path):
+            return P()
+        # mamba
+        if re.search(r"/(wz|wx)$", path):
+            return guarded(1, self.mamba_shardable)
+        if re.search(r"/wdt$", path):
+            return guarded(1, self.mamba_shardable and
+                           _div(self.cfg.ssm_heads, self.tp))
+        if re.search(r"/(wb|wc)$", path):
+            return P()
+        if re.search(r"/(A_log|D|dt_bias)$", path):
+            return guarded(1, self.mamba_shardable)
+        if re.search(r"/gate_norm$", path):
+            return guarded(1, self.mamba_shardable)
+        if re.search(r"out_proj/wo$", path):
+            return guarded(2, self.mamba_shardable)
+        if re.search(r"/(conv_w|conv_b)$", path):
+            return P()
+        return P()  # norms, scalars, anything unmatched: replicate
+
+    def params_tree(self, abstract: Tree) -> Tree:
+        from repro.core.peft import path_str
+        import jax.tree_util as jtu
+        return jtu.tree_map_with_path(
+            lambda p, l: self.param_spec(path_str(p), l.shape), abstract)
+
+    # -- adapters (PEFT) ------------------------------------------------------
+    def adapter_spec(self, weight_path: str, shape: Tuple[int, ...]) -> P:
+        # per-expert adapters follow their expert's EP sharding
+        if "/moe/" in weight_path and self.experts_shardable and len(shape) >= 2 \
+                and shape[1] == self.cfg.moe_experts:
+            return P(None, "model", *([None] * (len(shape) - 2)))
+        return P()  # adapters are tiny: replicate
+
+    def adapters_tree(self, adapters_abstract: Tree) -> Tree:
+        out = {}
+        for wpath, tree in adapters_abstract.items():
+            out[wpath] = jax.tree.map(
+                lambda l: self.adapter_spec(wpath, l.shape), tree)
+        return out
+
+    # -- activations ----------------------------------------------------------
+    def act_spec(self, name: str) -> Optional[P]:
+        dp, tp = _ax(self.dp), "model"
+        # Megatron sequence parallelism (§Perf iteration E): the residual
+        # stream shards its SEQUENCE dim over 'model' between blocks, turning
+        # each TP all-reduce into a reduce-scatter + all-gather pair (half
+        # the bytes); norms/elementwise run on 1/tp of the tokens.
+        sp = "model" if self.cfg.seq_parallel else None
+        table = {
+            "act_btd": P(dp, sp, None),
+            "act_d": P(dp, sp, None),
+            "act_ff": P(dp, None, tp) if self.ff_shardable else P(dp, None, None),
+            "act_heads": (P(dp, None, tp, None) if self.attn_heads_shardable
+                          else P(dp, None, None, None)),
+            "act_kv_heads": (P(dp, None, tp, None) if self.kv_heads_shardable
+                             else P(dp, None, None, None)),
+            "act_inner": (P(dp, None, tp) if self.mamba_shardable
+                          else P(dp, None, None)),
+            "logits": (P(dp, None, tp) if self.vocab_shardable
+                       else P(dp, None, None)),
+            "moe_expert_in": (P(tp, dp, None, None) if self.experts_shardable
+                              else P(None, dp, None, None)),
+            "moe_expert_out": (P(tp, dp, None, None) if self.experts_shardable
+                               else P(None, dp, None, None)),
+        }
+        return table.get(name)
+
+    def make_sharder(self, batch_divisible: bool = True):
+        """Activation-constraint callback passed into the models."""
+        mesh = self.mesh
+
+        def shard(x, name):
+            spec = self.act_spec(name)
+            if spec is None:
+                return x
+            if not batch_divisible and len(spec) > 0 and spec[0] == _ax(self.dp):
+                spec = P(None, *spec[1:])
+            # guard: dims must divide their assigned axes
+            sizes = dict(mesh.shape)
+            ok = True
+            for dim, ax in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+                if ax is None:
+                    continue
+                n = int(np.prod([sizes[a] for a in
+                                 ((ax,) if isinstance(ax, str) else ax)]))
+                if dim % n:
+                    ok = False
+            if not ok:
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return shard
+
+    # -- batches / states ------------------------------------------------------
+    def batch_spec(self, abstract: Tree, batch_size: int) -> Tree:
+        ok = _div(batch_size, dp_size(self.mesh))
+        lead = _ax(self.dp if ok else ())
+
+        def one(l):
+            return P(lead, *([None] * (l.ndim - 1))) if l.ndim else P()
+        return jax.tree.map(one, abstract)
+
+    def decode_state_spec(self, abstract: Tree, batch_size: int) -> Tree:
+        """KV caches (L, B, S, K, hd) / mamba states: batch on dp, kv-heads /
+        ssd-heads on model when divisible."""
+        ok_b = _div(batch_size, dp_size(self.mesh))
+        dp = _ax(self.dp if ok_b else ())
+        kv = "model" if self.kv_heads_shardable else None
+        ssm_h = "model" if self.mamba_shardable else None
+
+        from repro.core.peft import path_str
+        import jax.tree_util as jtu
+
+        def one(p, l):
+            path = path_str(p)
+            if "kv/" in path or path.endswith(("/k", "/v")):
+                # (L, B, S, K, hd) or (B, S, K, hd)
+                if l.ndim == 5:
+                    return P(None, dp, None, kv, None)
+                if l.ndim == 4:
+                    return P(dp, None, kv, None)
+            if "mamba/ssm" in path:
+                # (..., B, H, N, P)
+                lead = (None,) * (l.ndim - 4)
+                return P(*lead, dp, ssm_h, None, None)
+            if "mamba/conv" in path:
+                lead = (None,) * (l.ndim - 3)
+                return P(*lead, dp, None, None)
+            if "enc_out" in path:
+                return P(dp, None, None)
+            return P(*([dp] + [None] * (l.ndim - 1))) if l.ndim else P()
+
+        return jtu.tree_map_with_path(one, abstract)
+
+
+def named(mesh: Mesh, spec_tree: Tree) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

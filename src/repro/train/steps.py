@@ -1,0 +1,132 @@
+"""Jitted train / serve step builders (the units the dry-run lowers).
+
+train_step (PEFT mode — the paper's setting):
+    inputs : frozen base params (bf16, no grads), adapter params (fp32,
+             trainable), optimizer state (adapters only), batch
+    body   : scan over microbatches -> mean adapter grads -> AdamW update
+    GSOFT adapters are materialized weight-side inside the step
+    (core.peft.materialize_tree) — zero extra collectives under TP.
+
+serve_step: decode_step over a sharded KV cache / SSM state (cache donated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro import optim
+from repro.config import ModelConfig
+from repro.core import peft as peft_lib
+from repro.models import api
+from repro.models.layers import no_shard
+from repro.sharding.specs import ShardingRules
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    peft: peft_lib.PEFTConfig = peft_lib.PEFTConfig()
+    opt: optim.OptimizerConfig = optim.OptimizerConfig()
+    num_microbatches: int = 1
+    schedule: Optional[Callable] = None
+
+
+def _split_microbatches(batch: Tree, n: int) -> Tree:
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainStepConfig,
+                     mesh: Optional[Mesh] = None,
+                     batch_divisible: bool = True):
+    """Returns train_step(frozen, trainable, opt_state, batch) ->
+    (trainable, opt_state, metrics). PEFT: trainable = adapters; full FT:
+    trainable = params and frozen is an empty dict."""
+    shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
+             if mesh is not None else no_shard)
+    is_peft = tcfg.peft.is_peft
+    n_micro = tcfg.num_microbatches
+    schedule = tcfg.schedule or (lambda s: jnp.asarray(1.0, jnp.float32))
+
+    def loss_fn(trainable, frozen, mb):
+        if is_peft:
+            params = peft_lib.materialize_tree(tcfg.peft, frozen, trainable)
+        else:
+            params = trainable
+        loss, metrics = api.loss_fn(cfg, params, mb, shard)
+        return loss, metrics
+
+    def train_step(frozen: Tree, trainable: Tree, opt_state: Tree,
+                   batch: Tree):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_micro > 1:
+            mbs = _split_microbatches(batch, n_micro)
+
+            def acc_step(carry, mb):
+                gacc, lacc = carry
+                (loss, metrics), g = grad_fn(trainable, frozen, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro, gacc, g)
+                return (gacc, lacc + loss / n_micro), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), trainable)
+            (grads, loss), metrics_all = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+            metrics["loss"] = loss
+        else:
+            (loss, metrics), grads = grad_fn(trainable, frozen, batch)
+
+        lr_scale = schedule(opt_state["step"])
+        new_trainable, new_opt, om = optim.update(
+            tcfg.opt, grads, opt_state, trainable, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return new_trainable, new_opt, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig, tcfg: TrainStepConfig,
+                    mesh: Optional[Mesh] = None):
+    shard = (ShardingRules(cfg, mesh).make_sharder() if mesh is not None
+             else no_shard)
+
+    def eval_step(frozen, trainable, batch):
+        params = (peft_lib.materialize_tree(tcfg.peft, frozen, trainable)
+                  if tcfg.peft.is_peft else trainable)
+        _, metrics = api.loss_fn(cfg, params, batch, shard)
+        return metrics
+    return eval_step
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                      batch_divisible: bool = True):
+    shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
+             if mesh is not None else no_shard)
+
+    def serve_step(params, tokens, state, pos):
+        logits, new_state = api.decode_step(cfg, params, tokens, state, pos,
+                                            shard)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_state
+    return serve_step
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                       batch_divisible: bool = True):
+    shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
+             if mesh is not None else no_shard)
+
+    def prefill_step(params, batch, state):
+        logits, new_state = api.prefill(cfg, params, batch, state, shard)
+        return logits, new_state
+    return prefill_step

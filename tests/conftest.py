@@ -1,0 +1,13 @@
+import os
+
+# Tests run single-device on CPU. The 512-device override belongs ONLY to
+# launch/dryrun.py (which sets XLA_FLAGS before importing jax itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

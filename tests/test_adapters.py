@@ -1,0 +1,237 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adapters as ad
+from repro.core import peft
+from repro.core.orthogonal import orthogonality_error
+
+
+KEY = jax.random.PRNGKey(0)
+METHODS = ["gsoft", "double_gsoft", "oft", "boft", "lora"]
+
+
+def _spec(method, d_in=32, d_out=24, **kw):
+    kw.setdefault("block_size", 8)
+    return ad.AdapterSpec(method=method, d_in=d_in, d_out=d_out, **kw)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_identity_init(method):
+    """At init, W_eff must equal W exactly (paper: Q = I via K = 0)."""
+    spec = _spec(method)
+    params = ad.init_adapter(spec, KEY)
+    W = jax.random.normal(jax.random.PRNGKey(1), (32, 24))
+    W_eff = ad.materialize(spec, params, W)
+    assert np.allclose(np.asarray(W_eff), np.asarray(W), atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["gsoft", "double_gsoft", "oft", "boft"])
+def test_orthogonal_methods_preserve_geometry(method):
+    """Orthogonal W' = Q W preserves singular values & pairwise neuron angles."""
+    spec = _spec(method, d_in=32, d_out=16)
+    params = ad.init_adapter(spec, KEY)
+    params = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(2), p.shape) * 0.3, params)
+    W = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    W_eff = ad.materialize(spec, params, W)
+    s0 = np.linalg.svd(np.asarray(W), compute_uv=False)
+    s1 = np.linalg.svd(np.asarray(W_eff), compute_uv=False)
+    assert np.allclose(s0, s1, atol=1e-4)
+    # gram of columns (pairwise angles of neurons) is preserved for
+    # input-side rotations
+    if method != "double_gsoft":
+        g0 = np.asarray(W).T @ np.asarray(W)
+        g1 = np.asarray(W_eff).T @ np.asarray(W_eff)
+        assert np.allclose(g0, g1, atol=1e-4)
+
+
+def test_double_gsoft_changes_both_sides():
+    spec = _spec("double_gsoft", d_in=32, d_out=16, block_size=4)
+    params = ad.init_adapter(spec, KEY)
+    params = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(5), p.shape) * 0.3, params)
+    W = jax.random.normal(jax.random.PRNGKey(4), (32, 16))
+    W_eff = np.asarray(ad.materialize(spec, params, W))
+    # U and V spaces both rotated: neither W'W^T ~ WW^T nor W'^T W ~ W^T W
+    assert not np.allclose(W_eff @ W_eff.T, np.asarray(W) @ np.asarray(W).T, atol=1e-3)
+    # but singular values still preserved
+    s0 = np.linalg.svd(np.asarray(W), compute_uv=False)
+    s1 = np.linalg.svd(W_eff, compute_uv=False)
+    assert np.allclose(s0, s1, atol=1e-4)
+
+
+def test_lora_matches_reference():
+    spec = _spec("lora", rank=4, alpha=8.0)
+    params = ad.init_adapter(spec, KEY)
+    params["B"] = jax.random.normal(jax.random.PRNGKey(6), params["B"].shape)
+    W = jnp.zeros((32, 24))
+    W_eff = ad.materialize(spec, params, W)
+    ref = (8.0 / 4.0) * np.asarray(params["A"]) @ np.asarray(params["B"])
+    assert np.allclose(np.asarray(W_eff), ref, atol=1e-5)
+
+
+def test_batched_adapters_vmap():
+    """Scan-stacked layers (L, d, n) and MoE (L, E, d, n) weights."""
+    for batch in [(3,), (2, 4)]:
+        spec = _spec("gsoft", batch=batch)
+        params = ad.init_adapter(spec, KEY)
+        assert params["L"].shape[:len(batch)] == batch
+        W = jax.random.normal(jax.random.PRNGKey(7), batch + (32, 24))
+        W_eff = ad.materialize(spec, params, W)
+        assert W_eff.shape == W.shape
+        assert np.allclose(np.asarray(W_eff), np.asarray(W), atol=1e-6)
+
+
+def test_activation_side_equivalence():
+    """x @ (Q W) == (x Q) @ W — the two application modes agree."""
+    spec = _spec("gsoft", d_in=32, d_out=24)
+    params = ad.init_adapter(spec, KEY)
+    params = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(8), p.shape) * 0.2, params)
+    W = jax.random.normal(jax.random.PRNGKey(9), (32, 24))
+    x = jax.random.normal(jax.random.PRNGKey(10), (5, 32))
+    y_weight = x @ ad.materialize(spec, params, W)
+    y_act = ad.apply_activation_side(spec, params, x) @ W
+    assert np.allclose(np.asarray(y_weight), np.asarray(y_act), atol=1e-4)
+
+
+def test_merge_equals_materialize():
+    spec = _spec("gsoft")
+    params = ad.init_adapter(spec, KEY)
+    W = jax.random.normal(jax.random.PRNGKey(11), (32, 24))
+    assert np.allclose(np.asarray(ad.merge(spec, params, W)),
+                       np.asarray(ad.materialize(spec, params, W)))
+
+
+def test_butterfly_sigma_valid():
+    from repro.core.permutations import is_permutation
+    for level in (1, 2, 3):
+        sig = ad.butterfly_sigma(32, 8, level)
+        assert is_permutation(sig)
+    # level 1 is the identity grouping (contiguous blocks)
+    assert np.all(ad.butterfly_sigma(32, 8, 1) == np.arange(32))
+
+
+def test_boft_density_needs_log2_factors():
+    """BOFT needs 1+log2(r) factors; GSOFT needs only 2 (paper §5.2)."""
+    import math
+    from repro.core import gs
+    d, b = 64, 8  # r = 8
+    # materialize BOFT support with random params and count zeros
+    m_dense = 1 + int(math.log2(d // b))
+    for m, expect_dense in [(m_dense, True), (2, False)]:
+        spec = _spec("boft", d_in=d, d_out=d, block_size=b, boft_factors=m)
+        params = ad.init_adapter(spec, KEY)
+        params["K"] = jax.random.normal(jax.random.PRNGKey(12),
+                                        params["K"].shape) * 0.3
+        Q = np.asarray(ad.materialize(spec, params, jnp.eye(d)))
+        assert (np.abs(Q) > 1e-9).all() == expect_dense
+    # GSOFT m=2 is already dense for r <= b
+    spec = _spec("gsoft", d_in=d, d_out=d, block_size=b)
+    params = ad.init_adapter(spec, KEY)
+    params = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(13), p.shape) * 0.3, params)
+    Q = np.asarray(ad.materialize(spec, params, jnp.eye(d)))
+    assert (np.abs(Q) > 1e-9).all()
+
+
+def test_boft_orthogonality():
+    spec = _spec("boft", d_in=32, d_out=32, block_size=8, boft_factors=3)
+    params = ad.init_adapter(spec, KEY)
+    params["K"] = jax.random.normal(jax.random.PRNGKey(14), params["K"].shape) * 0.3
+    Q = ad.materialize(spec, params, jnp.eye(32))
+    assert float(orthogonality_error(Q[None])) < 1e-4
+
+
+def test_neumann_order_close_to_exact():
+    spec = _spec("gsoft")
+    spec_n = dataclasses.replace(spec, neumann_order=8)
+    params = ad.init_adapter(spec, KEY)
+    params = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(15), p.shape) * 0.02, params)
+    W = jax.random.normal(jax.random.PRNGKey(16), (32, 24))
+    exact = np.asarray(ad.materialize(spec, params, W))
+    approx = np.asarray(ad.materialize(spec_n, params, W))
+    assert np.abs(exact - approx).max() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# PEFT engine over trees
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    k = jax.random.PRNGKey(17)
+    return {
+        "embed": {"table": jax.random.normal(k, (50, 16))},
+        "layers": {
+            "attn": {"wq": jax.random.normal(k, (2, 16, 16)),
+                     "wo": jax.random.normal(k, (2, 16, 16))},
+            "mlp": {"wi": jax.random.normal(k, (2, 16, 32)),
+                    "wo": jax.random.normal(k, (2, 32, 16)),
+                    "norm": jnp.ones((2, 16))},
+        },
+    }
+
+
+def test_peft_target_selection():
+    cfg = peft.PEFTConfig(method="gsoft", block_size=4)
+    params = _toy_params()
+    specs = peft.adapted_paths(cfg, params)
+    assert set(specs) == {"layers/attn/wq", "layers/attn/wo",
+                          "layers/mlp/wi", "layers/mlp/wo"}
+    assert specs["layers/mlp/wi"].batch == (2,)
+    assert specs["layers/mlp/wi"].d_in == 16 and specs["layers/mlp/wi"].d_out == 32
+
+
+def test_peft_materialize_identity_and_grads():
+    cfg = peft.PEFTConfig(method="gsoft", block_size=4)
+    params = _toy_params()
+    adapters = peft.init_peft(cfg, params, KEY)
+    eff = peft.materialize_tree(cfg, params, adapters)
+    for p, v in peft.flatten_paths(eff).items():
+        assert np.allclose(np.asarray(v),
+                           np.asarray(peft.flatten_paths(params)[p]), atol=1e-6)
+
+    # gradient flows to adapters through materialize. NB: a sum-of-squares
+    # loss is *invariant* under orthogonal Q (that's the point of the method)
+    # so probe with a linear functional instead.
+    probe = jax.random.normal(jax.random.PRNGKey(99), (2, 16, 16))
+
+    def loss(adp):
+        e = peft.materialize_tree(cfg, params, adp)
+        return jnp.sum(e["layers"]["attn"]["wq"] * probe)
+
+    g = jax.grad(loss)(adapters)
+    gnorm = sum(float(jnp.abs(v).sum()) for v in jax.tree.leaves(g))
+    assert gnorm > 0
+
+
+def test_peft_param_budget_ratio():
+    """Adapters must be a tiny fraction of the base model."""
+    cfg = peft.PEFTConfig(method="gsoft", block_size=4)
+    params = _toy_params()
+    adapters = peft.init_peft(cfg, params, KEY)
+    assert peft.count_params(adapters) < 0.6 * peft.count_params(params)
+
+
+def test_paper_table1_param_counts():
+    """RoBERTa-base GLUE adapter budgets (paper Table 1): GSOFT_b=8 and
+    BOFT_m=2,b=8 both cost 2*d*b per adapted weight -> identical budgets;
+    LoRA_r=8 costs r*(d_in+d_out)."""
+    d, dff, L = 768, 3072, 12
+    per_layer_gsoft = 4 * (2 * d * 8) + (2 * d * 8) + (2 * dff * 8)
+    total_gsoft = L * per_layer_gsoft
+    per_layer_lora = 4 * 8 * (d + d) + 8 * (d + dff) + 8 * (dff + d)
+    total_lora = L * per_layer_lora
+    assert total_gsoft == total_lora == 1327104  # ~1.33M, paper reports 1.42M
+    # (paper counts include classifier-head adapters; ratio GSOFT == BOFT m=2
+    # == LoRA r=8 is the claim being validated)
+
+    cfg = peft.PEFTConfig(method="gsoft", block_size=8)
+    W = {"attn": {"wq": jnp.zeros((d, d))}}
+    adapters = peft.init_peft(cfg, W, KEY)
+    assert peft.count_params(adapters) == 2 * d * 8

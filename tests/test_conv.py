@@ -1,0 +1,177 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv as c
+from repro.models.lipconvnet import (LipConvnetConfig, apply_lipconvnet,
+                                     count_conv_params, init_lipconvnet,
+                                     lipconvnet_loss)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_skew_kernel_inner_product(groups):
+    """<L*X, Y> = -<X, L*Y>: the induced conv matrix is skew-symmetric."""
+    ch = 8
+    m = jax.random.normal(KEY, (3, 3, ch // groups, ch)) * 0.3
+    k = c.skew_kernel(m, groups)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 6, ch))
+    y = jax.random.normal(jax.random.PRNGKey(2), (2, 6, 6, ch))
+    lx = c.conv2d(x, k, groups)
+    ly = c.conv2d(y, k, groups)
+    assert np.allclose(float(jnp.vdot(lx, y)), -float(jnp.vdot(x, ly)), atol=1e-3)
+
+
+def test_conv_exponential_is_isometry():
+    """exp of skew operator is orthogonal: linear map preserving norms."""
+    ch = 4
+    m = jax.random.normal(KEY, (3, 3, ch, ch)) * 0.05
+    k = c.skew_kernel(m, 1)
+    f = lambda x: c.conv_exponential(x, k, 1, terms=14)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 5, 5, ch))
+    y = jax.random.normal(jax.random.PRNGKey(4), (1, 5, 5, ch))
+    # conv_exponential is linear in x, so isometry <=> norm preservation
+    nx = float(jnp.linalg.norm(f(x) - f(y)))
+    assert np.isclose(nx, float(jnp.linalg.norm(x - y)), rtol=1e-4)
+
+
+def test_conv_exponential_jacobian_orthogonal():
+    ch, s = 2, 4
+    m = jax.random.normal(KEY, (3, 3, ch, ch)) * 0.05
+    k = c.skew_kernel(m, 1)
+    f = lambda v: c.conv_exponential(v.reshape(1, s, s, ch), k, 1, 14).reshape(-1)
+    J = jax.jacfwd(f)(jnp.zeros(s * s * ch))
+    assert np.allclose(np.asarray(J.T @ J), np.eye(s * s * ch), atol=1e-4)
+
+
+def test_grouped_conv_exp_independent_groups():
+    """With g groups, channels of group 0 never influence group 1."""
+    ch, g = 8, 2
+    m = jax.random.normal(KEY, (3, 3, ch // g, ch)) * 0.3
+    k = c.skew_kernel(m, g)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 5, 5, ch))
+    x2 = x.at[..., : ch // g].add(1.0)        # perturb only group 0
+    y, y2 = (c.conv_exponential(v, k, g, 6) for v in (x, x2))
+    assert np.allclose(np.asarray(y[..., ch // g:]),
+                       np.asarray(y2[..., ch // g:]), atol=1e-5)
+    assert not np.allclose(np.asarray(y[..., : ch // g]),
+                           np.asarray(y2[..., : ch // g]), atol=1e-3)
+
+
+def test_maxmin_permuted_definition():
+    x = jnp.asarray([[3.0, 1.0, -2.0, 5.0]])
+    got = np.asarray(c.maxmin_permuted(x))
+    assert np.allclose(got, [[3.0, 1.0, 5.0, -2.0]])
+
+
+def test_maxmin_variants_are_1_lipschitz():
+    x = jax.random.normal(KEY, (128, 16))
+    y = x + jax.random.normal(jax.random.PRNGKey(6), (128, 16)) * 0.1
+    for fn in (c.maxmin, c.maxmin_permuted):
+        dx = np.linalg.norm(np.asarray(fn(x) - fn(y)), axis=-1)
+        dy = np.linalg.norm(np.asarray(x - y), axis=-1)
+        assert np.all(dx <= dy + 1e-5)
+        # gradient-norm preserving (a.e.): jvp preserves norms
+        v = jax.random.normal(jax.random.PRNGKey(7), x.shape)
+        _, jv = jax.jvp(fn, (x,), (v,))
+        assert np.allclose(float(jnp.linalg.norm(jv)),
+                           float(jnp.linalg.norm(v)), rtol=1e-5)
+
+
+def test_gs_soc_layer_isometry():
+    for groups in [(4, 0), (4, 1), (4, 2), (4, 4)]:
+        spec = c.GSSOCSpec(channels=8, groups1=groups[0], groups2=groups[1],
+                           terms=12)
+        params = init_gs_soc(spec, KEY)
+        f = lambda x: c.gs_soc_layer(spec, params, x)
+        x = jax.random.normal(jax.random.PRNGKey(8), (1, 6, 6, 8))
+        y = jax.random.normal(jax.random.PRNGKey(9), (1, 6, 6, 8))
+        assert np.isclose(float(jnp.linalg.norm(f(x) - f(y))),
+                          float(jnp.linalg.norm(x - y)), rtol=1e-3)
+
+
+def init_gs_soc(spec, key):
+    from repro.core.conv import init_gs_soc as _init
+    return _init(spec, key)
+
+
+def test_gs_soc_param_savings():
+    """Table 3: GS-SOC (4,-) uses ~4x fewer conv params than SOC."""
+    soc = c.soc_layer_spec(64).num_params
+    gs4 = c.GSSOCSpec(channels=64, groups1=4, groups2=0).num_params
+    assert soc == 9 * 64 * 64
+    assert gs4 == 9 * 64 * 16
+    assert soc / gs4 == 4.0
+    # (4,1): adds a 1x1 ungrouped conv exp
+    gs41 = c.GSSOCSpec(channels=64, groups1=4, groups2=1).num_params
+    assert gs41 == 9 * 64 * 16 + 64 * 64
+
+
+def test_space_to_depth_orthogonal():
+    x = jax.random.normal(KEY, (2, 8, 8, 3))
+    y = c.space_to_depth(x, 2)
+    assert y.shape == (2, 4, 4, 12)
+    assert np.isclose(float(jnp.linalg.norm(y)), float(jnp.linalg.norm(x)))
+
+
+def test_certified_radius():
+    logits = jnp.asarray([[2.0, 0.5, 0.1]])
+    r = float(c.certified_radius(logits)[0])
+    assert np.isclose(r, 1.5 / np.sqrt(2))
+
+
+# ---------------------------------------------------------------------------
+# LipConvnet end-to-end
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(**kw):
+    kw.setdefault("depth", 5)
+    kw.setdefault("base_width", 4)
+    kw.setdefault("num_classes", 10)
+    kw.setdefault("image_size", 32)
+    kw.setdefault("groups", (2, 0))
+    kw.setdefault("terms", 4)
+    return LipConvnetConfig(**kw)
+
+
+def test_lipconvnet_forward():
+    cfg = _tiny_cfg()
+    params = init_lipconvnet(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 32, 32, 3))
+    logits = apply_lipconvnet(cfg, params, x)
+    assert logits.shape == (2, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_lipconvnet_is_lipschitz():
+    cfg = _tiny_cfg(terms=10)
+    params = init_lipconvnet(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 32, 32, 3))
+    d = jax.random.normal(jax.random.PRNGKey(12), x.shape)
+    d = d / jnp.linalg.norm(d) * 0.1
+    l0 = apply_lipconvnet(cfg, params, x)
+    l1 = apply_lipconvnet(cfg, params, x + d)
+    assert float(jnp.linalg.norm(l1 - l0)) <= 0.1 * 1.05
+
+
+def test_lipconvnet_loss_and_grads():
+    cfg = _tiny_cfg()
+    params = init_lipconvnet(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(13), (4, 32, 32, 3))
+    y = jnp.asarray([0, 1, 2, 3])
+    (loss, metrics), g = jax.value_and_grad(
+        lambda p: lipconvnet_loss(cfg, p, x, y), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.abs(v).sum()) for v in jax.tree.leaves(g))
+    assert gn > 0
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+
+
+def test_soc_vs_gs_conv_param_counts_full_net():
+    soc_cfg = _tiny_cfg(conv_layer="soc", depth=15)
+    gs_cfg = _tiny_cfg(conv_layer="gs", depth=15, groups=(4, 0))
+    n_soc = count_conv_params(soc_cfg)
+    n_gs = count_conv_params(gs_cfg)
+    assert n_soc / n_gs > 3.0   # paper: 24.1M vs 6.81M (~3.5x)

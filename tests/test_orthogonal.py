@@ -1,0 +1,96 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gs, orthogonal as orth
+from repro.core.permutations import PermSpec
+
+
+def test_skew():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(3, 5, 5)), jnp.float32)
+    k = orth.skew(a)
+    assert np.allclose(np.asarray(k), -np.asarray(k).transpose(0, 2, 1))
+
+
+def test_cayley_orthogonal():
+    rng = np.random.default_rng(1)
+    k = orth.skew(jnp.asarray(rng.normal(size=(8, 16, 16)) * 0.5, jnp.float32))
+    q = orth.cayley(k)
+    assert float(orth.orthogonality_error(q)) < 1e-5
+
+
+def test_cayley_identity_init():
+    q = orth.cayley(jnp.zeros((4, 8, 8)))
+    assert np.allclose(np.asarray(q), np.eye(8)[None], atol=1e-7)
+
+
+def test_cayley_inverse_roundtrip():
+    rng = np.random.default_rng(2)
+    k0 = orth.skew(jnp.asarray(rng.normal(size=(2, 6, 6)) * 0.3, jnp.float32))
+    q = orth.cayley(k0)
+    k1 = orth.cayley_inverse(q)
+    assert np.allclose(np.asarray(k0), np.asarray(k1), atol=1e-4)
+    q2 = orth.cayley(k1)
+    assert np.allclose(np.asarray(q), np.asarray(q2), atol=1e-5)
+
+
+def test_neumann_converges_with_order():
+    rng = np.random.default_rng(3)
+    # ||K|| < 1 so the series converges
+    k = orth.skew(jnp.asarray(rng.normal(size=(4, 8, 8)) * 0.02, jnp.float32))
+    exact = np.asarray(orth.cayley(k))
+    errs = []
+    for order in (1, 3, 5, 8):
+        approx = np.asarray(orth.cayley(k, neumann_order=order))
+        errs.append(np.abs(approx - exact).max())
+    assert errs[-1] < errs[0]
+    assert errs[-1] < 1e-5
+
+
+def test_orthogonal_gs_matrix_is_orthogonal():
+    """Cayley blocks in L, R  =>  full GS matrix orthogonal (paper §4)."""
+    rng = np.random.default_rng(4)
+    layout = gs.gsoft_layout(32, 8)
+    L = orth.orthogonal_blocks(jnp.asarray(rng.normal(size=layout.lspec.param_shape), jnp.float32))
+    R = orth.orthogonal_blocks(jnp.asarray(rng.normal(size=layout.rspec.param_shape), jnp.float32))
+    A = gs.gs_materialize(layout, L, R)
+    assert np.allclose(A.T @ A, np.eye(32), atol=1e-5)
+    assert np.allclose(A @ A.T, np.eye(32), atol=1e-5)
+
+
+def test_theorem1_block_orthogonal_representation():
+    """Theorem 1: any orthogonal GS matrix admits a representation with
+    orthogonal blocks — verified constructively via QR re-factorization of
+    the block-skeleton decomposition."""
+    rng = np.random.default_rng(5)
+    layout = gs.gsoft_layout(24, 6)
+    L = orth.random_orthogonal_blocks(rng, *layout.lspec.param_shape[:2])
+    R = orth.random_orthogonal_blocks(rng, *layout.rspec.param_shape[:2])
+    A = gs.gs_materialize(layout, L, R)
+    # A orthogonal by construction; project back onto the class (Alg. 1)
+    from repro.core.projection import project_to_gs
+    L2, R2 = project_to_gs(A, layout)
+    A2 = gs.gs_materialize(layout, L2, R2)
+    assert np.allclose(A, A2, atol=1e-8)         # class membership: exact
+    # Theorem 1: the recovered blocks can be made orthogonal; verify that the
+    # projected factors have orthogonal row/col spaces up to diagonal scaling:
+    # normalize each recovered L block column-wise and check Q^T Q = I.
+    for blk in np.asarray(L2):
+        g = blk.T @ blk
+        d = np.sqrt(np.diag(g))
+        gn = g / np.outer(d, d)
+        assert np.allclose(gn, np.eye(blk.shape[1]), atol=1e-6)
+
+
+def test_project_orthogonal_polar():
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(size=(3, 7, 7)), jnp.float32)
+    q = orth.project_orthogonal(a)
+    assert float(orth.orthogonality_error(q)) < 1e-4
+
+
+def test_random_orthogonal_blocks():
+    rng = np.random.default_rng(7)
+    q = orth.random_orthogonal_blocks(rng, 4, 5)
+    assert float(orth.orthogonality_error(q)) < 1e-5

@@ -1,0 +1,116 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import permutations as perm
+
+
+def divisor_pairs():
+    """Strategy producing (k, n) with k | n, small."""
+    return st.integers(1, 8).flatmap(
+        lambda k: st.integers(1, 8).map(lambda m: (k, k * m)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(divisor_pairs())
+def test_gs_sigma_is_permutation(kn):
+    k, n = kn
+    assert perm.is_permutation(perm.gs_sigma(k, n))
+
+
+@settings(max_examples=40, deadline=None)
+@given(divisor_pairs())
+def test_inverse_sigma(kn):
+    k, n = kn
+    s = perm.gs_sigma(k, n)
+    inv = perm.inverse_sigma(s)
+    assert np.all(s[inv] == np.arange(n))
+    assert np.all(inv[s] == np.arange(n))
+    # paper fact: inverse of P_(k,n) is P_(n/k, n)
+    assert np.all(inv == perm.gs_sigma(n // k, n))
+
+
+def test_definition_example_figure3():
+    # P_(3,12) from Figure 3: reshape 3x4, transpose, flatten.
+    s = perm.gs_sigma(3, 12)
+    x = np.arange(12)
+    y = x[s]
+    expected = np.arange(12).reshape(3, 4).T.reshape(-1)
+    assert np.all(y == expected)
+
+
+@settings(max_examples=40, deadline=None)
+@given(divisor_pairs())
+def test_reshape_fastpath_matches_gather(kn):
+    k, n = kn
+    x = np.random.default_rng(0).normal(size=(2, n)).astype(np.float32)
+    spec = perm.PermSpec.gs(k)
+    fast = np.asarray(perm.apply_perm(jnp.asarray(x), spec))
+    sig = spec.sigma(n)
+    assert np.allclose(fast, x[:, sig])
+    # and the inverse fast path
+    back = np.asarray(perm.apply_perm(jnp.asarray(fast), spec.inverse()))
+    assert np.allclose(back, x)
+
+
+def test_perm_matrix_semantics():
+    s = perm.gs_sigma(4, 12)
+    P = perm.perm_matrix(s)
+    x = np.random.default_rng(1).normal(size=12)
+    assert np.allclose(P @ x, x[s])
+    # P^T is the inverse
+    assert np.allclose(P.T @ (P @ x), x)
+
+
+def test_apply_perm_T():
+    s = perm.gs_sigma(4, 12)
+    spec = perm.PermSpec.gs(4)
+    P = perm.perm_matrix(s)
+    x = np.random.default_rng(1).normal(size=12).astype(np.float32)
+    y = np.asarray(perm.apply_perm_T(jnp.asarray(x), spec))
+    assert np.allclose(y, P.T @ x, atol=1e-6)
+
+
+def test_paired_sigma_keeps_pairs_together():
+    k, n = 4, 32
+    s = perm.paired_sigma(k, n)
+    assert perm.is_permutation(s)
+    # channels (2i, 2i+1) must land adjacently in the same pair slot
+    for i in range(0, n, 2):
+        assert s[i + 1] == s[i] + 1
+        assert s[i] % 2 == 0
+
+
+def test_paired_sigma_mixes_groups():
+    # after pairing, pair j goes to (j mod k)-th group — perfect pair shuffle
+    k, n = 4, 32
+    s = perm.paired_sigma(k, n)
+    group = n // k
+    dest_groups = set()
+    # pairs that land in output group 0 must come from k distinct input groups
+    src = [s[i] // group for i in range(0, group, 2)]
+    assert len(set(src)) == min(k, group // 2)
+
+
+def test_compose_sigma():
+    s1 = perm.gs_sigma(3, 12)
+    s2 = perm.gs_sigma(4, 12)
+    P1, P2 = perm.perm_matrix(s1), perm.perm_matrix(s2)
+    sc = perm.compose_sigma(s1, s2)
+    assert np.allclose(perm.perm_matrix(sc), P1 @ P2)
+
+
+def test_apply_perm_axis_argument():
+    x = np.random.default_rng(2).normal(size=(6, 12, 3)).astype(np.float32)
+    spec = perm.PermSpec.gs(3)
+    y = np.asarray(perm.apply_perm(jnp.asarray(x), spec, axis=1))
+    sig = spec.sigma(12)
+    assert np.allclose(y, x[:, sig, :])
+
+
+def test_invalid_sizes_raise():
+    with pytest.raises(ValueError):
+        perm.gs_sigma(5, 12)
+    with pytest.raises(ValueError):
+        perm.paired_sigma(5, 12)  # needs 2k | n

@@ -1,0 +1,19 @@
+"""Drives tests/pipeline_runner.py (needs its own XLA device count)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_gpipe_schedule():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "pipeline_runner.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    sys.stdout.write(proc.stdout[-2000:])
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0
+    assert "gpipe matches sequential: True" in proc.stdout

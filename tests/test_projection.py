@@ -1,0 +1,90 @@
+import numpy as np
+import pytest
+
+from repro.core import gs
+from repro.core.permutations import PermSpec
+from repro.core.projection import project_to_gs, gs_reconstruction_error
+
+
+def _gsoft_like(d=24, b=6):
+    return gs.gsoft_layout(d, b)
+
+
+def test_exact_recovery_for_class_members():
+    rng = np.random.default_rng(0)
+    layout = _gsoft_like()
+    L0 = rng.normal(size=layout.lspec.param_shape)
+    R0 = rng.normal(size=layout.rspec.param_shape)
+    A = gs.gs_materialize(layout, L0, R0)
+    L, R = project_to_gs(A, layout)
+    assert gs_reconstruction_error(A, layout, L, R) < 1e-8
+
+
+def test_idempotence():
+    rng = np.random.default_rng(1)
+    layout = _gsoft_like()
+    A = rng.normal(size=(layout.out_dim, layout.in_dim))
+    L1, R1 = project_to_gs(A, layout)
+    A1 = gs.gs_materialize(layout, L1, R1)
+    L2, R2 = project_to_gs(A1, layout)
+    A2 = gs.gs_materialize(layout, L2, R2)
+    assert np.allclose(A1, A2, atol=1e-8)
+
+
+def test_projection_beats_random_candidates():
+    """Eckart–Young optimality: the projection error is <= any random GS
+    candidate with the same layout."""
+    rng = np.random.default_rng(2)
+    layout = _gsoft_like(16, 4)
+    A = rng.normal(size=(16, 16))
+    L, R = project_to_gs(A, layout)
+    err_opt = gs_reconstruction_error(A, layout, L, R)
+    for _ in range(10):
+        Lr = rng.normal(size=layout.lspec.param_shape)
+        Rr = rng.normal(size=layout.rspec.param_shape)
+        err_rand = gs_reconstruction_error(A, layout, Lr, Rr)
+        assert err_opt <= err_rand + 1e-9
+
+
+def test_projection_with_outer_permutations():
+    """Stripping P_L / P_R must be consistent with gs_materialize."""
+    rng = np.random.default_rng(3)
+    d, b = 24, 6
+    r = d // b
+    spec = gs.BlockDiagSpec(r, b, b)
+    layout = gs.GSLayout(
+        lspec=spec, rspec=spec,
+        perm_left=PermSpec.from_sigma(rng.permutation(d)),
+        perm_mid=PermSpec.gs(r),
+        perm_right=PermSpec.from_sigma(rng.permutation(d)),
+    )
+    L0 = rng.normal(size=spec.param_shape)
+    R0 = rng.normal(size=spec.param_shape)
+    A = gs.gs_materialize(layout, L0, R0)
+    L, R = project_to_gs(A, layout)
+    assert gs_reconstruction_error(A, layout, L, R) < 1e-8
+
+
+def test_projection_rectangular_blocks():
+    rng = np.random.default_rng(4)
+    layout = gs.GSLayout(
+        lspec=gs.BlockDiagSpec(2, 3, 6),
+        rspec=gs.BlockDiagSpec(3, 4, 2),
+        perm_left=PermSpec.identity(),
+        perm_mid=PermSpec.gs(3),
+        perm_right=PermSpec.identity(),
+    )
+    A = rng.normal(size=(layout.out_dim, layout.in_dim))
+    L, R = project_to_gs(A, layout)
+    assert L.shape == layout.lspec.param_shape
+    assert R.shape == layout.rspec.param_shape
+    # projecting its own reconstruction is exact (class membership)
+    A1 = gs.gs_materialize(layout, L, R)
+    L2, R2 = project_to_gs(A1, layout)
+    assert gs_reconstruction_error(A1, layout, L2, R2) < 1e-8
+
+
+def test_shape_mismatch_raises():
+    layout = _gsoft_like()
+    with pytest.raises(ValueError):
+        project_to_gs(np.zeros((3, 3)), layout)

@@ -1,0 +1,109 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adapters as ad
+from repro.core import gs
+from repro.core.orthogonal import cayley, orthogonality_error, skew
+from repro.models.layers import cross_entropy
+from repro.optim import dequantize_int8, quantize_int8
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 10 ** 6))
+def test_orthogonal_gs_always_orthogonal(b, r, seed):
+    """Cayley blocks => orthogonal GS matrix, for every (b, r)."""
+    d = b * r
+    rng = np.random.default_rng(seed)
+    lay = gs.gsoft_layout(d, b)
+    L = cayley(skew(jnp.asarray(rng.normal(size=lay.lspec.param_shape),
+                                jnp.float32)))
+    R = cayley(skew(jnp.asarray(rng.normal(size=lay.rspec.param_shape),
+                                jnp.float32)))
+    A = gs.gs_materialize(lay, L, R)
+    assert np.abs(A.T @ A - np.eye(d)).max() < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(["gsoft", "oft", "boft", "lora", "double_gsoft"]),
+       st.integers(1, 4), st.integers(1, 4), st.integers(0, 10 ** 6))
+def test_adapter_identity_init_any_shape(method, din_blocks, dout_blocks, seed):
+    d_in, d_out = 8 * din_blocks, 8 * dout_blocks
+    spec = ad.AdapterSpec(method=method, d_in=d_in, d_out=d_out, block_size=8)
+    params = ad.init_adapter(spec, jax.random.PRNGKey(seed % 100))
+    W = jnp.asarray(np.random.default_rng(seed).normal(size=(d_in, d_out)),
+                    jnp.float32)
+    np.testing.assert_allclose(np.asarray(ad.materialize(spec, params, W)),
+                               np.asarray(W), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(3, 17), st.integers(0, 10 ** 6))
+def test_cross_entropy_matches_naive(b, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, 4, v)) * 3, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(b, 4)), jnp.int32)
+    loss, acc = cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(np.asarray(logits, np.float32), axis=-1)
+    naive = -np.take_along_axis(np.asarray(p), np.asarray(labels)[..., None],
+                                axis=-1).mean()
+    assert np.isclose(float(loss), naive, rtol=1e-4, atol=1e-5)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(8, 24), st.integers(0, 10 ** 6))
+def test_vocab_padding_never_changes_loss(b, v, seed):
+    """Padding logits to a sharding multiple must not move the loss."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, 3, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(b, 3)), jnp.int32)
+    loss0, _ = cross_entropy(logits, labels, vocab_size=v)
+    pad = jnp.pad(logits, ((0, 0), (0, 0), (0, 7)), constant_values=5.0)
+    loss1, _ = cross_entropy(pad, labels, vocab_size=v)
+    assert np.isclose(float(loss0), float(loss1), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.01, 100.0))
+def test_quantize_roundtrip_bound(seed, scale):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=32) * scale,
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x)).max()
+    assert err <= float(s) * 0.51 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 10 ** 5))
+def test_projection_never_increases_error_vs_zero(kl, kr, seed):
+    """||A - pi(A)|| <= ||A|| (zero is always in the class)."""
+    from repro.core.projection import project_to_gs, gs_reconstruction_error
+    from repro.core.permutations import PermSpec
+    rng = np.random.default_rng(seed)
+    s = int(np.lcm(kl, kr)) * 2
+    lay = gs.GSLayout(
+        lspec=gs.BlockDiagSpec(kl, 3, s // kl),
+        rspec=gs.BlockDiagSpec(kr, s // kr, 2),
+        perm_left=PermSpec.identity(),
+        perm_mid=PermSpec.from_sigma(rng.permutation(s)),
+        perm_right=PermSpec.identity(),
+    )
+    A = rng.normal(size=(lay.out_dim, lay.in_dim))
+    L, R = project_to_gs(A, lay)
+    assert gs_reconstruction_error(A, lay, L, R) <= np.linalg.norm(A) + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10 ** 5))
+def test_data_batches_partition_exactly(hosts, seed):
+    """Host slices always tile the global batch, any host count."""
+    from repro.data import DataConfig, LMDataSource
+    gb = hosts * 2
+    src = LMDataSource(DataConfig(seq_len=8, global_batch=gb, seed=seed))
+    full = src.batch_at(3)["tokens"]
+    parts = [src.batch_at(3, i * 2, (i + 1) * 2)["tokens"]
+             for i in range(hosts)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)

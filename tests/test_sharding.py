@@ -1,0 +1,27 @@
+"""Drives tests/distributed_runner.py in a subprocess (it needs its own
+XLA_FLAGS device-count before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_distributed_stack():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "distributed_runner.py")],
+        env=env, capture_output=True, text=True, timeout=1500)
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed checks failed"
+    checks = [json.loads(l[6:]) for l in proc.stdout.splitlines()
+              if l.startswith("CHECK ")]
+    assert len(checks) >= 10
+    assert all(c["ok"] for c in checks), [c for c in checks if not c["ok"]]
