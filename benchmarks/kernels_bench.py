@@ -1,22 +1,43 @@
 """Kernel-layer benchmarks (CPU container: XLA ref path timed for the
 structural win; Pallas bodies validated in interpret mode + VMEM budgets
-reported from BlockSpec math — real speed is a TPU measurement)."""
+reported from BlockSpec math — real speed is a TPU measurement).
+
+Forward AND forward+backward are timed for both dispatch paths, so the
+"kernels are training primitives" claim is measured, not asserted.  Set
+REPRO_BENCH_TINY=1 (the CI smoke lane) to shrink shapes/iters to
+seconds-scale — the point of the smoke run is that every benchmark still
+*executes*, not the numbers.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 from .common import emit, time_fn
+
+
+def _tiny() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_TINY"))
+
+
+def _pallas_label() -> str:
+    # off-TPU the kernel path runs in the Pallas interpreter: correctness
+    # coverage, not a speed claim
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
 
 
 def gs_vs_dense():
     """GS rotation (2*d*b*T flops) vs dense rotation (d^2*T flops).
     Arrays are passed as jit ARGUMENTS (closing over them lets XLA
     constant-fold the entire benchmark away)."""
-    for d, b in [(1024, 32), (4096, 64)]:
+    cases = [(256, 16)] if _tiny() else [(1024, 32), (4096, 64)]
+    iters = 3 if _tiny() else 10
+    for d, b in cases:
         r = d // b
-        T = 256
+        T = 64 if _tiny() else 256
         key = jax.random.PRNGKey(0)
         L = jax.random.normal(key, (r, b, b))
         R = jax.random.normal(jax.random.fold_in(key, 1), (r, b, b))
@@ -24,30 +45,94 @@ def gs_vs_dense():
         Q = jax.random.normal(jax.random.fold_in(key, 3), (d, d))
         us_gs = time_fn(jax.jit(lambda l, rr, xx:
                                 ops.gs_transform(l, rr, xx)), L, R, x,
-                        iters=10)
-        us_dense = time_fn(jax.jit(lambda xx, q: xx @ q), x, Q, iters=10)
+                        iters=iters)
+        us_dense = time_fn(jax.jit(lambda xx, q: xx @ q), x, Q, iters=iters)
         emit(f"kernels/gs_vs_dense_d{d}_b{b}", us_gs,
              f"dense_us={us_dense:.1f};speedup={us_dense / us_gs:.2f}x;"
              f"flop_ratio={d / (2 * b):.0f}x")
 
 
+def gs_fwd_bwd():
+    """Forward and forward+backward GSOFT rotation through both dispatch
+    paths (ref = XLA autodiff; pallas = custom-VJP kernels)."""
+    cases = [(128, 8, 32)] if _tiny() else [(1024, 32, 256), (2048, 64, 256)]
+    iters = 3 if _tiny() else 10
+    label = _pallas_label()
+    for d, b, T in cases:
+        r = d // b
+        key = jax.random.PRNGKey(1)
+        L = jax.random.normal(key, (r, b, b))
+        R = jax.random.normal(jax.random.fold_in(key, 1), (r, b, b))
+        x = jax.random.normal(jax.random.fold_in(key, 2), (T, d))
+
+        for up, path in ((False, "ref"), (True, label)):
+            fwd = jax.jit(lambda l, rr, xx, _up=up:
+                          ops.gs_transform(l, rr, xx, use_pallas=_up))
+            us_f = time_fn(fwd, L, R, x, iters=iters)
+
+            def loss(l, rr, xx, _up=up):
+                return jnp.sum(ops.gs_transform(l, rr, xx,
+                                                use_pallas=_up) ** 2)
+            bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+            us_fb = time_fn(bwd, L, R, x, iters=iters)
+            emit(f"kernels/gs_fwd_d{d}_b{b}_{path}", us_f, f"T={T}")
+            emit(f"kernels/gs_fwdbwd_d{d}_b{b}_{path}", us_fb,
+                 f"T={T};fwd_us={us_f:.1f}")
+
+
+def bdmm_fwd_bwd():
+    """Forward and forward+backward block-diagonal matmul, both paths."""
+    cases = [(8, 8, 64)] if _tiny() else [(32, 32, 512), (64, 64, 512)]
+    iters = 3 if _tiny() else 10
+    label = _pallas_label()
+    for r, b, T in cases:
+        key = jax.random.PRNGKey(2)
+        blocks = jax.random.normal(key, (r, b, b))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (T, r * b))
+        for up, path in ((False, "ref"), (True, label)):
+            fwd = jax.jit(lambda w, xx, _up=up:
+                          ops.bdmm(w, xx, use_pallas=_up))
+            us_f = time_fn(fwd, blocks, x, iters=iters)
+
+            def loss(w, xx, _up=up):
+                return jnp.sum(ops.bdmm(w, xx, use_pallas=_up) ** 2)
+            bwd = jax.jit(jax.grad(loss, argnums=(0, 1)))
+            us_fb = time_fn(bwd, blocks, x, iters=iters)
+            emit(f"kernels/bdmm_fwd_r{r}_b{b}_{path}", us_f, f"T={T}")
+            emit(f"kernels/bdmm_fwdbwd_r{r}_b{b}_{path}", us_fb,
+                 f"T={T};fwd_us={us_f:.1f}")
+
+
+def autotune_smoke():
+    """Exercise the dispatch autotuner (eager timing search + cache)."""
+    r, b, T = (2, 4, 16) if _tiny() else (8, 32, 128)
+    tun = dispatch.autotune_gs(r, b, T, token_tiles=(8, 32), iters=1)
+    emit(f"kernels/autotune_gs_r{r}_b{b}", 0.0,
+         f"token_tile={tun.token_tile}")
+    tun_b = dispatch.autotune_bdmm(r, b, b, T, token_tiles=(8, 32), iters=1)
+    emit(f"kernels/autotune_bdmm_r{r}_b{b}", 0.0,
+         f"token_tile={tun_b.token_tile};group_tile={tun_b.group_tile}")
+    dispatch.clear_tunings()
+
+
 def ssd_vs_quadratic():
     """Chunked SSD scan vs materialized quadratic attention-form."""
-    T, H, P, N = 2048, 4, 64, 64
+    T, H, P, N = (256, 2, 16, 16) if _tiny() else (2048, 4, 64, 64)
+    iters = 2 if _tiny() else 5
     key = jax.random.PRNGKey(1)
     x = jax.random.normal(key, (T, H, P))
     loga = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (T, H))) * .1
     B = jax.random.normal(jax.random.fold_in(key, 2), (T, H, N)) * 0.3
     C = jax.random.normal(jax.random.fold_in(key, 3), (T, H, N)) * 0.3
     us_chunk = time_fn(
-        jax.jit(lambda *a: ops.ssd(*a, chunk=128)), x, loga, B, C, iters=5)
+        jax.jit(lambda *a: ops.ssd(*a, chunk=128)), x, loga, B, C, iters=iters)
 
     def quad(xx, la, Bm, Cm):
         cum = jnp.cumsum(la, 0)
         gam = jnp.tril(jnp.exp(cum[:, None] - cum[None, :]).transpose(2, 0, 1))
         s = jnp.einsum("thn,shn->hts", Cm, Bm) * gam
         return jnp.einsum("hts,shp->thp", s, xx)
-    us_quad = time_fn(jax.jit(quad), x, loga, B, C, iters=5)
+    us_quad = time_fn(jax.jit(quad), x, loga, B, C, iters=iters)
     emit("kernels/ssd_chunk_vs_quadratic", us_chunk,
          f"quadratic_us={us_quad:.1f};speedup={us_quad / us_chunk:.2f}x;T={T}")
 
@@ -58,6 +143,8 @@ def vmem_budgets():
         ("bdmm_tt128_b32_g4", 128 * 4 * 32 * 4 * 2 + 4 * 32 * 32 * 4),
         ("gs_fused_tt128_d8192_b64",
          128 * 8192 * 4 * 2 + 2 * 8192 * 64 * 4),
+        ("gs_bwd_tt128_d8192_b64",      # dy + x slabs, dx out, 2 fp32 grads
+         128 * 8192 * 4 * 3 + 4 * 8192 * 64 * 4),
         ("ssd_q64_n128_p64", 64 * (64 + 2 * 128) * 4 + 128 * 64 * 4),
     ]:
         emit(f"kernels/vmem_{name}", 0.0,
@@ -66,5 +153,8 @@ def vmem_budgets():
 
 def run():
     gs_vs_dense()
+    gs_fwd_bwd()
+    bdmm_fwd_bwd()
+    autotune_smoke()
     ssd_vs_quadratic()
     vmem_budgets()

@@ -32,6 +32,14 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` returns a dict on recent jax and a
+    one-element list of dicts on older versions; normalize to a dict."""
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca or {}
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
 _OPCODE_RE = re.compile(r"([\w\-]+)\(")
@@ -99,6 +107,66 @@ class _Instr:
     out_type: str
     opcode: str
     rest: str
+
+
+def _operands(rest: str) -> List[str]:
+    """Split the operand region of an instruction (``rest`` starts right
+    after the opcode's opening paren) into operand tokens.
+
+    Types may be printed inline (``f32[64,32]{1,0} %name``) and contain
+    commas/braces/parens of their own, so this is a balanced scan, not a
+    ``split(",")``: commas only separate operands at paren depth 1
+    outside [] and {}.
+    """
+    depth_p, depth_b, depth_c = 1, 0, 0
+    out: List[str] = []
+    cur: List[str] = []
+    for ch in rest:
+        if ch == "(":
+            depth_p += 1
+        elif ch == ")":
+            depth_p -= 1
+            if depth_p == 0:
+                break
+        elif ch == "[":
+            depth_b += 1
+        elif ch == "]":
+            depth_b -= 1
+        elif ch == "{":
+            depth_c += 1
+        elif ch == "}":
+            depth_c -= 1
+        if ch == "," and depth_p == 1 and depth_b == 0 and depth_c == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return [o.strip() for o in out if o.strip()]
+
+
+def _split_tok(tok: str) -> Tuple[Optional[str], str]:
+    """Operand token -> (inline type or None, instruction name).
+
+    Depending on XLA version, operands print as ``%name`` or with the type
+    inline: ``f32[64,32]{1,0} %name``.
+    """
+    tok = tok.strip()
+    if " %" in tok:
+        typ, name = tok.rsplit(" %", 1)
+        return typ, name.split(" ")[0]
+    return None, tok.lstrip("%").split(" ")[0]
+
+
+def _operand_name(tok: str) -> str:
+    return _split_tok(tok)[1]
+
+
+def _operand_type(tok: str, syms: Dict[str, str]) -> Optional[str]:
+    typ, name = _split_tok(tok)
+    return typ if typ is not None else syms.get(name)
 
 
 def _split_instr(ln: str) -> Optional[_Instr]:
@@ -202,9 +270,9 @@ class HloModuleCost:
         for ins in self.comps.get(comp, []):
             if ins.opcode in ("convert", "bitcast", "copy", "reshape",
                               "transpose"):
-                src = ins.rest.split(")")[0].split(",")[0].strip()
-                src = src.lstrip("%").split(" ")[0]
-                passthrough[ins.name] = src
+                srcs = _operands(ins.rest)
+                if srcs:
+                    passthrough[ins.name] = _operand_name(srcs[0])
 
         def resolve(name):
             seen = 0
@@ -215,8 +283,7 @@ class HloModuleCost:
 
         info = {}
         for ins in self.comps.get(comp, []):
-            ops = [resolve(o.strip().lstrip("%").split(" ")[0])
-                   for o in ins.rest.split(")")[0].split(",")]
+            ops = [resolve(_operand_name(o)) for o in _operands(ins.rest)]
             if ins.opcode == "dynamic-slice" and ops and ops[0] in param_of:
                 idx = param_of[ops[0]]
                 prev = info.get(idx, ("slice", 0))[1]
@@ -240,19 +307,19 @@ class HloModuleCost:
                                callee: Optional[str]) -> float:
         info = self._param_slice_info(callee) if callee else {}
         orphan = info.get("_dus_orphan", (None, 0))[1]
-        args = ins.rest.split(")")[0]
         op_bytes = []
         total = 0.0
         aliased_out = False
-        for pos, o in enumerate(args.split(",")):
-            o = o.strip().lstrip("%").split(" ")[0]
+        for pos, o in enumerate(_operands(ins.rest)):
             if pos in info:
                 kind, b = info[pos]
                 total += b
                 if kind == "dus":
                     aliased_out = True     # accumulator aliased in->out
-            elif o in syms:
-                op_bytes.append(_bytes_of(syms[o]))
+            else:
+                ot = _operand_type(o, syms)
+                if ot is not None:
+                    op_bytes.append(_bytes_of(ot))
         if orphan and not aliased_out and op_bytes:
             # DUS on an unresolved chain: assume the largest operand is the
             # aliased accumulator
@@ -265,12 +332,11 @@ class HloModuleCost:
         return total
 
     def _operand_bytes(self, ins: _Instr, syms: Dict[str, str]) -> int:
-        args = ins.rest.split(")")[0]
         total = 0
-        for op in args.split(","):
-            op = op.strip().lstrip("%").split(" ")[0]
-            if op in syms:
-                total += _bytes_of(syms[op])
+        for op in _operands(ins.rest):
+            ot = _operand_type(op, syms)
+            if ot is not None:
+                total += _bytes_of(ot)
         return total
 
     def _instr_cost(self, ins: _Instr, syms: Dict[str, str],
@@ -335,9 +401,10 @@ class HloModuleCost:
             out_elems = _elems_of(ins.out_type)
             contract = 1
             mcon = _CONTRACT_RE.search(ins.rest)
-            lhs = ins.rest.split(",")[0].strip().lstrip("%").split(" ")[0]
-            if mcon and lhs in syms:
-                ldims = _dims(syms[lhs])
+            dot_ops = _operands(ins.rest)
+            lhs_type = _operand_type(dot_ops[0], syms) if dot_ops else None
+            if mcon and lhs_type is not None:
+                ldims = _dims(lhs_type)
                 if ldims:
                     dims = ldims[0][1]
                     for idx in (int(x) for x in mcon.group(1).split(",")
@@ -353,11 +420,11 @@ class HloModuleCost:
         if op == "convolution":
             # flops ~ 2 * out_elems * (kernel elems / out_features)
             out_elems = _elems_of(ins.out_type)
-            ops = [o.strip().lstrip("%").split(" ")[0]
-                   for o in ins.rest.split(")")[0].split(",")]
+            ops = _operands(ins.rest)
             kelems = 0
-            if len(ops) > 1 and ops[1] in syms:
-                kd = _dims(syms[ops[1]])
+            ktype = _operand_type(ops[1], syms) if len(ops) > 1 else None
+            if ktype is not None:
+                kd = _dims(ktype)
                 if kd:
                     n = 1
                     for d in kd[0][1]:
@@ -377,11 +444,10 @@ class HloModuleCost:
 
         if op == "dynamic-update-slice":
             # RMW of the update region only (in-place on TPU): 2x update bytes
-            ops = [o.strip().lstrip("%").split(" ")[0]
-                   for o in ins.rest.split(")")[0].split(",")]
-            upd = _bytes_of(syms.get(ops[1], "")) if len(ops) > 1 else 0
+            ops = _operands(ins.rest)
+            utype = _operand_type(ops[1], syms) if len(ops) > 1 else None
             if count_bytes:
-                c.bytes += 2 * upd
+                c.bytes += 2 * _bytes_of(utype or "")
             return c
 
         if op == "dynamic-slice":

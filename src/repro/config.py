@@ -62,6 +62,10 @@ class ModelConfig:
     dtype: str = "bf16"
     param_dtype: str = "bf16"
     use_pallas: bool = False
+    # kernel launch-geometry overrides, installed into kernels.dispatch by
+    # the step builders: ("bdmm", r, bo, bi, token_tile, group_tile) or
+    # ("gs", r, b, token_tile)
+    kernel_tunings: Tuple[Tuple, ...] = ()
     remat: str = "full"              # full | dots | none
     attn_chunk: int = 1024
     ssd_chunk: int = 256

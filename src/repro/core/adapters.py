@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kernel_ops
+
 from . import gs
 from .gs import BlockDiagSpec, GSLayout, block_diag_matmul, gsoft_layout, pick_block_size
 from .orthogonal import cayley, skew
@@ -53,6 +55,7 @@ class AdapterSpec:
     boft_factors: int = 2          # BOFT m
     neumann_order: Optional[int] = None   # approximate Cayley (perf option)
     use_scale: bool = False        # learnable per-output magnitude
+    use_pallas: bool = False       # GS rotations via the Pallas kernel path
     # leading batch dims of the weight (scan-stacked layers, MoE experts, ...)
     batch: Tuple[int, ...] = ()
 
@@ -154,11 +157,16 @@ def num_adapter_params(spec: AdapterSpec) -> int:
 # ---------------------------------------------------------------------------
 
 def _gs_rotate(d: int, b: int, L_k: Array, R_k: Array, W: Array,
-               neumann: Optional[int], transpose_side: bool) -> Array:
+               neumann: Optional[int], transpose_side: bool,
+               use_pallas: bool = False) -> Array:
     """Apply Q = P^T L P R (orthogonal GS) to W.
 
     transpose_side=False:  Q @ W    (Q on rows / input dim)
     transpose_side=True:   W @ Q    (Q on columns / output dim)
+
+    use_pallas routes the rotation through the fused GS kernels (forward
+    AND backward via their custom-VJP rules); the columns/rows of W play
+    the token role on the kernel's lane axis.
 
     Perf (§Perf iteration A): the Cayley solve stays fp32 but the rotated
     blocks are cast to W's dtype before the block matmuls — bf16 weights
@@ -170,7 +178,13 @@ def _gs_rotate(d: int, b: int, L_k: Array, R_k: Array, W: Array,
     L = cayley(skew(L_k), neumann_order=neumann).astype(W.dtype)
     R = cayley(skew(R_k), neumann_order=neumann).astype(W.dtype)
     if transpose_side:
+        if use_pallas:
+            return kernel_ops.gs_transform_T(L, R, W, use_pallas=True)
         return gs.gs_apply_T(lay, L, R, W)       # rows w -> w^T Q, i.e. W @ Q
+    if use_pallas:
+        WT = jnp.swapaxes(W, -1, -2)             # columns of W as "tokens"
+        return jnp.swapaxes(kernel_ops.gs_transform(L, R, WT,
+                                                    use_pallas=True), -1, -2)
     return gs.gs_matmul(lay, L, R, W)            # Q @ W
 
 
@@ -209,15 +223,18 @@ def materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
     if spec.method == "gsoft":
         b = spec.resolved_block(spec.d_in, spec.block_size)
         Wf = _gs_rotate(spec.d_in, b, params["L"], params["R"], Wf,
-                        spec.neumann_order, transpose_side=False)
+                        spec.neumann_order, transpose_side=False,
+                        use_pallas=spec.use_pallas)
     elif spec.method == "double_gsoft":
         b_in = spec.resolved_block(spec.d_in, spec.block_size)
         Wf = _gs_rotate(spec.d_in, b_in, params["L"], params["R"], Wf,
-                        spec.neumann_order, transpose_side=False)
+                        spec.neumann_order, transpose_side=False,
+                        use_pallas=spec.use_pallas)
         b_out = spec.resolved_block(spec.d_out,
                                     spec.block_size_out or spec.block_size)
         Wf = _gs_rotate(spec.d_out, b_out, params["L_v"], params["R_v"], Wf,
-                        spec.neumann_order, transpose_side=True)
+                        spec.neumann_order, transpose_side=True,
+                        use_pallas=spec.use_pallas)
     elif spec.method == "oft":
         Wf = _oft_rotate(params["K"], Wf, spec.neumann_order)
     elif spec.method == "boft":
@@ -251,6 +268,8 @@ def apply_activation_side(spec: AdapterSpec, params: Params, x: Array) -> Array:
         L = cayley(skew(params["L"]), neumann_order=spec.neumann_order)
         R = cayley(skew(params["R"]), neumann_order=spec.neumann_order)
         # x Q = (Q^T x^T)^T -> per-vector transpose application
+        if spec.use_pallas:
+            return kernel_ops.gs_transform_T(L, R, x, use_pallas=True)
         return gs.gs_apply_T(lay, L, R, x)
     if spec.method == "oft":
         Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)

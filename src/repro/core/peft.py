@@ -46,6 +46,7 @@ class PEFTConfig:
     boft_factors: int = 2
     neumann_order: Optional[int] = None
     use_scale: bool = False
+    use_pallas: bool = False       # GS rotations via the Pallas kernel path
     target_patterns: Tuple[str, ...] = DEFAULT_TARGETS
 
     @property
@@ -99,6 +100,7 @@ def spec_for(cfg: PEFTConfig, shape: Tuple[int, ...]) -> AdapterSpec:
         boft_factors=cfg.boft_factors,
         neumann_order=cfg.neumann_order,
         use_scale=cfg.use_scale,
+        use_pallas=cfg.use_pallas,
         batch=tuple(int(s) for s in shape[:-2]),
     )
 

@@ -1,11 +1,34 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
   bdmm     — block-diagonal (grouped) matmul: the GS "group" primitive
-  gs_fused — fused GSOFT rotation P^T L P R x (one HBM round-trip)
+  gs_fused — fused GSOFT rotation P^T L P R x (one HBM round-trip), its
+             transpose rotation Q^T x, and a fused backward producing
+             (dx, dL, dR) in a single pass
   ssd      — Mamba2 state-space-dual chunked scan (mamba2/zamba2 archs)
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py is the jit-friendly
-dispatch used by the model code (use_pallas flag; interpret mode on CPU).
+dispatch used by the model code.
+
+``use_pallas`` semantics
+------------------------
+``False`` (default) runs the reference path — identical math via XLA, used
+on backends where Mosaic cannot lower (launch/dryrun.py pins it off).
+``True`` runs ``pl.pallas_call``; on a non-TPU backend the call transparently
+drops to interpret mode so tests/examples exercise the kernel bodies on CPU.
+Both settings are fully differentiable: the Pallas path installs the
+``jax.custom_vjp`` rules from dispatch.py, whose backward passes are Pallas
+kernels too (transposed-blocks bdmm + token-contraction for bdmm; the
+transpose rotation R^T P^T L^T P plus fused per-factor gradients for
+gs_fused).
+
+Autotuner overrides
+-------------------
+Launch geometry (token/group tiles) resolves per (shape, dtype, backend)
+in dispatch.py: explicit ``tuning=`` argument and config overrides
+(``ModelConfig.kernel_tunings``, installed via ``dispatch.install_tunings``)
+take precedence, then cached ``dispatch.autotune_*`` search results, then
+shape heuristics. Autotuning is eager (times real launches) — trigger it
+from warmup/benchmark code, never inside jit.
 """
-from .ops import bdmm, gs_transform, ssd
-from . import ref
+from .ops import bdmm, flash_mha, gs_transform, gs_transform_T, ssd
+from . import dispatch, ref

@@ -34,6 +34,15 @@ def _bdmm_kernel(x_ref, w_ref, o_ref, *, group_tile: int, bi: int, bo: int):
         o_ref[:, g * bo:(g + 1) * bo] = yg.astype(o_ref.dtype)
 
 
+def default_group_tile(r: int, bi: int) -> int:
+    """Heuristic: >= 128 lanes of weight columns per grid step, capped at r,
+    rounded down to a divisor of r."""
+    group_tile = max(1, min(r, 128 // max(bi, 1) or 1))
+    while r % group_tile:
+        group_tile -= 1
+    return group_tile
+
+
 def bdmm_pallas(blocks: Array, x: Array, *, token_tile: int = 128,
                 group_tile: int = 0, interpret: bool = False) -> Array:
     """blocks: (r, bo, bi); x: (T, r*bi) -> (T, r*bo)."""
@@ -41,8 +50,7 @@ def bdmm_pallas(blocks: Array, x: Array, *, token_tile: int = 128,
     t, d = x.shape
     assert d == r * bi, (blocks.shape, x.shape)
     if group_tile <= 0:
-        # target >= 128 lanes of weight columns per step, capped at r
-        group_tile = max(1, min(r, 128 // max(bi, 1) or 1))
+        group_tile = default_group_tile(r, bi)
     while r % group_tile:
         group_tile -= 1
     tt = min(token_tile, t)
@@ -64,3 +72,66 @@ def bdmm_pallas(blocks: Array, x: Array, *, token_tile: int = 128,
         interpret=interpret,
     )(x, blocks)
     return out[:t] if pad else out
+
+
+def _bdmm_dw_kernel(dy_ref, x_ref, dw_ref, *, group_tile: int,
+                    bo: int, bi: int):
+    ti = pl.program_id(1)
+    dy = dy_ref[...]                     # (tt, group_tile * bo)
+    x = x_ref[...]                       # (tt, group_tile * bi)
+    for g in range(group_tile):          # static unroll
+        dyg = dy[:, g * bo:(g + 1) * bo]
+        xg = x[:, g * bi:(g + 1) * bi]
+        dw = jax.lax.dot_general(         # (bo, bi): contract over tokens
+            dyg, xg, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(ti == 0)
+        def _init():
+            dw_ref[g] = dw
+
+        @pl.when(ti != 0)
+        def _acc():
+            dw_ref[g] += dw
+
+
+def bdmm_dblocks_pallas(dy: Array, x: Array, *, bo: int, bi: int,
+                        token_tile: int = 128, group_tile: int = 0,
+                        interpret: bool = False) -> Array:
+    """Token-contraction backward of bdmm: the gradient w.r.t. the blocks.
+
+    dy: (T, r*bo); x: (T, r*bi)  ->  dblocks (r, bo, bi) in fp32:
+        dblocks[g, i, j] = sum_t dy[t, g*bo + i] * x[t, g*bi + j]
+
+    Grid is (group steps, token steps) with tokens innermost, so each
+    (group_tile, bo, bi) output block is revisited across consecutive token
+    steps and accumulated in place (fp32) — one HBM read of dy and x total.
+    """
+    t, dyd = dy.shape
+    assert dyd % bo == 0 and x.shape[-1] % bi == 0
+    r = dyd // bo
+    assert x.shape == (t, r * bi), (dy.shape, x.shape, bo, bi)
+    if group_tile <= 0:
+        group_tile = default_group_tile(r, max(bi, bo))
+    while r % group_tile:
+        group_tile -= 1
+    tt = min(token_tile, t)
+    pad = (-t) % tt
+    if pad:                               # zero rows contribute zero gradient
+        dy = jnp.pad(dy, ((0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    tp = dy.shape[0]
+
+    grid = (r // group_tile, tp // tt)
+    return pl.pallas_call(
+        functools.partial(_bdmm_dw_kernel, group_tile=group_tile, bo=bo,
+                          bi=bi),
+        out_shape=jax.ShapeDtypeStruct((r, bo, bi), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tt, group_tile * bo), lambda gi, ti: (ti, gi)),
+            pl.BlockSpec((tt, group_tile * bi), lambda gi, ti: (ti, gi)),
+        ],
+        out_specs=pl.BlockSpec((group_tile, bo, bi), lambda gi, ti: (gi, 0, 0)),
+        interpret=interpret,
+    )(dy, x)

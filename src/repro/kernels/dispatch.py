@@ -1,0 +1,302 @@
+"""Autotuned dispatch + custom-VJP rules for the GS kernel suite.
+
+This module is the single place that decides *how* a GS kernel call runs:
+
+  * ``Tuning`` — the (token_tile, group_tile) launch geometry of a call.
+  * a three-level resolution order, consulted at trace time on static shapes:
+        1. config overrides  (``register_tuning`` / ``install_tunings`` —
+           wired from ``ModelConfig.kernel_tunings`` by train/steps.py)
+        2. autotuned results (``autotune_bdmm`` / ``autotune_gs`` — a small
+           cached timing search over candidate tiles, keyed per
+           (shape, dtype, backend))
+        3. shape heuristics  (the former ad-hoc rules from ops.py/bdmm.py)
+  * ``bdmm_diff`` / ``gs_diff`` / ``gs_T_diff`` — the kernels wrapped in
+    ``jax.custom_vjp`` so ``jax.grad`` through ``use_pallas=True`` runs
+    Pallas in both directions instead of falling back to XLA autodiff over
+    the kernel body:
+
+        bdmm:  dx = bdmm(blocks^T, dy);  dblocks = token-contraction kernel.
+        gs:    dx = Q^T dy (the transpose rotation is itself a GS transform —
+               the paper's structure makes the VJP closed under the class);
+               dL/dR from the fused backward kernel (activations stay in
+               VMEM, fp32 accumulation over token tiles).
+        gs_T:  dx = Q dy (the forward kernel); dL/dR via the identity
+               <g, Q^T x> = <x, Q g>, i.e. the same fused backward kernel
+               with (input, cotangent) swapped.
+
+Autotuning is *eager* (it times real kernel launches), so call it from
+benchmarks / warmup code, never inside jit; lookups inside jit are pure
+Python on static shapes and cost nothing at runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bdmm import bdmm_dblocks_pallas, bdmm_pallas, default_group_tile
+from .gs_fused import (gs_fused_T_pallas, gs_fused_bwd_pallas,
+                       gs_fused_grads_pallas, gs_fused_pallas)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Tuning:
+    """Launch geometry for one kernel call site (hashable, jit-static)."""
+    token_tile: int = 128
+    group_tile: int = 0          # 0 -> per-shape heuristic (bdmm only)
+
+
+Key = Tuple  # (op, *shape_sig, dtype_name, backend)
+
+# config-provided overrides (backend/dtype wildcards) beat autotuned results,
+# which beat the shape heuristic.
+_OVERRIDES: Dict[Key, Tuning] = {}
+_TUNED: Dict[Key, Tuning] = {}
+# overrides installed from a ModelConfig — replaced wholesale on the next
+# install so one config's tunings never leak into another model built in
+# the same process (register_tuning entries are sticky by design)
+_CONFIG_KEYS: set = set()
+
+DEFAULT_TOKEN_TILES: Tuple[int, ...] = (64, 128, 256)
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _interpret() -> bool:
+    return _backend() != "tpu"
+
+
+def bdmm_key(r: int, bo: int, bi: int, dtype,
+             backend: Optional[str] = None) -> Key:
+    return ("bdmm", r, bo, bi, jnp.dtype(dtype).name,
+            backend or _backend())
+
+
+def gs_key(r: int, b: int, dtype, backend: Optional[str] = None) -> Key:
+    return ("gs", r, b, jnp.dtype(dtype).name, backend or _backend())
+
+
+def _wildcard(key: Key) -> Key:
+    return key[:-2] + ("*", "*")
+
+
+def register_tuning(key: Key, tuning: Tuning) -> None:
+    """Pin the launch geometry for a call-site key (highest precedence)."""
+    _OVERRIDES[key] = tuning
+
+
+def install_tunings(entries: Iterable[Tuple]) -> None:
+    """Install config-level overrides (``ModelConfig.kernel_tunings``).
+
+    Each entry is a tuple:
+        ("bdmm", r, bo, bi, token_tile, group_tile)
+        ("gs",   r, b,      token_tile)
+    Entries apply to every dtype/backend (wildcard keys). Each call replaces
+    the previously installed config set.
+    """
+    for key in _CONFIG_KEYS:
+        _OVERRIDES.pop(key, None)
+    _CONFIG_KEYS.clear()
+    for e in entries or ():
+        op = e[0]
+        if op == "bdmm":
+            _, r, bo, bi, tt, gt = e
+            key = _wildcard(bdmm_key(r, bo, bi, jnp.float32))
+            tun = Tuning(token_tile=tt, group_tile=gt)
+        elif op == "gs":
+            _, r, b, tt = e
+            key = _wildcard(gs_key(r, b, jnp.float32))
+            tun = Tuning(token_tile=tt)
+        else:
+            raise ValueError(f"unknown kernel_tunings op {op!r}")
+        register_tuning(key, tun)
+        _CONFIG_KEYS.add(key)
+
+
+def get_tuning(key: Key) -> Tuning:
+    """Resolve launch geometry: override > wildcard override > autotuned >
+    heuristic default."""
+    if key in _OVERRIDES:
+        return _OVERRIDES[key]
+    wc = _wildcard(key)
+    if wc in _OVERRIDES:
+        return _OVERRIDES[wc]
+    if key in _TUNED:
+        return _TUNED[key]
+    if key[0] == "bdmm":
+        _, r, bo, bi = key[:4]
+        return Tuning(token_tile=128, group_tile=default_group_tile(r, bi))
+    return Tuning(token_tile=128)
+
+
+def clear_tunings() -> None:
+    _OVERRIDES.clear()
+    _TUNED.clear()
+    _CONFIG_KEYS.clear()
+
+
+def pick_chunk(t: int, chunk: int) -> int:
+    """Largest divisor of t that is <= chunk (SSD scan chunking)."""
+    q = min(chunk, t)
+    while t % q:
+        q -= 1
+    return max(q, 1)
+
+
+# ---------------------------------------------------------------------------
+# autotuner (eager; results cached in the registry)
+# ---------------------------------------------------------------------------
+
+def _time_us(fn, *args, iters: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def autotune_bdmm(r: int, bo: int, bi: int, t: int, dtype=jnp.float32, *,
+                  token_tiles: Sequence[int] = DEFAULT_TOKEN_TILES,
+                  group_tiles: Optional[Sequence[int]] = None,
+                  iters: int = 5) -> Tuning:
+    """Search (token_tile, group_tile) by timing real launches; cache best."""
+    key = bdmm_key(r, bo, bi, dtype)
+    if key in _TUNED:
+        return _TUNED[key]
+    if group_tiles is None:
+        group_tiles = sorted({g for g in (1, 2, 4, 8, default_group_tile(r, bi))
+                              if r % g == 0 and g <= r})
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    blocks = jax.random.normal(k1, (r, bo, bi), dtype)
+    x = jax.random.normal(k2, (t, r * bi), dtype)
+    interp = _interpret()
+    best, best_us = None, float("inf")
+    for tt in token_tiles:
+        for gt in group_tiles:
+            fn = jax.jit(functools.partial(
+                bdmm_pallas, token_tile=tt, group_tile=gt, interpret=interp))
+            us = _time_us(fn, blocks, x, iters=iters)
+            if us < best_us:
+                best, best_us = Tuning(token_tile=tt, group_tile=gt), us
+    _TUNED[key] = best
+    return best
+
+
+def autotune_gs(r: int, b: int, t: int, dtype=jnp.float32, *,
+                token_tiles: Sequence[int] = DEFAULT_TOKEN_TILES,
+                iters: int = 5) -> Tuning:
+    key = gs_key(r, b, dtype)
+    if key in _TUNED:
+        return _TUNED[key]
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    L = jax.random.normal(ks[0], (r, b, b), dtype)
+    R = jax.random.normal(ks[1], (r, b, b), dtype)
+    x = jax.random.normal(ks[2], (t, r * b), dtype)
+    interp = _interpret()
+    best, best_us = None, float("inf")
+    for tt in token_tiles:
+        fn = jax.jit(functools.partial(
+            gs_fused_pallas, token_tile=tt, interpret=interp))
+        us = _time_us(fn, L, R, x, iters=iters)
+        if us < best_us:
+            best, best_us = Tuning(token_tile=tt), us
+    _TUNED[key] = best
+    return best
+
+
+# ---------------------------------------------------------------------------
+# differentiable kernel entry points (2-D token-major inputs)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def bdmm_diff(tuning: Tuning, interpret: bool, blocks: Array,
+              x: Array) -> Array:
+    """Differentiable bdmm: blocks (r, bo, bi), x (T, r*bi) -> (T, r*bo)."""
+    return bdmm_pallas(blocks, x, token_tile=tuning.token_tile,
+                       group_tile=tuning.group_tile, interpret=interpret)
+
+
+def _bdmm_fwd(tuning, interpret, blocks, x):
+    y = bdmm_diff(tuning, interpret, blocks, x)
+    return y, (blocks, x)
+
+
+def _bdmm_bwd(tuning, interpret, res, dy):
+    blocks, x = res
+    r, bo, bi = blocks.shape
+    dx = bdmm_pallas(jnp.swapaxes(blocks, -1, -2), dy,
+                     token_tile=tuning.token_tile,
+                     group_tile=tuning.group_tile, interpret=interpret)
+    dblocks = bdmm_dblocks_pallas(dy, x, bo=bo, bi=bi,
+                                  token_tile=tuning.token_tile,
+                                  group_tile=tuning.group_tile,
+                                  interpret=interpret)
+    return dblocks.astype(blocks.dtype), dx.astype(x.dtype)
+
+
+bdmm_diff.defvjp(_bdmm_fwd, _bdmm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def gs_diff(tuning: Tuning, interpret: bool, L: Array, R: Array,
+            x: Array) -> Array:
+    """Differentiable fused GSOFT rotation  y = P^T L P R x."""
+    return gs_fused_pallas(L, R, x, token_tile=tuning.token_tile,
+                           interpret=interpret)
+
+
+def _gs_fwd(tuning, interpret, L, R, x):
+    y = gs_diff(tuning, interpret, L, R, x)
+    return y, (L, R, x)
+
+
+def _gs_bwd(tuning, interpret, res, dy):
+    L, R, x = res
+    dx, dL, dR = gs_fused_bwd_pallas(L, R, x, dy,
+                                     token_tile=tuning.token_tile,
+                                     interpret=interpret)
+    return dL.astype(L.dtype), dR.astype(R.dtype), dx.astype(x.dtype)
+
+
+gs_diff.defvjp(_gs_fwd, _gs_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def gs_T_diff(tuning: Tuning, interpret: bool, L: Array, R: Array,
+              x: Array) -> Array:
+    """Differentiable transpose rotation  y = Q^T x = R^T P^T L^T P x."""
+    return gs_fused_T_pallas(L, R, x, token_tile=tuning.token_tile,
+                             interpret=interpret)
+
+
+def _gs_T_fwd(tuning, interpret, L, R, x):
+    y = gs_T_diff(tuning, interpret, L, R, x)
+    return y, (L, R, x)
+
+
+def _gs_T_bwd(tuning, interpret, res, dy):
+    # <dy, Q^T x> = <x, Q dy>:  dx is the forward rotation of dy, and the
+    # factor grads come from the grads-only backward kernel with (input,
+    # cotangent) swapped.
+    L, R, x = res
+    dx = gs_fused_pallas(L, R, dy, token_tile=tuning.token_tile,
+                         interpret=interpret)
+    dL, dR = gs_fused_grads_pallas(L, R, dy, x,
+                                   token_tile=tuning.token_tile,
+                                   interpret=interpret)
+    return dL.astype(L.dtype), dR.astype(R.dtype), dx.astype(x.dtype)
+
+
+gs_T_diff.defvjp(_gs_T_fwd, _gs_T_bwd)

@@ -47,9 +47,90 @@ def _gs_fused_kernel(x_ref, l_ref, r_ref, o_ref, *, r: int, b: int):
     o_ref[...] = z.astype(o_ref.dtype)
 
 
-def gs_fused_pallas(L: Array, R: Array, x: Array, *, token_tile: int = 128,
-                    interpret: bool = False) -> Array:
-    """L, R: (r, b, b); x: (T, d=r*b) -> (T, d). y = P^T L P R x."""
+def _gs_fused_T_kernel(x_ref, l_ref, r_ref, o_ref, *, r: int, b: int):
+    t = x_ref.shape[0]
+    d = r * b
+    x = x_ref[...]                                   # (t, d)
+    f32 = jnp.float32
+
+    # P x (k = r): shuffle, then regroup for L's blocks
+    s = x.reshape(t, r, b).transpose(0, 2, 1).reshape(t, r, b)
+    L = l_ref[...]                                   # (r, b, b)
+    # L^T .  — q[g,t,j] = sum_i L[g,i,j] s[t,g,i]
+    q = jax.lax.dot_general(s, L, (((2,), (1,)), ((1,), (0,))),
+                            preferred_element_type=f32)   # (r, t, b)
+    # P^T (k = b): inverse shuffle, regroup for R's blocks
+    m = q.transpose(1, 0, 2).reshape(t, d)
+    m = m.reshape(t, b, r).transpose(0, 2, 1).reshape(t, r, b)
+    R = r_ref[...]
+    # R^T .
+    z = jax.lax.dot_general(m, R, (((2,), (1,)), ((1,), (0,))),
+                            preferred_element_type=f32)   # (r, t, b)
+    o_ref[...] = z.transpose(1, 0, 2).reshape(t, d).astype(o_ref.dtype)
+
+
+def _gs_fused_bwd_kernel(dy_ref, x_ref, l_ref, r_ref, *out_refs,
+                         r: int, b: int, with_dx: bool):
+    """Fused backward: one read of (x, dy), all intermediates in VMEM.
+
+    Recomputes the cheap forward intermediates (2*d*b flops/token) instead
+    of saving them — residuals are just (x, L, R), so the bwd HBM traffic is
+    one slab read of x and dy plus the block factors.  with_dx=False skips
+    the dx rotation and its slab write entirely (the gs_T VJP needs only
+    the factor grads from this kernel).
+    """
+    if with_dx:
+        dx_ref, dl_ref, dr_ref = out_refs
+    else:
+        dl_ref, dr_ref = out_refs
+    ti = pl.program_id(0)
+    t = dy_ref.shape[0]
+    d = r * b
+    f32 = jnp.float32
+    dy = dy_ref[...]
+    x = x_ref[...]
+    L = l_ref[...]
+    R = r_ref[...]
+
+    xg = x.reshape(t, r, b)
+    # forward intermediates:  u = R x  (grouped),  v = P u  (shuffled groups)
+    u = jax.lax.dot_general(xg, R, (((2,), (2,)), ((1,), (0,))),
+                            preferred_element_type=f32)   # (r, t, b)
+    v = u.transpose(1, 2, 0).reshape(t, r, b)
+    # dw = P dy  (y = P^T w  =>  w-cotangent is the shuffled dy)
+    dw = dy.reshape(t, r, b).transpose(0, 2, 1).reshape(t, r, b)
+    # dL[g, i, j] = sum_t dw[t, g, i] v[t, g, j]
+    dL = jax.lax.dot_general(dw, v, (((0,), (0,)), ((1,), (1,))),
+                             preferred_element_type=f32)  # (r, b, b)
+    # dv = L^T dw
+    dv = jax.lax.dot_general(dw, L, (((2,), (1,)), ((1,), (0,))),
+                             preferred_element_type=f32)  # (r, t, b)
+    # du = P^T dv  (back to original grouping)
+    du = dv.transpose(1, 0, 2).reshape(t, d)
+    du = du.reshape(t, b, r).transpose(0, 2, 1).reshape(t, r, b)
+    # dR[g, i, j] = sum_t du[t, g, i] x[t, g, j]
+    dR = jax.lax.dot_general(du, xg.astype(f32),
+                             (((0,), (0,)), ((1,), (1,))),
+                             preferred_element_type=f32)  # (r, b, b)
+    if with_dx:
+        # dx = R^T du
+        dx = jax.lax.dot_general(du, R, (((2,), (1,)), ((1,), (0,))),
+                                 preferred_element_type=f32)  # (r, t, b)
+        dx_ref[...] = dx.transpose(1, 0, 2).reshape(t, d).astype(dx_ref.dtype)
+
+    @pl.when(ti == 0)
+    def _init():
+        dl_ref[...] = dL
+        dr_ref[...] = dR
+
+    @pl.when(ti != 0)
+    def _acc():
+        dl_ref[...] += dL
+        dr_ref[...] += dR
+
+
+def _call_gs_kernel(kernel, L: Array, R: Array, x: Array,
+                    token_tile: int, interpret: bool) -> Array:
     r, b, _ = L.shape
     t, d = x.shape
     assert d == r * b
@@ -59,7 +140,7 @@ def gs_fused_pallas(L: Array, R: Array, x: Array, *, token_tile: int = 128,
         x = jnp.pad(x, ((0, pad), (0, 0)))
     tp = x.shape[0]
     out = pl.pallas_call(
-        functools.partial(_gs_fused_kernel, r=r, b=b),
+        functools.partial(kernel, r=r, b=b),
         out_shape=jax.ShapeDtypeStruct((tp, d), x.dtype),
         grid=(tp // tt,),
         in_specs=[
@@ -71,3 +152,76 @@ def gs_fused_pallas(L: Array, R: Array, x: Array, *, token_tile: int = 128,
         interpret=interpret,
     )(x, L, R)
     return out[:t] if pad else out
+
+
+def gs_fused_pallas(L: Array, R: Array, x: Array, *, token_tile: int = 128,
+                    interpret: bool = False) -> Array:
+    """L, R: (r, b, b); x: (T, d=r*b) -> (T, d). y = P^T L P R x."""
+    return _call_gs_kernel(_gs_fused_kernel, L, R, x, token_tile, interpret)
+
+
+def gs_fused_T_pallas(L: Array, R: Array, x: Array, *, token_tile: int = 128,
+                      interpret: bool = False) -> Array:
+    """Transpose rotation  y = R^T P^T L^T P x  (= Q^T x), same VMEM budget.
+
+    This is both the VJP of gs_fused_pallas w.r.t. x and the activation-side
+    adapter application (x Q = (Q^T x^T)^T).
+    """
+    return _call_gs_kernel(_gs_fused_T_kernel, L, R, x, token_tile, interpret)
+
+
+def _call_gs_bwd(L: Array, R: Array, x: Array, dy: Array, *,
+                 token_tile: int, interpret: bool, with_dx: bool):
+    r, b, _ = L.shape
+    t, d = x.shape
+    assert d == r * b and dy.shape == x.shape
+    tt = min(token_tile, t)
+    pad = (-t) % tt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        dy = jnp.pad(dy, ((0, pad), (0, 0)))
+    tp = x.shape[0]
+    grad_shape = jax.ShapeDtypeStruct((r, b, b), jnp.float32)
+    grad_spec = pl.BlockSpec((r, b, b), lambda ti: (0, 0, 0))
+    slab_spec = pl.BlockSpec((tt, d), lambda ti: (ti, 0))
+    out_shape = (grad_shape, grad_shape)
+    out_specs = (grad_spec, grad_spec)
+    if with_dx:
+        out_shape = (jax.ShapeDtypeStruct((tp, d), x.dtype),) + out_shape
+        out_specs = (slab_spec,) + out_specs
+    outs = pl.pallas_call(
+        functools.partial(_gs_fused_bwd_kernel, r=r, b=b, with_dx=with_dx),
+        out_shape=out_shape,
+        grid=(tp // tt,),
+        in_specs=[slab_spec, slab_spec, grad_spec, grad_spec],
+        out_specs=out_specs,
+        interpret=interpret,
+    )(dy, x, L, R)
+    if with_dx:
+        dx, dL, dR = outs
+        return (dx[:t] if pad else dx), dL, dR
+    return outs
+
+
+def gs_fused_bwd_pallas(L: Array, R: Array, x: Array, dy: Array, *,
+                        token_tile: int = 128, interpret: bool = False):
+    """Fused backward of  y = P^T L P R x.
+
+    Returns (dx, dL, dR) with dx in x.dtype and dL, dR accumulated in fp32:
+        dx = Q^T dy,   dL[g] = sum_t (P dy)_g (P R x)_g^T,
+        dR[g] = sum_t (P^T L^T P dy)_g x_g^T.
+
+    One grid pass over token tiles; dL/dR output blocks are revisited every
+    step and accumulated in place, the activation slab never leaves VMEM.
+    """
+    return _call_gs_bwd(L, R, x, dy, token_tile=token_tile,
+                        interpret=interpret, with_dx=True)
+
+
+def gs_fused_grads_pallas(L: Array, R: Array, x: Array, dy: Array, *,
+                          token_tile: int = 128, interpret: bool = False):
+    """Factor gradients only: (dL, dR) of <dy, P^T L P R x> — no dx slab
+    is computed or written (used by the gs_T VJP, which gets its dx from
+    the forward rotation of dy instead)."""
+    return _call_gs_bwd(L, R, x, dy, token_tile=token_tile,
+                        interpret=interpret, with_dx=False)

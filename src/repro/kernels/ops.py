@@ -6,18 +6,27 @@
              reference path is semantically identical (tests prove it).
   * True   — pl.pallas_call; on a non-TPU backend this transparently runs in
              interpret mode so examples/tests exercise the kernel body on CPU.
+
+Both paths are differentiable: the reference path via XLA autodiff, the
+Pallas path via the custom-VJP rules in dispatch.py (backward passes are
+Pallas kernels too, so ``jax.grad`` of a GSOFT loss never round-trips the
+activation slab through HBM more than once per direction).
+
+Launch geometry (token/group tiles) is resolved per (shape, dtype, backend)
+by ``dispatch.get_tuning`` — config overrides > autotuned > heuristic; pass
+``tuning=`` to pin a call site explicitly.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import ref
-from .bdmm import bdmm_pallas
+from . import dispatch, ref
+from .dispatch import Tuning
 from .flash_attention import flash_attention
-from .gs_fused import gs_fused_pallas
 from .ssd import ssd_pallas
 
 Array = jnp.ndarray
@@ -27,25 +36,52 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def bdmm(blocks: Array, x: Array, use_pallas: bool = False) -> Array:
+def bdmm(blocks: Array, x: Array, use_pallas: bool = False,
+         tuning: Optional[Tuning] = None) -> Array:
     """Block-diagonal matmul; supports leading batch dims on x."""
-    if not use_pallas:
-        lead = x.shape[:-1]
-        y = ref.bdmm_ref(blocks, x.reshape(-1, x.shape[-1]))
-        return y.reshape(lead + (y.shape[-1],))
-    lead = x.shape[:-1]
-    y = bdmm_pallas(blocks, x.reshape(-1, x.shape[-1]), interpret=_interpret())
-    return y.reshape(lead + (y.shape[-1],))
-
-
-def gs_transform(L: Array, R: Array, x: Array, use_pallas: bool = False) -> Array:
-    """y = P^T L P R x (GSOFT rotation) over the last dim of x."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if use_pallas:
-        y = gs_fused_pallas(L, R, x2, interpret=_interpret())
+        r, bo, bi = blocks.shape
+        tun = tuning or dispatch.get_tuning(dispatch.bdmm_key(r, bo, bi,
+                                                              x.dtype))
+        y = dispatch.bdmm_diff(tun, _interpret(), blocks, x2)
+    else:
+        y = ref.bdmm_ref(blocks, x2)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def _gs_2d(L: Array, x: Array):
+    r, b, _ = L.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    tun = dispatch.get_tuning(dispatch.gs_key(r, b, x.dtype))
+    return lead, x2, tun
+
+
+def gs_transform(L: Array, R: Array, x: Array, use_pallas: bool = False,
+                 tuning: Optional[Tuning] = None) -> Array:
+    """y = P^T L P R x (GSOFT rotation) over the last dim of x."""
+    lead, x2, tun = _gs_2d(L, x)
+    if use_pallas:
+        y = dispatch.gs_diff(tuning or tun, _interpret(), L, R, x2)
     else:
         y = ref.gs_fused_ref(L, R, x2)
+    return y.reshape(lead + (x.shape[-1],))
+
+
+def gs_transform_T(L: Array, R: Array, x: Array, use_pallas: bool = False,
+                   tuning: Optional[Tuning] = None) -> Array:
+    """y = R^T P^T L^T P x (transpose rotation Q^T x) over the last dim.
+
+    Used for activation-side adapters (x Q) and the output-side factor of
+    Double GSOFT (W Q).
+    """
+    lead, x2, tun = _gs_2d(L, x)
+    if use_pallas:
+        y = dispatch.gs_T_diff(tuning or tun, _interpret(), L, R, x2)
+    else:
+        y = ref.gs_fused_T_ref(L, R, x2)
     return y.reshape(lead + (x.shape[-1],))
 
 
@@ -63,14 +99,7 @@ def ssd(x: Array, loga: Array, B: Array, C: Array, chunk: int = 64,
         return ssd_pallas(x, loga, B, C, chunk=max(q, 1),
                           interpret=_interpret())
     return ref.ssd_chunked_ref(x, loga, B, C,
-                               chunk=_pick_chunk(x.shape[0], chunk))
-
-
-def _pick_chunk(t: int, chunk: int) -> int:
-    q = min(chunk, t)
-    while t % q:
-        q -= 1
-    return max(q, 1)
+                               chunk=dispatch.pick_chunk(x.shape[0], chunk))
 
 
 def flash_mha(q: Array, k: Array, v: Array, *, causal: bool = True,

@@ -40,6 +40,21 @@ def gs_fused_ref(L: Array, R: Array, x: Array) -> Array:
     return y
 
 
+def gs_fused_T_ref(L: Array, R: Array, x: Array) -> Array:
+    """Transpose GSOFT rotation  y = Q^T x = R^T P^T L^T P x.
+
+    The VJP of gs_fused_ref w.r.t. x; matches
+    core.gs.gs_apply_T(gsoft_layout(d, b), L, R, x).
+    """
+    r, b, _ = L.shape
+    t, d = x.shape
+    y = x.reshape(t, r, b).swapaxes(1, 2).reshape(t, d)   # P   (gather k=r)
+    y = bdmm_ref(jnp.swapaxes(L, -1, -2), y)              # L^T .
+    y = y.reshape(t, b, r).swapaxes(1, 2).reshape(t, d)   # P^T (gather k=b)
+    y = bdmm_ref(jnp.swapaxes(R, -1, -2), y)              # R^T .
+    return y
+
+
 def flash_ref(q: Array, k: Array, v: Array, causal: bool = True,
               scale: float = 0.0) -> Array:
     """Plain softmax attention oracle. q: (H, Sq, D); k, v: (H, Sk, D)."""

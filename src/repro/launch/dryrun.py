@@ -129,12 +129,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, peft: str = "gsoft",
 
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-        cost = compiled.cost_analysis() or {}
+        from repro.analysis.hlo_cost import module_cost, normalize_cost_analysis
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         mem = _mem_dict(compiled.memory_analysis())
         hlo = compiled.as_text()
         # trip-count-aware accounting (XLA's cost_analysis counts while
         # bodies once — see analysis/hlo_cost.py); raw numbers kept alongside
-        from repro.analysis.hlo_cost import module_cost
         walk = module_cost(hlo)
         if save_hlo:
             os.makedirs(RESULTS_DIR, exist_ok=True)

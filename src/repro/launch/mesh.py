@@ -6,8 +6,14 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_axes_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; meshes default to Auto axes
+    # there, so omitting the argument is equivalent on older versions.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,13 +21,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     multi-pod adds a leading pod axis (2 x 16 x 16 = 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_axes_mesh(shape, axes)
 
 
 def make_mesh(data: int, model: int, pods: int = 1):
     """Elastic variant: any (pods x data x model) that fits the device count
     (used by tests and by elastic-restart re-sharding)."""
     if pods > 1:
-        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+        return make_axes_mesh((pods, data, model), ("pod", "data", "model"))
+    return make_axes_mesh((data, model), ("data", "model"))

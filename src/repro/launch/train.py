@@ -61,7 +61,8 @@ def main():
         mesh = make_mesh(d, m)
 
     tcfg = TrainStepConfig(
-        peft=peft_lib.PEFTConfig(method=args.peft, block_size=args.block_size),
+        peft=peft_lib.PEFTConfig(method=args.peft, block_size=args.block_size,
+                                 use_pallas=cfg.use_pallas),
         opt=optim.OptimizerConfig(learning_rate=args.lr),
         num_microbatches=args.microbatches,
         schedule=schedules.warmup_cosine(args.warmup, args.steps),

@@ -22,6 +22,7 @@ from jax.sharding import Mesh
 from repro import optim
 from repro.config import ModelConfig
 from repro.core import peft as peft_lib
+from repro.kernels import dispatch as kernel_dispatch
 from repro.models import api
 from repro.models.layers import no_shard
 from repro.sharding.specs import ShardingRules
@@ -42,6 +43,18 @@ def _split_microbatches(batch: Tree, n: int) -> Tree:
         lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
 
 
+def _resolve_peft(cfg: ModelConfig, tcfg: TrainStepConfig) -> peft_lib.PEFTConfig:
+    """Sync the kernel path into the PEFT config and install any launch-
+    geometry overrides the model config carries: a model run with
+    ``use_pallas=True`` fine-tunes through the differentiable Pallas kernels
+    end-to-end (adapter materialization included)."""
+    kernel_dispatch.install_tunings(cfg.kernel_tunings)
+    peft_cfg = tcfg.peft
+    if cfg.use_pallas and peft_cfg.is_peft and not peft_cfg.use_pallas:
+        peft_cfg = dataclasses.replace(peft_cfg, use_pallas=True)
+    return peft_cfg
+
+
 def build_train_step(cfg: ModelConfig, tcfg: TrainStepConfig,
                      mesh: Optional[Mesh] = None,
                      batch_divisible: bool = True):
@@ -50,13 +63,14 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainStepConfig,
     trainable = params and frozen is an empty dict."""
     shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
              if mesh is not None else no_shard)
-    is_peft = tcfg.peft.is_peft
+    peft_cfg = _resolve_peft(cfg, tcfg)
+    is_peft = peft_cfg.is_peft
     n_micro = tcfg.num_microbatches
     schedule = tcfg.schedule or (lambda s: jnp.asarray(1.0, jnp.float32))
 
     def loss_fn(trainable, frozen, mb):
         if is_peft:
-            params = peft_lib.materialize_tree(tcfg.peft, frozen, trainable)
+            params = peft_lib.materialize_tree(peft_cfg, frozen, trainable)
         else:
             params = trainable
         loss, metrics = api.loss_fn(cfg, params, mb, shard)
@@ -99,10 +113,11 @@ def build_eval_step(cfg: ModelConfig, tcfg: TrainStepConfig,
                     mesh: Optional[Mesh] = None):
     shard = (ShardingRules(cfg, mesh).make_sharder() if mesh is not None
              else no_shard)
+    peft_cfg = _resolve_peft(cfg, tcfg)
 
     def eval_step(frozen, trainable, batch):
-        params = (peft_lib.materialize_tree(tcfg.peft, frozen, trainable)
-                  if tcfg.peft.is_peft else trainable)
+        params = (peft_lib.materialize_tree(peft_cfg, frozen, trainable)
+                  if peft_cfg.is_peft else trainable)
         _, metrics = api.loss_fn(cfg, params, batch, shard)
         return metrics
     return eval_step

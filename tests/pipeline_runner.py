@@ -8,13 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.mesh import make_axes_mesh
 from repro.sharding.pipeline import gpipe_forward, pipeline_bubble_fraction
 
 
 def main():
     nstage, nmb, mb, d = 4, 6, 2, 16
-    mesh = jax.make_mesh((nstage,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_axes_mesh((nstage,), ("pipe",))
     key = jax.random.PRNGKey(0)
     W = jax.random.normal(key, (nstage, d, d)) * (1.0 / np.sqrt(d))
     b = jax.random.normal(jax.random.fold_in(key, 1), (nstage, d)) * 0.1

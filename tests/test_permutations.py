@@ -1,6 +1,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import permutations as perm

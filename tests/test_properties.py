@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import adapters as ad
