@@ -13,12 +13,13 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-list of {table1,table2,table3,micro,kernels}")
+                    help="comma-list of {table1,table2,table3,micro,kernels,"
+                         "serve}")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     from . import table1_glue, table2_subject, table3_lipconvnet
-    from . import micro_gs, kernels_bench
+    from . import kernels_bench, micro_gs, serve_bench
 
     suites = [
         ("table1", table1_glue.run),
@@ -26,6 +27,7 @@ def main() -> None:
         ("table3", table3_lipconvnet.run),
         ("micro", micro_gs.run),
         ("kernels", kernels_bench.run),
+        ("serve", serve_bench.run),
     ]
     print("name,us_per_call,derived")
     t0 = time.time()

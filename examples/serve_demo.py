@@ -1,7 +1,12 @@
-"""Serving demo: GSOFT-adapted model, adapters MERGED offline (paper §6.1 —
-zero inference overhead), batched prefill + decode through the engine.
+"""Serving demo: continuous batching with a multi-adapter bank.
 
-    PYTHONPATH=src python examples/serve_demo.py [--arch qwen2-72b]
+Three tenants share one deployed base model: two fine-tuned GSOFT adapters
+("alice", "bob") plus the raw base model. Requests stream in Poisson-style,
+are admitted into decode slots as others finish, and every slot rotates its
+activations with ITS OWN adapter (x Q_adapter, O(b*d)/token) — no offline
+merge, no per-request weight copies. Compare with the merged static path:
+
+    PYTHONPATH=src python examples/serve_demo.py [--arch qwen2-72b] [--static]
 """
 import argparse
 import time
@@ -11,39 +16,58 @@ import numpy as np
 
 from repro.config import get_smoke_config
 from repro.core import peft as peft_lib
+from repro.launch.serve import make_demo_adapters
 from repro.models import api
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, StaticServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-72b")
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--static", action="store_true",
+                    help="merged single-adapter static engine (paper §6.1)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
 
-    # pretend we fine-tuned: random GSOFT adapters, merged before serving
+    # pretend we fine-tuned twice: two random GSOFT adapters
     pcfg = peft_lib.PEFTConfig(method="gsoft", block_size=8)
-    adapters = peft_lib.init_peft(pcfg, params, jax.random.PRNGKey(1))
-    adapters = jax.tree.map(  # (a constant shift would cancel in K = A - A^T)
-        lambda a: a + 0.1 * jax.random.normal(jax.random.PRNGKey(2), a.shape),
-        adapters)
+    adapters = make_demo_adapters(["alice", "bob"], params, pcfg)
 
-    eng = ServeEngine(cfg, params, max_batch=4, max_len=64,
-                      adapters=adapters, peft_cfg=pcfg)
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        eng.add_request(rng.integers(1, 200, size=rng.integers(4, 12)).tolist(),
-                        max_new_tokens=8)
-    t0 = time.perf_counter()
-    results = eng.run()
-    dt = time.perf_counter() - t0
-    print(f"{len(results)} requests, {eng.stats['tokens_generated']} tokens "
-          f"in {dt:.2f}s  ({eng.stats['tokens_generated']/dt:.1f} tok/s)")
-    for rid in sorted(results)[:3]:
-        print(f"  req {rid}: {results[rid]}")
+    if args.static:
+        # one adapter merged offline — every request gets "alice"
+        eng = StaticServeEngine(cfg, params, max_batch=4, max_len=64,
+                                adapters=adapters["alice"], peft_cfg=pcfg)
+        for _ in range(args.requests):
+            eng.add_request(
+                rng.integers(1, 200, size=rng.integers(4, 12)).tolist(),
+                max_new_tokens=int(rng.integers(2, 9)))
+        t0 = time.perf_counter()
+        results = eng.run()
+        dt = time.perf_counter() - t0
+    else:
+        bank = peft_lib.build_adapter_bank(pcfg, params, adapters)
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=64, bank=bank)
+        tenants = ["alice", "bob", None]          # None = base model slot 0
+        for i in range(args.requests):
+            eng.add_request(
+                rng.integers(1, 200, size=rng.integers(4, 12)).tolist(),
+                max_new_tokens=int(rng.integers(2, 9)),
+                adapter=tenants[i % len(tenants)])
+        t0 = time.perf_counter()
+        results = eng.run()
+        dt = time.perf_counter() - t0
+
+    toks = eng.stats["tokens_generated"]
+    print(f"{len(results)} requests, {toks} tokens in {dt:.2f}s  "
+          f"({toks / dt:.1f} tok/s, {eng.stats['decode_steps']} decode "
+          f"steps, {eng.stats['prefills']} prefills)")
+    for req in eng.finished[:6]:
+        who = req.adapter if getattr(req, "adapter", None) else "base"
+        print(f"  req {req.rid} [{who:6s}]: {req.output}")
 
 
 if __name__ == "__main__":

@@ -15,14 +15,21 @@ Fault-tolerance properties:
   * async mode snapshots to host memory and writes in a daemon thread so the
     train loop never blocks on the filesystem
   * keep-last-k GC
+
+Adapter banks: ``save_adapters`` / ``restore_adapters`` persist NAMED
+GSOFT adapter pytrees plus their ``PEFTConfig`` as index metadata, so
+``launch/serve.py --adapters name=dir`` can rebuild a serving AdapterBank
+without the original python objects (the index records adapter names and
+weight paths — restore needs no tree_like).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -139,3 +146,51 @@ class CheckpointManager:
         d = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(d, "index.json")) as f:
             return json.load(f).get("extra", {})
+
+    # -- named adapter banks --------------------------------------------------
+    def save_adapters(self, step: int,
+                      adapters_by_name: Dict[str, Dict[str, Dict[str, Any]]],
+                      peft_cfg, blocking: bool = True) -> None:
+        """Save named adapters {name: {weight_path: {param: arr}}} plus the
+        PEFTConfig (index metadata) — the serving bank format."""
+        extra = {
+            "kind": "adapter_bank",
+            "peft": dataclasses.asdict(peft_cfg),
+            "adapter_names": list(adapters_by_name),
+            "weight_paths": sorted({p for ad in adapters_by_name.values()
+                                    for p in ad}),
+        }
+        self.save(step, dict(adapters_by_name), blocking=blocking,
+                  extra=extra)
+
+    def restore_adapters(self, step: Optional[int] = None
+                         ) -> Tuple[Dict[str, Dict[str, Dict[str, Any]]], Any]:
+        """-> (adapters_by_name, PEFTConfig) from a ``save_adapters``
+        checkpoint. Self-describing: names/paths come from the index."""
+        from repro.core.peft import PEFTConfig
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "index.json")) as f:
+            index = json.load(f)
+        ex = index.get("extra", {})
+        if ex.get("kind") != "adapter_bank":
+            raise ValueError(f"{d} is not an adapter-bank checkpoint "
+                             f"(kind={ex.get('kind')!r})")
+        pd = dict(ex["peft"])
+        pd["target_patterns"] = tuple(pd.get("target_patterns", ()))
+        peft_cfg = PEFTConfig(**pd)
+        flat = {k: np.load(os.path.join(d, k + ".npy"))
+                for k in index["leaves"]}
+        out: Dict[str, Dict[str, Dict[str, Any]]] = {}
+        for name in ex["adapter_names"]:
+            tree: Dict[str, Dict[str, Any]] = {}
+            for path in ex["weight_paths"]:
+                prefix = f"{name}{_SEP}{path.replace('/', _SEP)}{_SEP}"
+                entry = {k[len(prefix):]: jax.numpy.asarray(v)
+                         for k, v in flat.items() if k.startswith(prefix)}
+                if entry:
+                    tree[path] = entry
+            out[name] = tree
+        return out, peft_cfg

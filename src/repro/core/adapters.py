@@ -275,3 +275,22 @@ def apply_activation_side(spec: AdapterSpec, params: Params, x: Array) -> Array:
         Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)
         return block_diag_matmul(jnp.swapaxes(Q, -1, -2), x)
     raise ValueError(f"activation-side not defined for {spec.method}")
+
+
+def gs_rotate_banked(L_rot: Array, R_rot: Array, ids: Array, x: Array,
+                     use_pallas: bool = False) -> Array:
+    """Per-row-indexed activation-side GSOFT: row i of x gets x_i Q_{ids[i]}.
+
+    L_rot, R_rot: (A, r, b, b) PRE-ORTHOGONALIZED blocks (the Cayley map is
+    applied once at bank-build time — adapters are frozen when serving),
+    stacked over A bank slots; slot 0 is the identity. Any scan-stacked
+    layer dims have already been sliced off by the model's layer scan.
+    ids: (B,) int32 slot per batch row; x: (B, T, d).
+
+    Cost is O(B*T*b*d) — the same per-token scaling argument that makes GS
+    rotations serviceable per-request where a dense OFT rotation (O(d^2))
+    would not be.
+    """
+    L = jnp.take(L_rot, ids, axis=0).astype(x.dtype)      # (B, r, b, b)
+    R = jnp.take(R_rot, ids, axis=0).astype(x.dtype)
+    return kernel_ops.gs_banked_transform_T(L, R, x, use_pallas=use_pallas)

@@ -22,7 +22,10 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .adapters import AdapterSpec, init_adapter, materialize, num_adapter_params
+from .adapters import (AdapterSpec, gs_rotate_banked, init_adapter,
+                       materialize, num_adapter_params)
+from .gs import gsoft_layout
+from .orthogonal import cayley, skew
 
 Array = jnp.ndarray
 Tree = Any
@@ -153,6 +156,123 @@ def merge_tree(cfg: PEFTConfig, params: Tree,
                adapters: Dict[str, Dict[str, Array]]) -> Tree:
     """Offline merge for serving — identical math, applied once."""
     return materialize_tree(cfg, params, adapters)
+
+
+# ---------------------------------------------------------------------------
+# adapter bank: N named GSOFT adapters + identity slot, per-request serving
+# ---------------------------------------------------------------------------
+
+BASE_ADAPTER = "__base__"
+
+
+@dataclasses.dataclass
+class AdapterBank:
+    """Stacked per-request GSOFT rotations for multi-adapter serving.
+
+    ``tree`` mirrors the params nesting: each adapted weight path maps to
+    ``{"L": (..., A, r, b, b), "R": ...}`` of PRE-ORTHOGONALIZED blocks
+    (the Cayley map runs once at build time — adapters are frozen when
+    serving). Slot 0 is the identity (serves the unmodified base model);
+    slots 1..N are the named adapters in ``names`` order. Scan-stacked
+    layer dims stay LEADING (before the A axis) so the model's layer scan
+    slices the bank alongside the weights.
+
+    The serving engine applies the bank activation-side — row i of a decode
+    batch computes x_i Q_{ids[i]} before each adapted matmul, costing
+    O(b*d) per token per weight versus O(d^2) to re-merge a dense rotation;
+    that asymmetry is what makes per-request orthogonal adapters viable at
+    continuous-batching granularity.
+    """
+    cfg: PEFTConfig
+    names: Tuple[str, ...]           # names[0] == BASE_ADAPTER
+    tree: Dict[str, Any]
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.names)
+
+    def slot(self, name: Optional[str]) -> int:
+        """Bank slot for an adapter name (None / BASE_ADAPTER -> identity)."""
+        if name is None:
+            return 0
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(f"unknown adapter '{name}'; bank has "
+                           f"{list(self.names)}") from None
+
+
+def _nest_insert(root: Dict[str, Any], path: str, value: Any) -> None:
+    parts = path.split("/")
+    node = root
+    for seg in parts[:-1]:
+        node = node.setdefault(seg, {})
+    node[parts[-1]] = value
+
+
+def build_adapter_bank(cfg: PEFTConfig, params: Tree,
+                       adapters_by_name: Dict[str, Dict[str, Dict[str, Array]]]
+                       ) -> AdapterBank:
+    """Build an AdapterBank from named adapter trees (as from ``init_peft``).
+
+    Orthogonalizes every block up front and stacks [identity] + adapters
+    along a new A axis placed after any scan-stacked weight batch dims.
+    """
+    if cfg.method != "gsoft":
+        raise ValueError("adapter bank supports method='gsoft' only "
+                         f"(got {cfg.method!r}); double_gsoft needs an "
+                         "output-side hook and LoRA is not orthogonal")
+    if cfg.use_scale:
+        raise ValueError("adapter bank does not support use_scale "
+                         "(the per-output magnitude acts on the weight "
+                         "output, not the rotated input)")
+    specs = adapted_paths(cfg, params)
+    names = (BASE_ADAPTER,) + tuple(adapters_by_name)
+    tree: Dict[str, Any] = {}
+    for path, spec in sorted(specs.items()):
+        if len(spec.batch) > 1:
+            raise ValueError(
+                f"adapter bank cannot serve {path}: weights with batch dims "
+                f"{spec.batch} (MoE experts / hybrid blocks) need "
+                "routing-aware rotation")
+        b = spec.resolved_block(spec.d_in, spec.block_size)
+        lay = gsoft_layout(spec.d_in, b)
+        eye = jnp.broadcast_to(
+            jnp.eye(b, dtype=jnp.float32),
+            tuple(spec.batch) + lay.lspec.param_shape)
+        stacks: Dict[str, list] = {"L": [eye], "R": [eye]}
+        for name, adapters in adapters_by_name.items():
+            if path not in adapters:
+                raise KeyError(f"adapter '{name}' has no params for {path}")
+            for pkey in ("L", "R"):
+                k = adapters[path][pkey].astype(jnp.float32)
+                stacks[pkey].append(
+                    cayley(skew(k), neumann_order=cfg.neumann_order))
+        entry = {k: jnp.stack(v, axis=len(spec.batch))
+                 for k, v in stacks.items()}
+        _nest_insert(tree, path, entry)
+    return AdapterBank(cfg=cfg, names=names, tree=tree)
+
+
+def bank_group_rotator(cfg: Optional[PEFTConfig], group: Optional[Dict],
+                       ids: Optional[Array]):
+    """Rotation callback ``rot(name, x)`` over one bank subtree.
+
+    ``group`` is the (scan-sliced) bank subtree for one module, e.g.
+    ``{"wq": {"L": (A, r, b, b), "R": ...}, ...}``; ``ids`` the (B,) slot
+    array. Returns None when there is nothing to rotate, so model code can
+    pass it straight through to attention_block/apply_mlp.
+    """
+    if group is None or ids is None:
+        return None
+
+    def rot(name: str, x: Array) -> Array:
+        entry = group.get(name)
+        if entry is None:
+            return x
+        return gs_rotate_banked(entry["L"], entry["R"], ids, x,
+                                use_pallas=cfg.use_pallas if cfg else False)
+    return rot
 
 
 def count_params(tree: Tree) -> int:

@@ -85,6 +85,43 @@ def gs_transform_T(L: Array, R: Array, x: Array, use_pallas: bool = False,
     return y.reshape(lead + (x.shape[-1],))
 
 
+def bdmm_banked(blocks: Array, x: Array, use_pallas: bool = False,
+                tuning: Optional[Tuning] = None) -> Array:
+    """Per-row block-diagonal matmul: blocks (B, r, bo, bi), x (B, T, r*bi).
+
+    Row i uses its own block set — the serving-side primitive behind
+    per-request adapter rotations. The Pallas path vmaps the bdmm kernel
+    over the row axis (one grid dim per row)."""
+    if use_pallas:
+        _, r, bo, bi = blocks.shape
+        tun = tuning or dispatch.get_tuning(dispatch.bdmm_key(r, bo, bi,
+                                                              x.dtype))
+        interp = _interpret()
+        return jax.vmap(
+            lambda bb, xx: dispatch.bdmm_diff(tun, interp, bb, xx))(blocks, x)
+    return ref.bdmm_banked_ref(blocks, x)
+
+
+def gs_banked_transform_T(L: Array, R: Array, x: Array,
+                          use_pallas: bool = False,
+                          tuning: Optional[Tuning] = None) -> Array:
+    """Per-row transpose GSOFT rotation y[i] = Q_i^T x[i] (= x[i] Q_i as a
+    row vector), Q_i = P^T L_i P R_i.
+
+    L, R: (B, r, b, b) pre-gathered per-row orthogonal blocks; x: (B, T, d).
+    This is the continuous-batching engine's multi-adapter hot path: each
+    decode slot rotates its activations with its own adapter at O(b*d) per
+    token instead of re-merging an O(d^2) weight set per request."""
+    if use_pallas:
+        _, r, b, _bb = L.shape
+        tun = tuning or dispatch.get_tuning(dispatch.gs_key(r, b, x.dtype))
+        interp = _interpret()
+        return jax.vmap(
+            lambda l, rr, xx: dispatch.gs_T_diff(tun, interp, l, rr, xx))(
+                L, R, x)
+    return ref.gs_banked_T_ref(L, R, x)
+
+
 def ssd(x: Array, loga: Array, B: Array, C: Array, chunk: int = 64,
         use_pallas: bool = False) -> Array:
     """Mamba2 SSD scan. Accepts (T,H,P) or batched (N,T,H,P) inputs."""

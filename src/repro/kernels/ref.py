@@ -25,6 +25,37 @@ def bdmm_ref(blocks: Array, x: Array) -> Array:
     return yg.reshape(t, r * b_out).astype(x.dtype)
 
 
+def bdmm_banked_ref(blocks: Array, x: Array) -> Array:
+    """Per-row block-diagonal matmul (multi-adapter serving).
+
+    blocks: (B, r, b_out, b_in);  x: (B, T, r * b_in)  ->  (B, T, r * b_out)
+    Row i of the batch uses its own block set blocks[i] — the reference for
+    the "gather adapter blocks -> batched bdmm" serving path.
+    """
+    bsz, r, b_out, b_in = blocks.shape
+    t = x.shape[1]
+    xg = x.reshape(bsz, t, r, b_in)
+    yg = jnp.einsum("zgij,ztgj->ztgi", blocks.astype(jnp.float32),
+                    xg.astype(jnp.float32))
+    return yg.reshape(bsz, t, r * b_out).astype(x.dtype)
+
+
+def gs_banked_T_ref(L: Array, R: Array, x: Array) -> Array:
+    """Per-row transpose GSOFT rotation  y[i] = R_i^T P^T L_i^T P x[i].
+
+    L, R: (B, r, b, b); x: (B, T, d) with d = r*b. Row i applies Q_i^T with
+    Q_i = P^T L_i P R_i — the activation-side form x Q_i used when each
+    request in a decode batch carries a different GS adapter.
+    """
+    bsz, r, b, _ = L.shape
+    t, d = x.shape[1], x.shape[2]
+    y = x.reshape(bsz, t, r, b).swapaxes(2, 3).reshape(bsz, t, d)   # P
+    y = bdmm_banked_ref(jnp.swapaxes(L, -1, -2), y)                 # L^T .
+    y = y.reshape(bsz, t, b, r).swapaxes(2, 3).reshape(bsz, t, d)   # P^T
+    y = bdmm_banked_ref(jnp.swapaxes(R, -1, -2), y)                 # R^T .
+    return y
+
+
 def gs_fused_ref(L: Array, R: Array, x: Array) -> Array:
     """Fused GSOFT transform  y = P^T L P R x  with P = P_(r, d).
 

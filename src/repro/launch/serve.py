@@ -1,7 +1,23 @@
-"""Serving launcher: batched engine over a (smoke or full) config.
+"""Serving launcher: continuous-batching (default) or static engine over a
+(smoke or full) config, with streaming Poisson arrivals and a per-request
+adapter bank.
 
+    # continuous batching, mixed-length synthetic traffic
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
-        --requests 16 --prompt-len 12 --max-new 8
+        --requests 16 --prompt-len 12 --max-new 8 --mixed-lengths
+
+    # streaming arrivals at 4 req/s
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+        --requests 16 --arrival-rate 4
+
+    # multi-adapter serving from saved banks (see CheckpointManager
+    # .save_adapters); requests round-robin over the loaded adapters
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+        --adapters alice=/ckpts/alice bob=/ckpts/bob
+
+    # fabricate a demo bank, save it, and round-trip through the loader
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+        --demo-adapters 3 --save-adapters /tmp/bank
 """
 from __future__ import annotations
 
@@ -11,25 +27,109 @@ import time
 import jax
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.config import get_config, get_smoke_config, parse_overrides
 from repro.core import peft as peft_lib
 from repro.launch.mesh import make_mesh
 from repro.models import api
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import (ServeEngine, StaticServeEngine,
+                                latency_percentiles)
+
+
+def load_adapter_bank(entries):
+    """``entries``: ["name=ckpt_dir" | "ckpt_dir"] -> (adapters_by_name,
+    PEFTConfig). A bare dir loads every adapter in that bank; ``name=dir``
+    picks one."""
+    adapters_by_name = {}
+    peft_cfg = None
+    for entry in entries:
+        name, _, path = entry.rpartition("=")
+        loaded, cfg = CheckpointManager(path).restore_adapters()
+        if peft_cfg is not None and cfg != peft_cfg:
+            raise ValueError(f"adapter {entry}: PEFTConfig mismatch "
+                             f"({cfg} != {peft_cfg})")
+        peft_cfg = cfg
+        if name:  # name=dir form: pick one adapter out of the bank
+            if name not in loaded:
+                raise KeyError(f"{path} has adapters {list(loaded)}, "
+                               f"not {name!r}")
+            adapters_by_name[name] = loaded[name]
+        else:     # bare dir: load every adapter it holds
+            adapters_by_name.update(loaded)
+    return adapters_by_name, peft_cfg
+
+
+def make_demo_adapters(names, params, peft_cfg, seed=1, scale=0.1):
+    """Random (non-identity) GSOFT adapters, one per name; an int n means
+    names a0..a{n-1}. Stands in for real fine-tunes in demos/benchmarks."""
+    if isinstance(names, int):
+        names = [f"a{i}" for i in range(names)]
+    out = {}
+    for i, name in enumerate(names):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        ad = peft_lib.init_peft(peft_cfg, params, key)
+        out[name] = jax.tree.map(
+            lambda a, k=key: a + scale * jax.random.normal(
+                jax.random.fold_in(k, 7), a.shape), ad)
+    return out
+
+
+def drive_streaming(eng: ServeEngine, requests, arrivals):
+    """Admit requests as they 'arrive' (Poisson sim) while stepping the
+    continuous scheduler; returns results once traffic drains."""
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(requests) or not eng.idle:
+        now = time.perf_counter() - t0
+        while i < len(requests) and arrivals[i] <= now:
+            eng.add_request(**requests[i])
+            i += 1
+        if eng.idle:                     # nothing in flight: wait for traffic
+            time.sleep(min(0.005, max(arrivals[i] - now, 0.0)))
+            continue
+        eng.step()
+    eng.stats["wall_s"] += time.perf_counter() - t0
+    return {r.rid: r.output for r in eng.finished}
+
+
+def describe(eng, results, engine_name, dt):
+    toks = eng.stats["tokens_generated"]
+    lat = latency_percentiles(eng.finished)
+    print(f"[{engine_name}] served {len(results)} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s, "
+          f"{eng.stats['decode_steps']} decode steps, "
+          f"{eng.stats['prefills']} prefills)")
+    print(f"latency p50={lat[50] * 1e3:.0f}ms p95={lat[95] * 1e3:.0f}ms")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="prompt lens U[4, prompt_len], budgets U[2, max_new]"
+                         " — the ragged workload continuous batching wins on")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals (req/s); 0 = all queued up front")
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--adapters", nargs="*", default=[],
+                    metavar="NAME=CKPT_DIR",
+                    help="load named adapters into a per-request bank "
+                         "(continuous engine only)")
+    ap.add_argument("--demo-adapters", type=int, default=0,
+                    help="fabricate N random adapters as a demo bank")
+    ap.add_argument("--save-adapters", default=None,
+                    help="save the (demo) bank to this checkpoint dir and "
+                         "reload it through the round-trip path")
     ap.add_argument("--peft-demo", action="store_true",
-                    help="attach + merge GSOFT adapters before serving "
-                         "(paper: zero inference overhead)")
+                    help="attach + merge one GSOFT adapter into the weights "
+                         "before serving (paper §6.1: zero overhead)")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -41,26 +141,87 @@ def main():
         mesh = make_mesh(d, m)
 
     params = api.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = cfg.frontend_tokens + args.prompt_len + args.max_new + 8
+
+    # ---- adapter bank ------------------------------------------------------
+    bank = None
+    adapters_by_name = {}
+    if args.adapters and args.demo_adapters:
+        raise SystemExit("--adapters and --demo-adapters are exclusive: "
+                         "load a saved bank OR fabricate one")
+    if args.save_adapters and not (args.adapters or args.demo_adapters):
+        raise SystemExit("--save-adapters needs a bank to save: pass "
+                         "--demo-adapters N or --adapters name=dir")
+    if args.peft_demo and (args.adapters or args.demo_adapters):
+        raise SystemExit("--peft-demo merges an adapter INTO the weights; "
+                         "combining it with a per-request bank would rotate "
+                         "already-rotated activations — pick one")
+    if args.adapters or args.demo_adapters:
+        bank_cfg = peft_lib.PEFTConfig(method="gsoft", block_size=8,
+                                       use_pallas=cfg.use_pallas)
+        if args.demo_adapters:
+            adapters_by_name = make_demo_adapters(args.demo_adapters, params,
+                                                  bank_cfg)
+        else:
+            adapters_by_name, bank_cfg = load_adapter_bank(args.adapters)
+        if args.save_adapters:
+            mgr = CheckpointManager(args.save_adapters)
+            mgr.save_adapters(0, adapters_by_name, bank_cfg)
+            adapters_by_name, bank_cfg = mgr.restore_adapters()
+            print(f"round-tripped {list(adapters_by_name)} through "
+                  f"{args.save_adapters}")
+        bank = peft_lib.build_adapter_bank(bank_cfg, params, adapters_by_name)
+        print(f"adapter bank: {bank.num_slots} slots {list(bank.names)}")
+
+    # ---- merged single-adapter demo (static story) -------------------------
     adapters = peft_cfg = None
     if args.peft_demo:
         peft_cfg = peft_lib.PEFTConfig(method="gsoft", block_size=8)
         adapters = peft_lib.init_peft(peft_cfg, params, jax.random.PRNGKey(1))
 
-    eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      max_len=args.prompt_len + args.max_new + 8,
-                      mesh=mesh, adapters=adapters, peft_cfg=peft_cfg)
+    if args.engine == "static":
+        if bank is not None:
+            raise SystemExit("--adapters needs --engine continuous "
+                             "(static serving merges ONE adapter offline)")
+        eng = StaticServeEngine(cfg, params, max_batch=args.max_batch,
+                                max_len=max_len, mesh=mesh,
+                                adapters=adapters, peft_cfg=peft_cfg)
+    else:
+        eng = ServeEngine(cfg, params, max_batch=args.max_batch,
+                          max_len=max_len, mesh=mesh, adapters=adapters,
+                          peft_cfg=peft_cfg, bank=bank)
+
+    # ---- synthetic traffic -------------------------------------------------
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        prompt = rng.integers(1, min(cfg.vocab_size, 255),
-                              size=args.prompt_len).tolist()
-        eng.add_request(prompt, max_new_tokens=args.max_new)
+    names = list(adapters_by_name) if bank is not None else [None]
+    requests = []
+    for i in range(args.requests):
+        plen = (int(rng.integers(4, args.prompt_len + 1))
+                if args.mixed_lengths else args.prompt_len)
+        mnew = (int(rng.integers(2, args.max_new + 1))
+                if args.mixed_lengths else args.max_new)
+        req = {"prompt": rng.integers(1, min(cfg.vocab_size, 255),
+                                      size=plen).tolist(),
+               "max_new_tokens": mnew}
+        if bank is not None:
+            req["adapter"] = names[i % len(names)]
+        requests.append(req)
+
     t0 = time.perf_counter()
-    results = eng.run()
+    if args.arrival_rate > 0 and args.engine == "continuous":
+        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                             size=args.requests))
+        results = drive_streaming(eng, requests, arrivals)
+    else:
+        if args.arrival_rate > 0:
+            print("note: static engine ignores arrival times "
+                  "(drain-queue batching)")
+        for req in requests:
+            eng.add_request(**req)
+        results = eng.run()
     dt = time.perf_counter() - t0
-    toks = eng.stats["tokens_generated"]
-    print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / max(dt, 1e-9):.1f} tok/s, "
-          f"{eng.stats['decode_steps']} decode steps)")
+
+    describe(eng, results, args.engine, dt)
     sample = results[min(results)]
     print("sample output tokens:", sample[:16])
     return 0

@@ -49,14 +49,23 @@ def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         lambda: init_decode_state(cfg, batch, max_len, enc_len))
 
 
-def prefill(cfg: ModelConfig, params, batch, state, shard=no_shard):
+def prefill(cfg: ModelConfig, params, batch, state, shard=no_shard,
+            last_idx=None, bank=None, adapter_ids=None, bank_cfg=None):
+    """``last_idx`` gathers each row's logits at its own last valid prompt
+    position (ragged-prompt fix); ``bank``/``adapter_ids``/``bank_cfg``
+    apply per-request GS adapter rotations (multi-adapter serving)."""
     return (encdec.prefill if _is_encdec(cfg) else transformer.prefill)(
-        cfg, params, batch, state, shard)
+        cfg, params, batch, state, shard, last_idx=last_idx, bank=bank,
+        adapter_ids=adapter_ids, bank_cfg=bank_cfg)
 
 
-def decode_step(cfg: ModelConfig, params, tokens, state, pos, shard=no_shard):
+def decode_step(cfg: ModelConfig, params, tokens, state, pos, shard=no_shard,
+                bank=None, adapter_ids=None, bank_cfg=None):
+    """``pos`` may be a scalar (lockstep batch) or an int32 (B,) array of
+    per-slot write positions (continuous batching)."""
     return (encdec.decode_step if _is_encdec(cfg) else transformer.decode_step)(
-        cfg, params, tokens, state, pos, shard)
+        cfg, params, tokens, state, pos, shard, bank=bank,
+        adapter_ids=adapter_ids, bank_cfg=bank_cfg)
 
 
 def param_count(cfg: ModelConfig) -> int:

@@ -161,27 +161,40 @@ def attention_block(p: Dict[str, Array], x: Array, cfg: ModelConfig, *,
                     cache_pos: Optional[Array] = None,
                     causal: bool = True,
                     use_rope: bool = True,
-                    shard: Shard = no_shard) -> Tuple[Array, Optional[Dict]]:
+                    shard: Shard = no_shard,
+                    rot: Optional[Callable[[str, Array], Array]] = None,
+                    ) -> Tuple[Array, Optional[Dict]]:
     """Self/cross attention with optional KV cache.
+
+    ``rot(name, x)`` optionally rotates the input activations of projection
+    ``name`` (wq/wk/wv/wo) — the activation-side GSOFT path used by the
+    multi-adapter serving engine (x Q instead of merging Q into W).
 
     * training / prefill: cache=None or cache written from scratch
     * decode: x is (B, 1, D), cache holds (B, S, K, D), cache_pos = write idx
+      — a scalar (lockstep batch) or an int32 (B,) array of per-row write
+      positions (continuous batching: each slot carries its own counter)
     Returns (output, new_cache).
     """
     b, sq, _ = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
     src = x if kv_x is None else kv_x
-    q = _proj(x, p["wq"], p.get("bq")).reshape(b, sq, H, hd)
-    k = _proj(src, p["wk"], p.get("bk")).reshape(b, src.shape[1], K, hd)
-    v = _proj(src, p["wv"], p.get("bv")).reshape(b, src.shape[1], K, hd)
+    rot = rot or (lambda name, t: t)
+    q = _proj(rot("wq", x), p["wq"], p.get("bq")).reshape(b, sq, H, hd)
+    k = _proj(rot("wk", src), p["wk"], p.get("bk")).reshape(b, src.shape[1], K, hd)
+    v = _proj(rot("wv", src), p["wv"], p.get("bv")).reshape(b, src.shape[1], K, hd)
     q = shard(q, "act_heads")
     k = shard(k, "act_kv_heads")
     v = shard(v, "act_kv_heads")
 
+    if cache_pos is not None:
+        cache_pos = jnp.asarray(cache_pos, jnp.int32)
+    per_row = cache_pos is not None and cache_pos.ndim == 1
     if positions is None:
         positions = _positions(b, sq)
         if cache_pos is not None:
-            positions = positions + cache_pos
+            positions = positions + (cache_pos[:, None] if per_row
+                                     else cache_pos)
     if use_rope and kv_x is None:
         # self-attention: new K entries share the query positions (decode
         # writes exactly one key at position cache_pos == positions[:, 0])
@@ -192,10 +205,18 @@ def attention_block(p: Dict[str, Array], x: Array, cfg: ModelConfig, *,
     new_cache = None
     if cache is not None and cache_pos is not None and sq == 1:
         # decode: write this step's K/V, attend over the filled prefix
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, cache_pos, 0, 0))
+        if per_row:
+            # per-slot write index: vmap the row update (lowered as scatter)
+            upd = jax.vmap(
+                lambda c, new, pp: jax.lax.dynamic_update_slice(
+                    c, new, (pp, 0, 0)))
+            ck = upd(cache["k"], k.astype(cache["k"].dtype), cache_pos)
+            cv = upd(cache["v"], v.astype(cache["v"].dtype), cache_pos)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
         new_cache = {"k": ck, "v": cv}
         out = online_attention(q, ck, cv, positions, 0, cache_pos + 1,
                                causal=False, chunk=cfg.attn_chunk, scale=scale)
@@ -214,7 +235,7 @@ def attention_block(p: Dict[str, Array], x: Array, cfg: ModelConfig, *,
                                    causal=causal, chunk=cfg.attn_chunk,
                                    scale=scale)
     out = out.reshape(b, sq, H * hd)
-    return shard(out @ p["wo"], "act_d"), new_cache
+    return shard(rot("wo", out) @ p["wo"], "act_d"), new_cache
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,

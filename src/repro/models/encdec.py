@@ -18,7 +18,7 @@ from .attention import attention_block, init_attention, init_cache, online_atten
 from .layers import (Shard, apply_mlp, cross_entropy, embed_init,
                      init_stacked_mlp, no_shard, rms_norm, softcap,
                      stacked_dense_init)
-from .transformer import MOE_AUX_COEF, _remat
+from .transformer import MOE_AUX_COEF, _gather_last, _remat
 
 Array = jnp.ndarray
 
@@ -137,18 +137,24 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(cfg: ModelConfig, params, batch: Dict[str, Array], state,
-            shard: Shard = no_shard):
+            shard: Shard = no_shard, last_idx=None, bank=None,
+            adapter_ids=None, bank_cfg=None):
+    if bank is not None:
+        raise ValueError("adapter bank serving not supported for encdec")
     enc_out = encode(cfg, params, batch["frames"], shard)
     h = jnp.take(params["embed"]["table"], batch["tokens"], axis=0
                  ).astype(cfg.act_dtype)
     h, new_kv = _decoder_pass(cfg, params, shard(h, "act_btd"), enc_out,
                               shard, cache=state["kv"])
-    logits = _unembed(cfg, params, h[:, -1:], shard)
+    logits = _unembed(cfg, params, _gather_last(h, last_idx), shard)
     return logits, {"kv": new_kv, "enc_out": enc_out}
 
 
 def decode_step(cfg: ModelConfig, params, tokens: Array, state, pos,
-                shard: Shard = no_shard):
+                shard: Shard = no_shard, bank=None, adapter_ids=None,
+                bank_cfg=None):
+    if bank is not None:
+        raise ValueError("adapter bank serving not supported for encdec")
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.act_dtype)
     h = shard(h, "act_btd")
     h, new_kv = _decoder_pass(cfg, params, h, state["enc_out"], shard,

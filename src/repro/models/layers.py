@@ -112,17 +112,22 @@ def init_stacked_mlp(key, n: int, d: int, f: int, mlp_type: str, dtype):
 
 
 def apply_mlp(p: Dict[str, Array], x: Array, mlp_type: str,
-              shard: Shard = no_shard) -> Array:
-    h = shard(x @ p["wi"], "act_ff")
+              shard: Shard = no_shard,
+              rot: Optional[Callable[[str, Array], Array]] = None) -> Array:
+    """``rot(name, x)`` optionally rotates the inputs of projection ``name``
+    (wi/wg/wo) — activation-side GSOFT for per-request adapters."""
+    rot = rot or (lambda name, t: t)
+    h = shard(rot("wi", x) @ p["wi"], "act_ff")
     if mlp_type == "swiglu":
-        h = jax.nn.silu(shard(x @ p["wg"], "act_ff")) * h
+        h = jax.nn.silu(shard(rot("wg", x) @ p["wg"], "act_ff")) * h
     elif mlp_type == "geglu":
-        h = jax.nn.gelu(shard(x @ p["wg"], "act_ff"), approximate=True) * h
+        h = jax.nn.gelu(shard(rot("wg", x) @ p["wg"], "act_ff"),
+                        approximate=True) * h
     elif mlp_type == "gelu":
         h = jax.nn.gelu(h, approximate=True)
     else:
         raise ValueError(mlp_type)
-    return shard(h @ p["wo"], "act_d")
+    return shard(rot("wo", h) @ p["wo"], "act_d")
 
 
 # ---------------------------------------------------------------------------

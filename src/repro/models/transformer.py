@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.core.peft import bank_group_rotator
 from .attention import attention_block, init_attention, init_cache
 from .layers import (Shard, apply_mlp, cross_entropy, embed_init, init_mlp,
                      init_stacked_mlp, no_shard, rms_norm, softcap,
@@ -119,17 +120,19 @@ def _walk(tree):
 # ---------------------------------------------------------------------------
 
 def _decoder_layer(cfg: ModelConfig, lp, h: Array, shard: Shard,
-                   cache=None, cache_pos=None):
+                   cache=None, cache_pos=None, rot_attn=None, rot_mlp=None):
     a, new_cache = attention_block(
         lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps), cfg,
-        cache=cache, cache_pos=cache_pos, causal=True, shard=shard)
+        cache=cache, cache_pos=cache_pos, causal=True, shard=shard,
+        rot=rot_attn)
     h = h + a
     hin = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
     if "moe" in lp:
         m, aux = moe_layer(lp["moe"], hin, cfg, shard,
                            segment=cfg.moe_segment)
     else:
-        m, aux = apply_mlp(lp["mlp"], hin, cfg.mlp_type, shard), jnp.zeros((), jnp.float32)
+        m, aux = apply_mlp(lp["mlp"], hin, cfg.mlp_type, shard,
+                           rot=rot_mlp), jnp.zeros((), jnp.float32)
     return h + m, aux, new_cache
 
 
@@ -264,19 +267,44 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def decode_step(cfg: ModelConfig, params, tokens: Array, state,
-                pos, shard: Shard = no_shard):
+                pos, shard: Shard = no_shard, bank=None, adapter_ids=None,
+                bank_cfg=None):
     """One token for the whole batch. tokens: (B, 1); pos: scalar int32
-    (current write index). Returns (logits (B, 1, Vp), new_state)."""
+    (current write index) or an int32 (B,) array of per-slot positions
+    (continuous batching). Returns (logits (B, 1, Vp), new_state).
+
+    ``bank``/``adapter_ids``/``bank_cfg``: per-request GS adapter bank
+    (AdapterBank.tree / (B,) slot ids / the bank's PEFTConfig) — row i
+    rotates its activations with adapter ``adapter_ids[i]`` before every
+    adapted projection (activation-side x Q; slot 0 is the identity).
+    """
     h = _embed(cfg, params, tokens, shard)
 
     if cfg.family in ("decoder", "vlm"):
-        def body(hc, xs):
-            lp, cache = xs
-            hc, _, new_cache = _decoder_layer(cfg, lp, hc, shard,
-                                              cache=cache, cache_pos=pos)
-            return hc, new_cache
-        h, new_kv = jax.lax.scan(body, h, (params["layers"], state["kv"]))
+        bl_tree = bank.get("layers") if bank is not None else None
+        if bl_tree is not None:
+            def body(hc, xs):
+                lp, cache, bl = xs
+                hc, _, new_cache = _decoder_layer(
+                    cfg, lp, hc, shard, cache=cache, cache_pos=pos,
+                    rot_attn=bank_group_rotator(bank_cfg, bl.get("attn"),
+                                                adapter_ids),
+                    rot_mlp=bank_group_rotator(bank_cfg, bl.get("mlp"),
+                                               adapter_ids))
+                return hc, new_cache
+            h, new_kv = jax.lax.scan(
+                body, h, (params["layers"], state["kv"], bl_tree))
+        else:
+            def body(hc, xs):
+                lp, cache = xs
+                hc, _, new_cache = _decoder_layer(cfg, lp, hc, shard,
+                                                  cache=cache, cache_pos=pos)
+                return hc, new_cache
+            h, new_kv = jax.lax.scan(body, h, (params["layers"], state["kv"]))
         new_state = {"kv": new_kv}
+    elif bank is not None:
+        raise ValueError(f"adapter bank serving not supported for "
+                         f"family {cfg.family}")
     elif cfg.family == "ssm":
         def body(hc, xs):
             lp, st = xs
@@ -313,9 +341,27 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state,
     return logits, new_state
 
 
+def _gather_last(h: Array, last_idx) -> Array:
+    """h[:, last_idx[i]] per row, keepdims — the ragged-prompt fix: each
+    row's logits come from its OWN last valid prompt position, not the
+    padded batch max."""
+    if last_idx is None:
+        return h[:, -1:]
+    idx = jnp.asarray(last_idx, jnp.int32)
+    idx = jnp.broadcast_to(idx, (h.shape[0],))
+    return jnp.take_along_axis(h, idx[:, None, None], axis=1)
+
+
 def prefill(cfg: ModelConfig, params, batch: Dict[str, Array], state,
-            shard: Shard = no_shard):
+            shard: Shard = no_shard, last_idx=None, bank=None,
+            adapter_ids=None, bank_cfg=None):
     """Full-prompt forward that fills caches; returns (last_logits, state).
+
+    ``last_idx`` (scalar or (B,) int32): index of each row's last valid
+    position in the processed stream (prompt_len - 1, plus the patch-prefix
+    offset for vlm) — logits are gathered there instead of at the padded
+    batch max. ``bank``/``adapter_ids``/``bank_cfg``: per-request adapter
+    bank, as in ``decode_step``.
 
     For attention families the KV cache is written; SSM/hybrid prefill runs
     the scan then (for brevity) re-derives the final state via decode of the
@@ -326,19 +372,42 @@ def prefill(cfg: ModelConfig, params, batch: Dict[str, Array], state,
     h = _embed(cfg, params, tokens, shard)
     if cfg.family in ("decoder", "vlm"):
         if cfg.family == "vlm" and "patches" in batch:
-            pe = (batch["patches"].astype(cfg.act_dtype)
-                  @ params["patch_proj"]["wi"].astype(cfg.act_dtype))
+            patches = batch["patches"].astype(cfg.act_dtype)
+            prot = bank_group_rotator(
+                bank_cfg, bank.get("patch_proj") if bank is not None else None,
+                adapter_ids)
+            if prot is not None:
+                patches = prot("wi", patches)
+            pe = patches @ params["patch_proj"]["wi"].astype(cfg.act_dtype)
             h = jnp.concatenate([shard(pe, "act_btd"), h], axis=1)
 
-        def body(hc, xs):
-            lp, cache = xs
-            hc, _, new_cache = _decoder_layer(cfg, lp, hc, shard, cache=cache)
-            return hc, new_cache
-        h, new_kv = jax.lax.scan(_remat(cfg, body), h,
-                                 (params["layers"], state["kv"]))
-        logits = _unembed(cfg, params, h[:, -1:], shard)
+        bl_tree = bank.get("layers") if bank is not None else None
+        if bl_tree is not None:
+            def body(hc, xs):
+                lp, cache, bl = xs
+                hc, _, new_cache = _decoder_layer(
+                    cfg, lp, hc, shard, cache=cache,
+                    rot_attn=bank_group_rotator(bank_cfg, bl.get("attn"),
+                                                adapter_ids),
+                    rot_mlp=bank_group_rotator(bank_cfg, bl.get("mlp"),
+                                               adapter_ids))
+                return hc, new_cache
+            h, new_kv = jax.lax.scan(_remat(cfg, body), h,
+                                     (params["layers"], state["kv"], bl_tree))
+        else:
+            def body(hc, xs):
+                lp, cache = xs
+                hc, _, new_cache = _decoder_layer(cfg, lp, hc, shard,
+                                                  cache=cache)
+                return hc, new_cache
+            h, new_kv = jax.lax.scan(_remat(cfg, body), h,
+                                     (params["layers"], state["kv"]))
+        logits = _unembed(cfg, params, _gather_last(h, last_idx), shard)
         return logits, {"kv": new_kv}
+    if bank is not None:
+        raise ValueError(f"adapter bank serving not supported for "
+                         f"family {cfg.family}")
     # ssm / hybrid: run the train-path forward for logits; advance states by
     # scanning decode steps is O(S) — production uses the SSD state output.
     logits, _ = forward(cfg, params, batch, shard)
-    return logits[:, -1:], state
+    return _gather_last(logits, last_idx), state

@@ -1,1 +1,1 @@
-from .engine import ServeEngine, Request
+from .engine import Request, ServeEngine, StaticServeEngine

@@ -1,14 +1,37 @@
-"""Batched serving engine: merged GSOFT weights, prefill + decode loop.
+"""Serving engines: continuous batching with slot-based KV cache + the
+static-batch reference engine.
 
-Flow: merge adapters into the base weights offline (paper §6.1 — zero
-inference overhead), group queued requests into same-capacity batches,
-prefill with per-row validity masks (ragged prompts supported through the
-online-attention kv_len argument), then decode greedily with per-row EOS
-tracking.  Sharding-ready: pass a mesh to shard params/caches like the
-dry-run does.
+``ServeEngine`` (the default) is a scheduler over ``max_batch`` persistent
+decode slots:
+
+  * requests are admitted into free slots as others finish (EOS or token
+    budget) — no lockstep ``max(max_new_tokens)`` barrier;
+  * each slot carries its own position counter; decode runs ONE jitted step
+    over the full slot array with per-slot write positions and per-slot
+    ``kv_len`` masks (the online-attention kv_len argument);
+  * admission prefills a single request (batch 1, prompt padded to a
+    power-of-two bucket to bound recompiles) and scatters the fresh state
+    row into the slot (``train.steps.build_slot_prefill_step``);
+  * each slot carries an adapter id into a per-request GS adapter bank
+    (``core.peft.AdapterBank``): row i rotates its activations with its own
+    GSOFT rotation x Q_i before every adapted matmul — O(b*d) per token,
+    versus O(d^2) to re-merge a dense rotation per request. Slot 0 of the
+    bank is the identity (serves the base model).
+
+``StaticServeEngine`` is the drain-queue -> pad -> prefill -> lockstep
+decode reference (the paper's merged-weight serving story, §6.1): one
+adapter merged into the weights offline, zero per-token overhead. Use it
+when every request shares one fine-tune; use ``ServeEngine`` + a bank when
+requests carry different adapters.
+
+Both engines sample each row's first token at its OWN last valid prompt
+index (ragged prompts — shorter rows no longer read a padded position) and
+decode with per-row positions. Sharding-ready: pass a mesh to shard
+params/caches like the dry-run does.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional
@@ -20,7 +43,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core import peft as peft_lib
 from repro.models import api
-from repro.train.steps import build_decode_step, build_prefill_step
+from repro.train.steps import (build_decode_step, build_prefill_step,
+                               build_slot_prefill_step)
 
 
 @dataclasses.dataclass
@@ -28,10 +52,243 @@ class Request:
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
+    adapter: Optional[str] = None        # bank adapter name (None = base)
     output: Optional[List[int]] = None
+    # timing (perf_counter seconds; filled by the engines)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+def _new_stats() -> Dict[str, Any]:
+    return {"requests": 0, "tokens_generated": 0, "decode_steps": 0,
+            "prefills": 0, "wall_s": 0.0, "admission_log": []}
+
+
+def _stream_prefix(cfg: ModelConfig) -> int:
+    """Non-text positions prepended to the decode stream (vlm patches)."""
+    return cfg.frontend_tokens if cfg.family == "vlm" else 0
+
+
+def _check_capacity(cfg: ModelConfig, prompt: List[int], max_new: int,
+                    max_len: int) -> None:
+    plen = len(prompt) + _stream_prefix(cfg)
+    if plen + max_new > max_len:
+        raise ValueError(f"prompt ({plen}) + max_new ({max_new}) "
+                         f"exceeds max_len={max_len}")
+
+
+def latency_percentiles(requests: List[Request],
+                        qs=(50, 95)) -> Dict[int, float]:
+    """{q: seconds} request-latency percentiles over finished Requests."""
+    lats = [r.latency_s for r in requests]
+    if not lats:
+        return {q: 0.0 for q in qs}
+    return {q: float(np.percentile(lats, q)) for q in qs}
 
 
 class ServeEngine:
+    """Continuous-batching engine over ``max_batch`` persistent slots."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 256, eos_id: int = 0, mesh=None,
+                 adapters=None, peft_cfg: Optional[peft_lib.PEFTConfig] = None,
+                 bank: Optional[peft_lib.AdapterBank] = None):
+        self.cfg = cfg
+        if adapters and peft_cfg is not None:
+            if bank is not None:
+                raise ValueError(
+                    "pass EITHER merged adapters (adapters + peft_cfg) OR a "
+                    "per-request bank — merging and then rotating per "
+                    "request would apply adapters twice")
+            params = peft_lib.merge_tree(peft_cfg, params, adapters)  # offline
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.mesh = mesh
+        self.bank = bank
+        self._bank_tree = bank.tree if bank is not None else {}
+        bank_cfg = bank.cfg if bank is not None else None
+        self._enc_len = max(max_len // 4, 8)
+        self._prefix = _stream_prefix(cfg)
+
+        self._slot_prefill = jax.jit(
+            build_slot_prefill_step(cfg, mesh, max_len=max_len,
+                                    enc_len=self._enc_len, bank_cfg=bank_cfg),
+            donate_argnums=(3,))
+        self._banked = bank_cfg is not None
+        self._decode = jax.jit(
+            build_decode_step(cfg, mesh, bank_cfg=bank_cfg),
+            donate_argnums=(3,) if self._banked else (2,))
+
+        self._state = api.init_decode_state(cfg, max_batch, max_len,
+                                            enc_len=self._enc_len)
+        # per-slot bookkeeping (host side)
+        self._pos = np.zeros(max_batch, np.int32)
+        self._last = np.zeros(max_batch, np.int32)
+        self._adapter_ids = np.zeros(max_batch, np.int32)
+        self._slot_req: List[Optional[Request]] = [None] * max_batch
+        self._outs: List[List[int]] = [[] for _ in range(max_batch)]
+
+        self._queue: "collections.deque[Request]" = collections.deque()
+        self._next_id = 0
+        self._results: Dict[int, List[int]] = {}
+        # completed Requests (latency accounting). Grows until drained —
+        # long-running streaming drivers should call drain_finished()
+        # periodically instead of letting history accumulate.
+        self.finished: List[Request] = []
+        self.stats = _new_stats()
+
+    # -- submission -----------------------------------------------------------
+    def add_request(self, prompt: List[int], max_new_tokens: int = 16,
+                    adapter: Optional[str] = None) -> int:
+        if self.bank is None and adapter is not None:
+            raise ValueError("engine has no adapter bank; build one with "
+                             "core.peft.build_adapter_bank")
+        if self.bank is not None:
+            self.bank.slot(adapter)          # validate the name eagerly
+        _check_capacity(self.cfg, prompt, max_new_tokens, self.max_len)
+        rid = self._next_id
+        self._next_id += 1
+        req = Request(rid, list(prompt), max_new_tokens, adapter=adapter,
+                      t_submit=time.perf_counter())
+        self._queue.append(req)
+        return rid
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and self.num_active == 0
+
+    # -- internals ------------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        """Power-of-two prompt pad length (bounds prefill recompiles);
+        clamped so prefix + bucket always fits the slot cache."""
+        b = 8
+        while b < plen:
+            b *= 2
+        return min(b, self.max_len - self._prefix)
+
+    def _feed(self, prompt: List[int]) -> Dict[str, Any]:
+        bucket = self._bucket(len(prompt))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :len(prompt)] = prompt
+        feed: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "encdec":
+            feed["frames"] = jnp.zeros((1, self._enc_len, self.cfg.d_model),
+                                       self.cfg.act_dtype)
+        if self.cfg.family == "vlm":
+            feed["patches"] = jnp.zeros(
+                (1, self.cfg.frontend_tokens, self.cfg.frontend_dim),
+                self.cfg.act_dtype)
+        return feed
+
+    def _finish(self, slot: int) -> None:
+        req = self._slot_req[slot]
+        req.output = self._outs[slot][:req.max_new_tokens]
+        req.t_done = time.perf_counter()
+        self._results[req.rid] = req.output
+        self.finished.append(req)
+        self.stats["requests"] += 1
+        self.stats["tokens_generated"] += len(req.output)
+        self._slot_req[slot] = None
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue: single-request prefill, scatter
+        the fresh state into the slot, sample the first token."""
+        for slot in range(self.max_batch):
+            if not self._queue:
+                return
+            if self._slot_req[slot] is not None:
+                continue
+            req = self._queue.popleft()
+            aid = self.bank.slot(req.adapter) if self.bank is not None else 0
+            last_idx = self._prefix + len(req.prompt) - 1
+            first, self._state = self._slot_prefill(
+                self.params, self._bank_tree, self._feed(req.prompt),
+                self._state, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(aid, jnp.int32),
+                jnp.asarray(last_idx, jnp.int32))
+            first = int(first)
+            req.t_first = time.perf_counter()
+            self.stats["prefills"] += 1
+            log = self.stats["admission_log"]
+            log.append((req.rid, self.stats["decode_steps"]))
+            if len(log) > 4096:          # diagnostics ring, not a ledger
+                del log[:-2048]
+            self._slot_req[slot] = req
+            self._outs[slot] = [first]
+            self._pos[slot] = self._prefix + len(req.prompt)
+            self._last[slot] = first
+            self._adapter_ids[slot] = aid
+            if first == self.eos_id or req.max_new_tokens <= 1:
+                self._finish(slot)
+
+    def _decode_tick(self) -> None:
+        """One jitted decode step over the full slot array."""
+        tokens = jnp.asarray(self._last[:, None])
+        pos = jnp.asarray(self._pos)
+        if self._banked:
+            nt, _, self._state = self._decode(
+                self.params, self._bank_tree, tokens, self._state, pos,
+                jnp.asarray(self._adapter_ids))
+        else:
+            nt, _, self._state = self._decode(self.params, tokens,
+                                              self._state, pos)
+        self.stats["decode_steps"] += 1
+        vals = np.asarray(nt[:, 0])
+        for slot in range(self.max_batch):
+            req = self._slot_req[slot]
+            if req is None:
+                continue
+            tok = int(vals[slot])
+            self._outs[slot].append(tok)
+            self._pos[slot] += 1
+            self._last[slot] = tok
+            if tok == self.eos_id or len(self._outs[slot]) >= req.max_new_tokens:
+                self._finish(slot)
+
+    def step(self) -> bool:
+        """One scheduler tick: admit into free slots, then one decode step
+        over all active slots. Returns True if any work remains queued or
+        in flight (the streaming driver loop condition)."""
+        self._admit()
+        if self.num_active:
+            self._decode_tick()
+        return not self.idle
+
+    def drain_finished(self) -> List[Request]:
+        """Hand over (and forget) everything completed so far — the
+        bounded-memory accessor for long-running streaming loops (also
+        releases the corresponding pending run() results)."""
+        out, self.finished = self.finished, []
+        for r in out:
+            self._results.pop(r.rid, None)
+        return out
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue to completion; returns {rid: tokens}."""
+        t0 = time.perf_counter()
+        while self.step():
+            pass
+        self.stats["wall_s"] += time.perf_counter() - t0
+        res, self._results = self._results, {}
+        return res
+
+
+class StaticServeEngine:
+    """Static-batch reference: drain queue -> pad -> prefill -> lockstep
+    decode. Adapters (one per deployment) are merged into the weights
+    offline — the paper's zero-overhead serving mode."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 256, eos_id: int = 0, mesh=None,
                  adapters=None, peft_cfg: Optional[peft_lib.PEFTConfig] = None):
@@ -45,21 +302,29 @@ class ServeEngine:
         self.mesh = mesh
         self._queue: List[Request] = []
         self._next_id = 0
-        self._prefill = jax.jit(build_prefill_step(cfg, mesh))
+        self.finished: List[Request] = []    # completed Requests (latency)
+        self._prefill = jax.jit(build_prefill_step(cfg, mesh, ragged=True))
         self._decode = jax.jit(build_decode_step(cfg, mesh),
                                donate_argnums=(2,))
-        self.stats = {"requests": 0, "tokens_generated": 0,
-                      "decode_steps": 0, "wall_s": 0.0}
+        self.stats = _new_stats()
 
     def add_request(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        _check_capacity(self.cfg, prompt, max_new_tokens, self.max_len)
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, list(prompt), max_new_tokens))
+        self._queue.append(Request(rid, list(prompt), max_new_tokens,
+                                   t_submit=time.perf_counter()))
         return rid
+
+    def drain_finished(self) -> List[Request]:
+        """Hand over (and forget) the completed-Request history."""
+        out, self.finished = self.finished, []
+        return out
 
     # -- internals ------------------------------------------------------------
     def _run_batch(self, batch: List[Request]) -> None:
         b = len(batch)
+        prefix = _stream_prefix(self.cfg)
         plen = max(len(r.prompt) for r in batch)
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(batch):
@@ -74,17 +339,29 @@ class ServeEngine:
             feed["patches"] = jnp.zeros(
                 (b, self.cfg.frontend_tokens, self.cfg.frontend_dim),
                 self.cfg.act_dtype)
-        logits, state = self._prefill(self.params, feed, state)
+        # ragged fix: each row samples at its OWN last prompt position and
+        # decodes from its own position counter — padded rows no longer read
+        # (or attend over) the pad tail
+        last_idx = np.asarray([prefix + len(r.prompt) - 1 for r in batch],
+                              np.int32)
+        logits, state = self._prefill(self.params, feed, state,
+                                      jnp.asarray(last_idx))
         last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        self.stats["prefills"] += 1
+        for r in batch:
+            r.t_first = time.perf_counter()
 
         max_new = max(r.max_new_tokens for r in batch)
         outs = [[int(last[i, 0])] for i in range(b)]
-        done = np.zeros(b, bool)
-        pos = plen + (self.cfg.frontend_tokens
-                      if self.cfg.family == "vlm" else 0)
+        done = np.asarray([outs[i][0] == self.eos_id or
+                           r.max_new_tokens <= 1
+                           for i, r in enumerate(batch)])
+        pos0 = np.asarray([prefix + len(r.prompt) for r in batch], np.int32)
         for t in range(max_new - 1):
+            if done.all():
+                break
             nt, logits, state = self._decode(self.params, last, state,
-                                             jnp.asarray(pos + t, jnp.int32))
+                                             jnp.asarray(pos0 + t))
             self.stats["decode_steps"] += 1
             last = nt
             vals = np.asarray(nt[:, 0])
@@ -97,6 +374,7 @@ class ServeEngine:
                 break
         for i, r in enumerate(batch):
             r.output = outs[i][:r.max_new_tokens]
+            r.t_done = time.perf_counter()
             self.stats["tokens_generated"] += len(r.output)
 
     def run(self) -> Dict[int, List[int]]:
@@ -108,6 +386,7 @@ class ServeEngine:
             self._run_batch(batch)
             for r in batch:
                 results[r.rid] = r.output
+                self.finished.append(r)
                 self.stats["requests"] += 1
         self.stats["wall_s"] += time.perf_counter() - t0
         return results

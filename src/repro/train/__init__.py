@@ -1,3 +1,4 @@
 from .steps import (TrainStepConfig, build_train_step, build_eval_step,
-                    build_decode_step, build_prefill_step)
+                    build_decode_step, build_prefill_step,
+                    build_slot_prefill_step)
 from .loop import LoopConfig, train

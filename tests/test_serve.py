@@ -1,4 +1,5 @@
-"""Serving engine: batching, EOS handling, merged-PEFT equivalence."""
+"""Serving engines: continuous batching (slots, EOS refill, adapter bank)
+and the static reference (ragged-prompt fix, merged-PEFT equivalence)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,10 +8,27 @@ import pytest
 from repro.config import get_smoke_config
 from repro.core import peft as peft_lib
 from repro.models import api
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, StaticServeEngine
 
 CFG = get_smoke_config("qwen2-72b")
 PARAMS = api.init_params(CFG, jax.random.PRNGKey(0))
+PCFG = peft_lib.PEFTConfig(method="gsoft", block_size=8)
+
+
+def _tuned_adapters(seed, scale=0.3):
+    ad = peft_lib.init_peft(PCFG, PARAMS, jax.random.PRNGKey(seed))
+    return jax.tree.map(
+        lambda a: a + scale * jax.random.normal(
+            jax.random.PRNGKey(seed + 50), a.shape), ad)
+
+
+def _solo(prompt, max_new, adapters=None, eos_id=-1):
+    """Single-request reference: batch of one, offline-merged adapter."""
+    eng = StaticServeEngine(CFG, PARAMS, max_batch=1, max_len=48,
+                            eos_id=eos_id, adapters=adapters,
+                            peft_cfg=PCFG if adapters is not None else None)
+    rid = eng.add_request(list(prompt), max_new_tokens=max_new)
+    return eng.run()[rid]
 
 
 def test_engine_serves_all_requests():
@@ -46,6 +64,164 @@ def test_merged_gsoft_identity_matches_base():
     for eng in (base, merged):
         eng.add_request([3, 4, 5], max_new_tokens=4)
     assert base.run()[0] == merged.run()[0]
+
+
+def test_ragged_prompts_match_solo_reference():
+    """Regression: rows shorter than the batch max used to sample their
+    first token from a PADDED position. Every row of a mixed-length batch
+    must now match its own single-request run — on both engines."""
+    prompts = [[7, 8, 9], [3, 4, 5, 6, 7, 8, 9, 10, 11], [5, 6, 7, 8, 9]]
+    refs = [_solo(p, 4) for p in prompts]
+    for cls in (ServeEngine, StaticServeEngine):
+        eng = cls(CFG, PARAMS, max_batch=3, max_len=48, eos_id=-1)
+        rids = [eng.add_request(list(p), max_new_tokens=4) for p in prompts]
+        results = eng.run()
+        for rid, ref in zip(rids, refs):
+            assert results[rid] == ref, cls.__name__
+
+
+def test_multi_adapter_slots_match_merged_references():
+    """Per-request adapters served from one bank == each adapter merged
+    offline into its own dedicated engine; the identity slot == no-PEFT."""
+    adapters = {"alice": _tuned_adapters(7), "bob": _tuned_adapters(11)}
+    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, adapters)
+    assert bank.names == (peft_lib.BASE_ADAPTER, "alice", "bob")
+    prompt = [3, 4, 5, 6]
+    eng = ServeEngine(CFG, PARAMS, max_batch=3, max_len=48, eos_id=-1,
+                      bank=bank)
+    rids = {name: eng.add_request(prompt, max_new_tokens=5, adapter=name)
+            for name in ("alice", "bob", None)}
+    results = eng.run()
+    assert results[rids["alice"]] == _solo(prompt, 5, adapters["alice"])
+    assert results[rids["bob"]] == _solo(prompt, 5, adapters["bob"])
+    assert results[rids[None]] == _solo(prompt, 5)          # identity slot
+    assert results[rids["alice"]] != results[rids["bob"]]
+
+
+def test_banked_decode_logits_match_merged_fp32():
+    """Step-level fp32 tolerance: one decode step through the activation-
+    side bank == the same step through offline-merged weights."""
+    from repro.train.steps import build_decode_step
+    adapters = {"a": _tuned_adapters(3)}
+    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, adapters)
+    merged = peft_lib.merge_tree(PCFG, PARAMS, adapters["a"])
+    tokens = jnp.asarray([[5], [9]], jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    state = api.init_decode_state(CFG, 2, 16)
+    _, logits_bank, _ = build_decode_step(CFG, bank_cfg=PCFG)(
+        PARAMS, bank.tree, tokens, state, pos, jnp.asarray([1, 1], jnp.int32))
+    state = api.init_decode_state(CFG, 2, 16)
+    _, logits_merged, _ = build_decode_step(CFG)(merged, tokens, state, pos)
+    np.testing.assert_allclose(np.asarray(logits_bank),
+                               np.asarray(logits_merged), atol=2e-4)
+
+
+def test_banked_serving_kernel_path_matches_merged():
+    """The vmapped-Pallas bank rotation serves the same tokens as the
+    offline-merged reference (kernel bodies in interpret mode on CPU)."""
+    pcfg_k = peft_lib.PEFTConfig(method="gsoft", block_size=8,
+                                 use_pallas=True)
+    adapters = {"a": _tuned_adapters(3)}
+    bank = peft_lib.build_adapter_bank(pcfg_k, PARAMS, adapters)
+    eng = ServeEngine(CFG, PARAMS, max_batch=2, max_len=48, eos_id=-1,
+                      bank=bank)
+    rid = eng.add_request([3, 4, 5, 6], max_new_tokens=4, adapter="a")
+    assert eng.run()[rid] == _solo([3, 4, 5, 6], 4, adapters["a"])
+
+
+def test_eos_frees_slot_and_admits_queued_request():
+    """EOS early-exit releases the slot; a queued request is admitted
+    mid-run instead of waiting out the finished request's token budget."""
+    probe = _solo([3, 4, 5], 8)
+    eos = next(t for t in probe[1:] if t != probe[0])
+    k = probe.index(eos) + 1                   # tokens until EOS emitted
+    assert k < 8
+    eng = ServeEngine(CFG, PARAMS, max_batch=1, max_len=64, eos_id=eos)
+    r1 = eng.add_request([3, 4, 5], max_new_tokens=8)
+    r2 = eng.add_request([9, 10, 11, 12], max_new_tokens=4)
+    results = eng.run()
+    assert results[r1] == probe[:k]            # truncated at EOS
+    assert len(results[r2]) <= 4
+    log = dict(eng.stats["admission_log"])
+    # r2 entered when r1 hit EOS (k-1 decode steps), not at its budget (7)
+    assert log[r2] == k - 1
+    assert eng.stats["decode_steps"] < 7 + 3
+
+
+def test_identity_bank_matches_no_peft_engine():
+    """A bank with only the identity slot serves exactly the base model."""
+    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, {})
+    banked = ServeEngine(CFG, PARAMS, max_batch=2, max_len=32, eos_id=-1,
+                         bank=bank)
+    plain = ServeEngine(CFG, PARAMS, max_batch=2, max_len=32, eos_id=-1)
+    for eng in (banked, plain):
+        eng.add_request([3, 4, 5], max_new_tokens=4)
+    assert banked.run()[0] == plain.run()[0]
+
+
+def test_oversized_request_rejected_by_both_engines():
+    """A request that cannot fit prompt + budget in the slot cache must be
+    rejected up front (clamped cache writes would silently corrupt it)."""
+    for cls in (ServeEngine, StaticServeEngine):
+        eng = cls(CFG, PARAMS, max_batch=1, max_len=16, eos_id=-1)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.add_request(list(range(1, 13)), max_new_tokens=8)
+
+
+def test_adapter_bank_build_validation():
+    with pytest.raises(ValueError, match="gsoft"):
+        peft_lib.build_adapter_bank(
+            peft_lib.PEFTConfig(method="lora"), PARAMS, {})
+    with pytest.raises(ValueError, match="use_scale"):
+        peft_lib.build_adapter_bank(
+            peft_lib.PEFTConfig(method="gsoft", use_scale=True), PARAMS, {})
+    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, {})
+    with pytest.raises(KeyError):
+        bank.slot("nope")
+
+
+def test_adapter_bank_checkpoint_roundtrip(tmp_path):
+    """save_adapters -> restore_adapters preserves trees + PEFTConfig, and
+    the restored bank serves identically (launch --adapters path)."""
+    from repro.checkpoint.manager import CheckpointManager
+    adapters = {"alice": _tuned_adapters(7), "bob": _tuned_adapters(11)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_adapters(0, adapters, PCFG)
+    restored, cfg2 = mgr.restore_adapters()
+    assert cfg2 == PCFG
+    assert sorted(restored) == ["alice", "bob"]
+    for name in adapters:
+        assert sorted(restored[name]) == sorted(adapters[name])
+        for path, entry in adapters[name].items():
+            for pkey, arr in entry.items():
+                np.testing.assert_array_equal(
+                    np.asarray(restored[name][path][pkey]), np.asarray(arr))
+    # restored bank produces the same tokens
+    b1 = peft_lib.build_adapter_bank(PCFG, PARAMS, adapters)
+    b2 = peft_lib.build_adapter_bank(cfg2, PARAMS, restored)
+    outs = []
+    for bank in (b1, b2):
+        eng = ServeEngine(CFG, PARAMS, max_batch=1, max_len=32, eos_id=-1,
+                          bank=bank)
+        eng.add_request([4, 5, 6], max_new_tokens=3, adapter="bob")
+        outs.append(eng.run()[0])
+    assert outs[0] == outs[1]
+
+
+def test_continuous_scheduler_does_less_decode_work():
+    """Deterministic scheduling metric: on a ragged-budget workload the
+    slot engine needs fewer decode steps than the lockstep engine."""
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(1, 200, size=int(rng.integers(3, 10))).tolist(),
+             int(rng.integers(2, 13))) for _ in range(8)]
+    steps = {}
+    for cls in (ServeEngine, StaticServeEngine):
+        eng = cls(CFG, PARAMS, max_batch=2, max_len=48, eos_id=-1)
+        for p, m in reqs:
+            eng.add_request(p, max_new_tokens=m)
+        eng.run()
+        steps[cls.__name__] = eng.stats["decode_steps"]
+    assert steps["ServeEngine"] < steps["StaticServeEngine"]
 
 
 def test_nonidentity_adapters_change_output():
