@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.config import get_smoke_config
-from repro.models import api
+from repro.core.runtime import ModelRuntime
 from repro.serve.engine import (ServeEngine, StaticServeEngine,
                                 latency_percentiles)
 
@@ -69,7 +69,7 @@ def run():
     # static batching pays for and slot refill is what continuous wins on
     max_new_hi = 32 if TINY else 48
     max_len = prompt_hi + max_new_hi + 8
-    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0))
     workload = _workload(n_req, prompt_hi, max_new_hi, seed=0)
     # warmup = the same workload, so every shape both schedulers will see
     # (static: per-batch pad shapes; continuous: prefill buckets) is
@@ -80,9 +80,9 @@ def run():
     res = {}
     for name, make in (
         ("static", lambda: StaticServeEngine(
-            cfg, params, max_batch=max_batch, max_len=max_len, eos_id=-1)),
+            rt, max_batch=max_batch, max_len=max_len, eos_id=-1)),
         ("continuous", lambda: ServeEngine(
-            cfg, params, max_batch=max_batch, max_len=max_len, eos_id=-1)),
+            rt, max_batch=max_batch, max_len=max_len, eos_id=-1)),
     ):
         r = res[name] = _run_engine(make, warmup, workload)
         emit(f"serve/{name}_mixed",

@@ -86,7 +86,8 @@ def run():
 
         # merged inference has zero overhead (paper §6.1); params passed as
         # jit arguments so XLA cannot constant-fold the forward away
-        merged = peft_lib.merge_tree(pcfg, params, adapters)
+        merged = peft_lib.materialize_tree(pcfg, params, adapters,
+                                           merged=True)
         fwd = jax.jit(forward)
         us_merged = time_fn(fwd, merged, x, iters=5)
         us_base = time_fn(fwd, params, x, iters=5)

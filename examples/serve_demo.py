@@ -16,8 +16,8 @@ import numpy as np
 
 from repro.config import get_smoke_config
 from repro.core import peft as peft_lib
+from repro.core.runtime import ModelRuntime
 from repro.launch.serve import make_demo_adapters
-from repro.models import api
 from repro.serve.engine import ServeEngine, StaticServeEngine
 
 
@@ -30,17 +30,18 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
-    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0))
 
     # pretend we fine-tuned twice: two random GSOFT adapters
     pcfg = peft_lib.PEFTConfig(method="gsoft", block_size=8)
-    adapters = make_demo_adapters(["alice", "bob"], params, pcfg)
+    adapters = make_demo_adapters(["alice", "bob"], rt.params, pcfg)
 
     rng = np.random.default_rng(0)
     if args.static:
         # one adapter merged offline — every request gets "alice"
-        eng = StaticServeEngine(cfg, params, max_batch=4, max_len=64,
-                                adapters=adapters["alice"], peft_cfg=pcfg)
+        merged = ModelRuntime(cfg, rt.params, adapters=adapters["alice"],
+                              peft_cfg=pcfg)
+        eng = StaticServeEngine(merged, max_batch=4, max_len=64)
         for _ in range(args.requests):
             eng.add_request(
                 rng.integers(1, 200, size=rng.integers(4, 12)).tolist(),
@@ -49,8 +50,8 @@ def main():
         results = eng.run()
         dt = time.perf_counter() - t0
     else:
-        bank = peft_lib.build_adapter_bank(pcfg, params, adapters)
-        eng = ServeEngine(cfg, params, max_batch=4, max_len=64, bank=bank)
+        eng = ServeEngine(rt.with_bank(adapters, pcfg), max_batch=4,
+                          max_len=64)
         tenants = ["alice", "bob", None]          # None = base model slot 0
         for i in range(args.requests):
             eng.add_request(

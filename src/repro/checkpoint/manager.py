@@ -17,10 +17,12 @@ Fault-tolerance properties:
   * keep-last-k GC
 
 Adapter banks: ``save_adapters`` / ``restore_adapters`` persist NAMED
-GSOFT adapter pytrees plus their ``PEFTConfig`` as index metadata, so
-``launch/serve.py --adapters name=dir`` can rebuild a serving AdapterBank
-without the original python objects (the index records adapter names and
-weight paths — restore needs no tree_like).
+GSOFT adapter pytrees plus their ``PEFTConfig`` as index metadata (the
+index records adapter names and weight paths — restore needs no
+tree_like). Serving code reaches these through the ``ModelRuntime`` facade
+(``runtime.save_bank`` / ``ModelRuntime.load_named_adapters`` /
+``runtime.with_bank``) — e.g. ``launch/serve.py --adapters name=dir``
+rebuilds a serving AdapterBank without the original python objects.
 """
 from __future__ import annotations
 

@@ -16,7 +16,8 @@ from .projection import project_to_gs, gs_reconstruction_error
 from .adapters import (AdapterSpec, init_adapter, materialize, merge,
                        num_adapter_params, butterfly_sigma,
                        apply_activation_side, gs_rotate_banked)
-from .peft import (PEFTConfig, init_peft, materialize_tree, merge_tree,
+from .peft import (PEFTConfig, init_peft, materialize_tree,
                    adapted_paths, count_params, flatten_paths,
                    trainable_and_frozen, DEFAULT_TARGETS, AdapterBank,
-                   build_adapter_bank, bank_group_rotator, BASE_ADAPTER)
+                   build_adapter_bank, AdapterContext, PrefillRequest,
+                   BASE_ADAPTER)

@@ -16,6 +16,7 @@ receive independent per-slice adapters via vmap.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -81,15 +82,21 @@ def flatten_paths(tree: Tree) -> Dict[str, Array]:
 
 
 def _matches(cfg: PEFTConfig, path: str) -> bool:
-    return any(re.match(pat + r"\Z", path) or re.search(pat, path)
-               for pat in cfg.target_patterns)
+    # fullmatch only: an unanchored target like ``.*/wq`` must not also
+    # adapt a decoy weight named ``.../wq_extra`` (the old ``re.search``
+    # fallback ignored the end anchor)
+    return any(re.fullmatch(pat, path) for pat in cfg.target_patterns)
 
 
 # ---------------------------------------------------------------------------
 # spec inference + init
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=4096)
 def spec_for(cfg: PEFTConfig, shape: Tuple[int, ...]) -> AdapterSpec:
+    """Derive the AdapterSpec for a weight shape. Cached: ``materialize_tree``
+    runs inside jit every step and would otherwise re-derive the spec for
+    every adapted leaf on every call (cfg and shape are both hashable)."""
     if len(shape) < 2:
         raise ValueError(f"cannot adapt weight of shape {shape}")
     return AdapterSpec(
@@ -134,12 +141,19 @@ def init_peft(cfg: PEFTConfig, params: Tree, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 def materialize_tree(cfg: PEFTConfig, params: Tree,
-                     adapters: Dict[str, Dict[str, Array]]) -> Tree:
+                     adapters: Dict[str, Dict[str, Array]],
+                     merged: bool = False) -> Tree:
     """Effective parameter tree with adapters applied (weight-side).
 
     Runs inside jit each step; cost is O(2 b d n) per adapted weight —
     a ~b/T fraction of the corresponding GEMM for T tokens (DESIGN §3).
+
+    ``merged=True`` documents the offline single-merge call sites (serving:
+    adapters folded into the weights once, zero per-token overhead — paper
+    §6.1). The math is identical; the flag only marks intent where the old
+    ``merge_tree`` alias used to.
     """
+    del merged  # intent marker only — same math either way
     if not adapters:
         return params
 
@@ -150,12 +164,6 @@ def materialize_tree(cfg: PEFTConfig, params: Tree,
         return leaf
 
     return jax.tree_util.tree_map_with_path(visit, params)
-
-
-def merge_tree(cfg: PEFTConfig, params: Tree,
-               adapters: Dict[str, Dict[str, Array]]) -> Tree:
-    """Offline merge for serving — identical math, applied once."""
-    return materialize_tree(cfg, params, adapters)
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +208,13 @@ class AdapterBank:
         except ValueError:
             raise KeyError(f"unknown adapter '{name}'; bank has "
                            f"{list(self.names)}") from None
+
+    def context(self, slot_ids) -> "AdapterContext":
+        """Bind this bank to a batch of slot ids -> the per-request
+        AdapterContext that flows through prefill/decode as ONE pytree."""
+        return AdapterContext(bank=self.tree,
+                              slots=jnp.asarray(slot_ids, jnp.int32),
+                              peft=self.cfg)
 
 
 def _nest_insert(root: Dict[str, Any], path: str, value: Any) -> None:
@@ -254,25 +269,84 @@ def build_adapter_bank(cfg: PEFTConfig, params: Tree,
     return AdapterBank(cfg=cfg, names=names, tree=tree)
 
 
-def bank_group_rotator(cfg: Optional[PEFTConfig], group: Optional[Dict],
-                       ids: Optional[Array]):
-    """Rotation callback ``rot(name, x)`` over one bank subtree.
+# ---------------------------------------------------------------------------
+# adapter context: the ONE pytree that carries per-request adapter state
+# ---------------------------------------------------------------------------
 
-    ``group`` is the (scan-sliced) bank subtree for one module, e.g.
-    ``{"wq": {"L": (A, r, b, b), "R": ...}, ...}``; ``ids`` the (B,) slot
-    array. Returns None when there is nothing to rotate, so model code can
-    pass it straight through to attention_block/apply_mlp.
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AdapterContext:
+    """Per-request adapter state as a single frozen pytree.
+
+    Bundles the stacked bank subtree (``AdapterBank.tree``), the (B,) slot
+    ids of the current batch, and the bank's PEFTConfig — replacing the old
+    loose ``bank``/``adapter_ids``/``bank_cfg`` kwarg triple. ``bank`` and
+    ``slots`` are pytree children (they trace through jit/scan); ``peft`` is
+    static aux data (hashable frozen dataclass, part of the jit cache key).
     """
-    if group is None or ids is None:
-        return None
+    bank: Tree                       # nested {path: {"L": ..., "R": ...}}
+    slots: Array                     # (B,) int32 bank-slot ids
+    peft: Optional[PEFTConfig] = None
 
-    def rot(name: str, x: Array) -> Array:
-        entry = group.get(name)
-        if entry is None:
-            return x
-        return gs_rotate_banked(entry["L"], entry["R"], ids, x,
-                                use_pallas=cfg.use_pallas if cfg else False)
-    return rot
+    def tree_flatten(self):
+        return (self.bank, self.slots), self.peft
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(bank=children[0], slots=children[1], peft=aux)
+
+    def group(self, *names) -> Optional[Dict]:
+        """Bank subtree under ``names`` (e.g. ``"layers"``), or None.
+
+        The returned raw tree is what model code feeds to ``jax.lax.scan``
+        alongside the stacked layer weights — scan-slicing and the rotation
+        hook below live in one place."""
+        node: Any = self.bank
+        for n in names:
+            node = node.get(n) if isinstance(node, dict) else None
+            if node is None:
+                return None
+        return node or None
+
+    def rotator(self, group: Optional[Dict]
+                ) -> Optional[Callable[[str, Array], Array]]:
+        """Rotation callback ``rot(name, x)`` over one (scan-sliced) module
+        subtree, e.g. ``{"wq": {"L": (A, r, b, b), "R": ...}, ...}``.
+        Returns None when there is nothing to rotate, so model code can pass
+        it straight through to attention_block/apply_mlp."""
+        if group is None or self.slots is None:
+            return None
+        ids, peft = self.slots, self.peft
+
+        def rot(name: str, x: Array) -> Array:
+            entry = group.get(name)
+            if entry is None:
+                return x
+            return gs_rotate_banked(entry["L"], entry["R"], ids, x,
+                                    use_pallas=peft.use_pallas if peft
+                                    else False)
+        return rot
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PrefillRequest:
+    """Everything one prefill call needs beyond params/state, as a pytree:
+    the input batch, the per-row ``last_idx`` (index of each row's last
+    valid prompt position — the ragged-prompt fix), and the optional
+    AdapterContext. Folds the old ``last_idx`` special-case kwarg and the
+    adapter triple into one argument."""
+    batch: Dict[str, Array]
+    last_idx: Optional[Array] = None
+    ctx: Optional[AdapterContext] = None
+
+    def tree_flatten(self):
+        return (self.batch, self.last_idx, self.ctx), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(batch=children[0], last_idx=children[1], ctx=children[2])
 
 
 def count_params(tree: Tree) -> int:

@@ -1,0 +1,233 @@
+"""ModelRuntime — the single serving/eval entry point.
+
+Binds ``ModelConfig + params + mesh (shard rules) + optional AdapterBank``
+into one object that owns its jitted ``prefill`` / ``decode`` / ``loss``
+closures, so engines, launchers, examples and benchmarks stop re-plumbing
+``(cfg, params, mesh, bank, peft_cfg, adapter_ids, ...)`` through every
+call. Per-request adapter state flows exclusively through
+``AdapterContext`` pytrees built by ``runtime.context(slot_ids)``.
+
+Adapter banks round-trip through the checkpoint manager via
+``runtime.save_bank`` / ``ModelRuntime.load_named_adapters`` +
+``runtime.with_bank`` — the serving side never touches raw checkpoint
+layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import peft as peft_lib
+from repro.models import api
+
+Tree = Any
+
+
+class ModelRuntime:
+    """``ModelRuntime(cfg)`` initializes params; pass ``params=`` to reuse
+    a tree. ``adapters``+``peft_cfg`` merge ONE adapter into the weights
+    offline (the paper's zero-overhead static serving mode, §6.1); a
+    ``bank`` serves per-request adapters activation-side. The two are
+    mutually exclusive — merging and then rotating would apply adapters
+    twice."""
+
+    def __init__(self, cfg: ModelConfig, params: Optional[Tree] = None, *,
+                 key: Optional[jax.Array] = None, mesh=None,
+                 bank: Optional[peft_lib.AdapterBank] = None,
+                 adapters: Optional[Tree] = None,
+                 peft_cfg: Optional[peft_lib.PEFTConfig] = None,
+                 abstract: bool = False):
+        self.cfg = cfg
+        self._ops = api.family_ops(cfg)      # fails fast on unknown family
+        if params is None:
+            params = (api.abstract_params(cfg) if abstract else
+                      api.init_params(cfg, key if key is not None
+                                      else jax.random.PRNGKey(0)))
+        if (adapters is None) != (peft_cfg is None):
+            raise ValueError(
+                "offline merge needs BOTH adapters and peft_cfg — passing "
+                "only one would silently serve the un-adapted base model")
+        if adapters is not None and not adapters:
+            raise ValueError(
+                "empty adapter tree (target_patterns matched no weights?) — "
+                "refusing a no-op merge that would silently serve the "
+                "un-adapted base model")
+        self._merged = adapters is not None
+        if self._merged:
+            if bank is not None:
+                raise ValueError(
+                    "pass EITHER merged adapters (adapters + peft_cfg) OR a "
+                    "per-request bank — merging and then rotating per "
+                    "request would apply adapters twice")
+            params = peft_lib.materialize_tree(peft_cfg, params, adapters,
+                                               merged=True)
+        self.params = params
+        self.mesh = mesh
+        self.bank = bank
+        self._decode = None
+        self._prefill = None
+        self._loss = None
+        self._slot_prefill: Dict[Tuple[int, int], Any] = {}
+
+    @classmethod
+    def abstract(cls, cfg: ModelConfig, mesh=None) -> "ModelRuntime":
+        """Runtime over ShapeDtypeStruct params (dry-run lowering)."""
+        return cls(cfg, mesh=mesh, abstract=True)
+
+    # -- adapter bank ---------------------------------------------------------
+    @property
+    def banked(self) -> bool:
+        return self.bank is not None
+
+    def slot(self, name: Optional[str]) -> int:
+        """Bank slot id for an adapter name (0 = identity). Naming an
+        adapter on a bankless runtime raises — silently serving the base
+        model instead of the requested fine-tune is the failure mode this
+        API exists to prevent."""
+        if self.bank is None:
+            if name is not None:
+                raise KeyError(f"runtime has no adapter bank; cannot serve "
+                               f"adapter {name!r} — build one with "
+                               "ModelRuntime.with_bank")
+            return 0
+        return self.bank.slot(name)
+
+    def context(self, slot_ids) -> Optional[peft_lib.AdapterContext]:
+        """AdapterContext binding the bank to a batch of slot ids
+        (None when this runtime serves the bare/merged model)."""
+        if self.bank is None:
+            return None
+        return self.bank.context(slot_ids)
+
+    def with_bank(self, adapters_by_name: Dict[str, Tree],
+                  peft_cfg: peft_lib.PEFTConfig) -> "ModelRuntime":
+        """New runtime over the same params serving these named adapters
+        per-request (slot 0 stays the identity/base model)."""
+        if self._merged:
+            raise ValueError(
+                "this runtime's params already contain a merged adapter; "
+                "banking on top would rotate already-rotated activations — "
+                "build the bank from the unmerged base runtime")
+        bank = peft_lib.build_adapter_bank(peft_cfg, self.params,
+                                           adapters_by_name)
+        return ModelRuntime(self.cfg, self.params, mesh=self.mesh, bank=bank)
+
+    # -- checkpoint integration ----------------------------------------------
+    @staticmethod
+    def save_bank(directory: str, adapters_by_name: Dict[str, Tree],
+                  peft_cfg: peft_lib.PEFTConfig, step: int = 0) -> None:
+        """Persist named RAW adapter trees + PEFTConfig as an adapter-bank
+        checkpoint (the format ``load_named_adapters`` reads back). Static:
+        a built ``AdapterBank`` holds Cayley-processed stacks, so the
+        original adapter trees must be supplied, not a runtime's bank."""
+        from repro.checkpoint.manager import CheckpointManager
+        CheckpointManager(directory).save_adapters(step, adapters_by_name,
+                                                   peft_cfg)
+
+    @staticmethod
+    def load_named_adapters(entries: List[str]
+                            ) -> Tuple[Dict[str, Tree],
+                                       peft_lib.PEFTConfig]:
+        """``entries``: ["name=ckpt_dir" | "ckpt_dir"] -> (adapters_by_name,
+        PEFTConfig). A bare dir loads every adapter in that bank;
+        ``name=dir`` picks one. An entry that IS an existing directory is
+        always treated as bare, so checkpoint paths containing ``=`` are
+        not misparsed. Feed the result to ``with_bank``."""
+        import os
+
+        from repro.checkpoint.manager import CheckpointManager
+        adapters_by_name: Dict[str, Tree] = {}
+        peft_cfg = None
+        for entry in entries:
+            if os.path.isdir(entry) or "=" not in entry:
+                name, path = "", entry
+            else:
+                # split at the FIRST '=': adapter names never contain '=',
+                # checkpoint paths may
+                name, _, path = entry.partition("=")
+            loaded, cfg = CheckpointManager(path).restore_adapters()
+            if peft_cfg is not None and cfg != peft_cfg:
+                raise ValueError(f"adapter {entry}: PEFTConfig mismatch "
+                                 f"({cfg} != {peft_cfg})")
+            peft_cfg = cfg
+            if name:      # name=dir form: pick one adapter out of the bank
+                if name not in loaded:
+                    raise KeyError(f"{path} has adapters {list(loaded)}, "
+                                   f"not {name!r}")
+                adapters_by_name[name] = loaded[name]
+            else:         # bare dir: load every adapter it holds
+                adapters_by_name.update(loaded)
+        if peft_cfg is None:
+            raise ValueError("no adapter checkpoints given")
+        return adapters_by_name, peft_cfg
+
+    # -- family ops / state ---------------------------------------------------
+    def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0):
+        return self._ops.init_decode_state(self.cfg, batch, max_len, enc_len)
+
+    def active_param_count(self) -> int:
+        return self._ops.active_param_count(self.cfg)
+
+    # -- unjitted step builders (dry-run lowering with custom shardings) ------
+    def build_prefill(self, batch_divisible: bool = True):
+        from repro.train.steps import build_prefill_step
+        return build_prefill_step(self.cfg, self.mesh, batch_divisible)
+
+    def build_decode(self, batch_divisible: bool = True):
+        from repro.train.steps import build_decode_step
+        return build_decode_step(self.cfg, self.mesh, batch_divisible)
+
+    # -- jitted closures (lazy, cached on the runtime) ------------------------
+    def prefill_fn(self):
+        """jitted (params, PrefillRequest, state) -> (logits, state)."""
+        if self._prefill is None:
+            self._prefill = jax.jit(self.build_prefill())
+        return self._prefill
+
+    def decode_fn(self):
+        """jitted (params, ctx, tokens, state, pos) ->
+        (next_tok, logits, state); ``state`` is donated."""
+        if self._decode is None:
+            self._decode = jax.jit(self.build_decode(), donate_argnums=(3,))
+        return self._decode
+
+    def slot_prefill_fn(self, max_len: int, enc_len: int = 0):
+        """jitted (params, PrefillRequest, state, slot) -> (first, state);
+        ``state`` is donated. Cached per (max_len, enc_len) geometry."""
+        key = (max_len, enc_len)
+        if key not in self._slot_prefill:
+            from repro.train.steps import build_slot_prefill_step
+            self._slot_prefill[key] = jax.jit(
+                build_slot_prefill_step(self.cfg, self.mesh, max_len=max_len,
+                                        enc_len=enc_len),
+                donate_argnums=(2,))
+        return self._slot_prefill[key]
+
+    def loss_fn(self):
+        """jitted (params, batch) -> (loss, metrics)."""
+        if self._loss is None:
+            cfg, shard = self.cfg, self._shard()
+            fam = self._ops
+            self._loss = jax.jit(
+                lambda params, batch: fam.loss(cfg, params, batch, shard))
+        return self._loss
+
+    def loss(self, batch):
+        return self.loss_fn()(self.params, batch)
+
+    def prefill(self, req: peft_lib.PrefillRequest, state):
+        return self.prefill_fn()(self.params, req, state)
+
+    def decode(self, tokens, state, pos,
+               ctx: Optional[peft_lib.AdapterContext] = None):
+        return self.decode_fn()(self.params, ctx, tokens, state, pos)
+
+    def _shard(self):
+        if self.mesh is None:
+            from repro.models.layers import no_shard
+            return no_shard
+        from repro.sharding.specs import ShardingRules
+        return ShardingRules(self.cfg, self.mesh).make_sharder()

@@ -29,13 +29,12 @@ from repro.analysis.roofline import Roofline, advice, model_flops
 from repro.config import (SHAPES, get_config, list_archs, parse_overrides,
                           shape_applicable)
 from repro.core import peft as peft_lib
+from repro.core.runtime import ModelRuntime
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (decode_input_specs, prefill_input_specs,
                                 train_input_specs)
-from repro.models import api
 from repro.sharding.specs import ShardingRules, dp_size, named
-from repro.train.steps import (TrainStepConfig, build_decode_step,
-                               build_prefill_step, build_train_step)
+from repro.train.steps import TrainStepConfig, build_train_step
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
 
@@ -75,7 +74,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, peft: str = "gsoft",
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
         chips = int(len(mesh.devices.ravel()))
         rules = ShardingRules(cfg, mesh)
-        params_abs = api.abstract_params(cfg)
+        rt = ModelRuntime.abstract(cfg, mesh=mesh)
+        params_abs = rt.params
         params_sh = named(mesh, rules.params_tree(params_abs))
         bdiv = shape.global_batch % dp_size(mesh) == 0
 
@@ -104,23 +104,31 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, peft: str = "gsoft",
             rec["microbatches"] = n_micro
         elif shape.kind == "prefill":
             batch_abs, state_abs = prefill_input_specs(cfg, shape)
-            step = build_prefill_step(cfg, mesh, batch_divisible=bdiv)
+            step = rt.build_prefill(batch_divisible=bdiv)
+
+            def prefill_cell(params, batch, state):
+                return step(params, peft_lib.PrefillRequest(batch=batch),
+                            state)
             st_sh = named(mesh, rules.decode_state_spec(state_abs,
                                                         shape.global_batch))
             b_sh = named(mesh, rules.batch_spec(batch_abs, shape.global_batch))
-            lowered = jax.jit(step, in_shardings=(params_sh, b_sh, st_sh),
+            lowered = jax.jit(prefill_cell,
+                              in_shardings=(params_sh, b_sh, st_sh),
                               donate_argnums=(2,)).lower(
                 params_abs, batch_abs, state_abs)
             tokens_per_step = shape.global_batch * shape.seq_len
         else:  # decode
             tokens_abs, state_abs, pos_abs = decode_input_specs(cfg, shape)
-            step = build_decode_step(cfg, mesh, batch_divisible=bdiv)
+            step = rt.build_decode(batch_divisible=bdiv)
+
+            def decode_cell(params, tokens, state, pos):
+                return step(params, None, tokens, state, pos)
             st_sh = named(mesh, rules.decode_state_spec(state_abs,
                                                         shape.global_batch))
             tok_sh = named(mesh, rules.batch_spec(tokens_abs,
                                                   shape.global_batch))
             pos_sh = named(mesh, jax.sharding.PartitionSpec())
-            lowered = jax.jit(step,
+            lowered = jax.jit(decode_cell,
                               in_shardings=(params_sh, tok_sh, st_sh, pos_sh),
                               donate_argnums=(2,)).lower(
                 params_abs, tokens_abs, state_abs, pos_abs)
@@ -144,7 +152,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, peft: str = "gsoft",
                 f.write(hlo)
         del hlo
 
-        n_active = api.active_param_count(cfg)
+        n_active = rt.active_param_count()
         mf = model_flops(n_active, tokens_per_step,
                          "train" if shape.is_train else "serve")
         rl = Roofline(

@@ -10,8 +10,8 @@ adapter bank.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
         --requests 16 --arrival-rate 4
 
-    # multi-adapter serving from saved banks (see CheckpointManager
-    # .save_adapters); requests round-robin over the loaded adapters
+    # multi-adapter serving from saved banks (see ModelRuntime.save_bank /
+    # load_named_adapters); requests round-robin over the loaded adapters
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
         --adapters alice=/ckpts/alice bob=/ckpts/bob
 
@@ -27,36 +27,12 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
 from repro.config import get_config, get_smoke_config, parse_overrides
 from repro.core import peft as peft_lib
+from repro.core.runtime import ModelRuntime
 from repro.launch.mesh import make_mesh
-from repro.models import api
 from repro.serve.engine import (ServeEngine, StaticServeEngine,
                                 latency_percentiles)
-
-
-def load_adapter_bank(entries):
-    """``entries``: ["name=ckpt_dir" | "ckpt_dir"] -> (adapters_by_name,
-    PEFTConfig). A bare dir loads every adapter in that bank; ``name=dir``
-    picks one."""
-    adapters_by_name = {}
-    peft_cfg = None
-    for entry in entries:
-        name, _, path = entry.rpartition("=")
-        loaded, cfg = CheckpointManager(path).restore_adapters()
-        if peft_cfg is not None and cfg != peft_cfg:
-            raise ValueError(f"adapter {entry}: PEFTConfig mismatch "
-                             f"({cfg} != {peft_cfg})")
-        peft_cfg = cfg
-        if name:  # name=dir form: pick one adapter out of the bank
-            if name not in loaded:
-                raise KeyError(f"{path} has adapters {list(loaded)}, "
-                               f"not {name!r}")
-            adapters_by_name[name] = loaded[name]
-        else:     # bare dir: load every adapter it holds
-            adapters_by_name.update(loaded)
-    return adapters_by_name, peft_cfg
 
 
 def make_demo_adapters(names, params, peft_cfg, seed=1, scale=0.1):
@@ -140,11 +116,10 @@ def main():
         d, m = (int(x) for x in args.mesh.split(","))
         mesh = make_mesh(d, m)
 
-    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0), mesh=mesh)
     max_len = cfg.frontend_tokens + args.prompt_len + args.max_new + 8
 
     # ---- adapter bank ------------------------------------------------------
-    bank = None
     adapters_by_name = {}
     if args.adapters and args.demo_adapters:
         raise SystemExit("--adapters and --demo-adapters are exclusive: "
@@ -157,43 +132,44 @@ def main():
                          "combining it with a per-request bank would rotate "
                          "already-rotated activations — pick one")
     if args.adapters or args.demo_adapters:
-        bank_cfg = peft_lib.PEFTConfig(method="gsoft", block_size=8,
-                                       use_pallas=cfg.use_pallas)
+        bank_peft = peft_lib.PEFTConfig(method="gsoft", block_size=8,
+                                        use_pallas=cfg.use_pallas)
         if args.demo_adapters:
-            adapters_by_name = make_demo_adapters(args.demo_adapters, params,
-                                                  bank_cfg)
+            adapters_by_name = make_demo_adapters(args.demo_adapters,
+                                                  rt.params, bank_peft)
         else:
-            adapters_by_name, bank_cfg = load_adapter_bank(args.adapters)
+            adapters_by_name, bank_peft = ModelRuntime.load_named_adapters(
+                args.adapters)
         if args.save_adapters:
-            mgr = CheckpointManager(args.save_adapters)
-            mgr.save_adapters(0, adapters_by_name, bank_cfg)
-            adapters_by_name, bank_cfg = mgr.restore_adapters()
+            rt.save_bank(args.save_adapters, adapters_by_name, bank_peft)
+            adapters_by_name, bank_peft = ModelRuntime.load_named_adapters(
+                [args.save_adapters])
             print(f"round-tripped {list(adapters_by_name)} through "
                   f"{args.save_adapters}")
-        bank = peft_lib.build_adapter_bank(bank_cfg, params, adapters_by_name)
-        print(f"adapter bank: {bank.num_slots} slots {list(bank.names)}")
+        rt = rt.with_bank(adapters_by_name, bank_peft)
+        print(f"adapter bank: {rt.bank.num_slots} slots "
+              f"{list(rt.bank.names)}")
 
     # ---- merged single-adapter demo (static story) -------------------------
-    adapters = peft_cfg = None
     if args.peft_demo:
         peft_cfg = peft_lib.PEFTConfig(method="gsoft", block_size=8)
-        adapters = peft_lib.init_peft(peft_cfg, params, jax.random.PRNGKey(1))
+        adapters = peft_lib.init_peft(peft_cfg, rt.params,
+                                      jax.random.PRNGKey(1))
+        rt = ModelRuntime(cfg, rt.params, mesh=mesh, adapters=adapters,
+                          peft_cfg=peft_cfg)
 
     if args.engine == "static":
-        if bank is not None:
+        if rt.banked:
             raise SystemExit("--adapters needs --engine continuous "
                              "(static serving merges ONE adapter offline)")
-        eng = StaticServeEngine(cfg, params, max_batch=args.max_batch,
-                                max_len=max_len, mesh=mesh,
-                                adapters=adapters, peft_cfg=peft_cfg)
+        eng = StaticServeEngine(rt, max_batch=args.max_batch,
+                                max_len=max_len)
     else:
-        eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                          max_len=max_len, mesh=mesh, adapters=adapters,
-                          peft_cfg=peft_cfg, bank=bank)
+        eng = ServeEngine(rt, max_batch=args.max_batch, max_len=max_len)
 
     # ---- synthetic traffic -------------------------------------------------
     rng = np.random.default_rng(0)
-    names = list(adapters_by_name) if bank is not None else [None]
+    names = list(adapters_by_name) if rt.banked else [None]
     requests = []
     for i in range(args.requests):
         plen = (int(rng.integers(4, args.prompt_len + 1))
@@ -203,7 +179,7 @@ def main():
         req = {"prompt": rng.integers(1, min(cfg.vocab_size, 255),
                                       size=plen).tolist(),
                "max_new_tokens": mnew}
-        if bank is not None:
+        if rt.banked:
             req["adapter"] = names[i % len(names)]
         requests.append(req)
 

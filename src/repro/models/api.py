@@ -1,25 +1,38 @@
-"""Family-dispatched model API — the single entry point the trainer, server,
-dry-run and tests use.  Everything downstream is family-agnostic."""
+"""Family-dispatched model API — a thin lookup over the family registry.
+
+Dispatch is keyed on ``ModelConfig.family`` via ``repro.models.registry``
+(every family registers a ``FamilyOps`` record; there is no hardcoded
+family boolean here). Serving entry points live on
+``repro.core.runtime.ModelRuntime``; the module-level ``prefill`` /
+``decode_step`` wrappers below are DEPRECATED shims that accept the old
+``bank``/``adapter_ids``/``bank_cfg`` kwarg triple and forward to the
+registry ops through an ``AdapterContext``.
+"""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+import math
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from . import encdec, transformer
+from repro.core.peft import AdapterContext, PrefillRequest
+from . import encdec, transformer  # noqa: F401  (register their FamilyOps)
+from . import registry
 from .layers import no_shard
 
 Array = jnp.ndarray
 
 
-def _is_encdec(cfg: ModelConfig) -> bool:
-    return cfg.family == "encdec"
+def family_ops(cfg: ModelConfig) -> registry.FamilyOps:
+    """The FamilyOps record for ``cfg.family`` (KeyError on unknown family,
+    listing what IS registered)."""
+    return registry.get(cfg.family)
 
 
 def init_params(cfg: ModelConfig, key: jax.Array):
-    return (encdec.init_encdec if _is_encdec(cfg) else transformer.init_lm)(cfg, key)
+    return family_ops(cfg).init_params(cfg, key)
 
 
 def abstract_params(cfg: ModelConfig):
@@ -27,20 +40,16 @@ def abstract_params(cfg: ModelConfig):
 
 
 def forward(cfg: ModelConfig, params, batch, shard=no_shard):
-    return (encdec.forward if _is_encdec(cfg) else transformer.forward)(
-        cfg, params, batch, shard)
+    return family_ops(cfg).forward(cfg, params, batch, shard)
 
 
 def loss_fn(cfg: ModelConfig, params, batch, shard=no_shard):
-    return (encdec.lm_loss if _is_encdec(cfg) else transformer.lm_loss)(
-        cfg, params, batch, shard)
+    return family_ops(cfg).loss(cfg, params, batch, shard)
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       enc_len: int = 0):
-    if _is_encdec(cfg):
-        return encdec.init_decode_state(cfg, batch, max_len, enc_len)
-    return transformer.init_decode_state(cfg, batch, max_len)
+    return family_ops(cfg).init_decode_state(cfg, batch, max_len, enc_len)
 
 
 def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int,
@@ -49,32 +58,69 @@ def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         lambda: init_decode_state(cfg, batch, max_len, enc_len))
 
 
-def prefill(cfg: ModelConfig, params, batch, state, shard=no_shard,
-            last_idx=None, bank=None, adapter_ids=None, bank_cfg=None):
-    """``last_idx`` gathers each row's logits at its own last valid prompt
-    position (ragged-prompt fix); ``bank``/``adapter_ids``/``bank_cfg``
-    apply per-request GS adapter rotations (multi-adapter serving)."""
-    return (encdec.prefill if _is_encdec(cfg) else transformer.prefill)(
-        cfg, params, batch, state, shard, last_idx=last_idx, bank=bank,
-        adapter_ids=adapter_ids, bank_cfg=bank_cfg)
-
-
-def decode_step(cfg: ModelConfig, params, tokens, state, pos, shard=no_shard,
-                bank=None, adapter_ids=None, bank_cfg=None):
-    """``pos`` may be a scalar (lockstep batch) or an int32 (B,) array of
-    per-slot write positions (continuous batching)."""
-    return (encdec.decode_step if _is_encdec(cfg) else transformer.decode_step)(
-        cfg, params, tokens, state, pos, shard, bank=bank,
-        adapter_ids=adapter_ids, bank_cfg=bank_cfg)
-
-
 def param_count(cfg: ModelConfig) -> int:
-    import math
     return sum(int(math.prod(l.shape))
                for l in jax.tree.leaves(abstract_params(cfg)))
 
 
 def active_param_count(cfg: ModelConfig) -> int:
-    if _is_encdec(cfg):
-        return param_count(cfg)
-    return transformer.active_param_count(cfg)
+    return family_ops(cfg).active_param_count(cfg)
+
+
+# ---------------------------------------------------------------------------
+# DEPRECATED call surface — the old kwarg-threading prefill/decode_step.
+# Kept one release as shims: they accept the retired loose kwargs, bundle
+# them into an AdapterContext/PrefillRequest, and forward to the registry.
+# ---------------------------------------------------------------------------
+
+_LEGACY_KWARGS = ("bank", "adapter_ids", "bank_cfg")
+_legacy_warned = False
+
+
+def _warn_legacy(name: str) -> None:
+    global _legacy_warned
+    if not _legacy_warned:
+        warnings.warn(
+            f"repro.models.api.{name} is deprecated: use "
+            "repro.core.runtime.ModelRuntime (or the family registry ops) "
+            "with AdapterContext/PrefillRequest instead of the "
+            "bank/adapter_ids/bank_cfg kwargs",
+            DeprecationWarning, stacklevel=3)
+        _legacy_warned = True
+
+
+def _legacy_context(name: str, legacy: dict):
+    unknown = set(legacy) - set(_LEGACY_KWARGS)
+    if unknown:
+        raise TypeError(f"{name}() got unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    tree, ids, cfg = (legacy.get(k) for k in _LEGACY_KWARGS)
+    if (tree is None) != (ids is None):
+        raise ValueError(
+            f"{name}(): per-request rotation needs both the stacked adapter "
+            "tree and the slot ids — got half the legacy triple, which "
+            "would silently serve the un-adapted base model; migrate to "
+            "AdapterContext")
+    if tree is None:
+        return None
+    return AdapterContext(tree, jnp.asarray(ids, jnp.int32), cfg)
+
+
+def prefill(cfg: ModelConfig, params, batch, state, shard=no_shard,
+            last_idx=None, **legacy):
+    """DEPRECATED — build a PrefillRequest and call the registry prefill
+    (or use ModelRuntime). Old kwargs are forwarded once with a warning."""
+    _warn_legacy("prefill")
+    req = PrefillRequest(batch=batch, last_idx=last_idx,
+                         ctx=_legacy_context("prefill", legacy))
+    return family_ops(cfg).prefill(cfg, params, req, state, shard)
+
+
+def decode_step(cfg: ModelConfig, params, tokens, state, pos, shard=no_shard,
+                **legacy):
+    """DEPRECATED — call the registry decode_step with an AdapterContext
+    (or use ModelRuntime). Old kwargs are forwarded once with a warning."""
+    _warn_legacy("decode_step")
+    return family_ops(cfg).decode_step(
+        cfg, params, tokens, state, pos, shard,
+        ctx=_legacy_context("decode_step", legacy))

@@ -8,12 +8,14 @@ in the decode state (standard serving optimization).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.core.peft import AdapterContext, PrefillRequest
+from . import registry
 from .attention import attention_block, init_attention, init_cache, online_attention
 from .layers import (Shard, apply_mlp, cross_entropy, embed_init,
                      init_stacked_mlp, no_shard, rms_norm, softcap,
@@ -136,24 +138,24 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
-def prefill(cfg: ModelConfig, params, batch: Dict[str, Array], state,
-            shard: Shard = no_shard, last_idx=None, bank=None,
-            adapter_ids=None, bank_cfg=None):
-    if bank is not None:
+def prefill(cfg: ModelConfig, params, req: PrefillRequest, state,
+            shard: Shard = no_shard):
+    if req.ctx is not None:
         raise ValueError("adapter bank serving not supported for encdec")
+    batch = req.batch
     enc_out = encode(cfg, params, batch["frames"], shard)
     h = jnp.take(params["embed"]["table"], batch["tokens"], axis=0
                  ).astype(cfg.act_dtype)
     h, new_kv = _decoder_pass(cfg, params, shard(h, "act_btd"), enc_out,
                               shard, cache=state["kv"])
-    logits = _unembed(cfg, params, _gather_last(h, last_idx), shard)
+    logits = _unembed(cfg, params, _gather_last(h, req.last_idx), shard)
     return logits, {"kv": new_kv, "enc_out": enc_out}
 
 
 def decode_step(cfg: ModelConfig, params, tokens: Array, state, pos,
-                shard: Shard = no_shard, bank=None, adapter_ids=None,
-                bank_cfg=None):
-    if bank is not None:
+                shard: Shard = no_shard,
+                ctx: Optional[AdapterContext] = None):
+    if ctx is not None:
         raise ValueError("adapter bank serving not supported for encdec")
     h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.act_dtype)
     h = shard(h, "act_btd")
@@ -161,3 +163,20 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state, pos,
                               cache=state["kv"], cache_pos=pos)
     logits = _unembed(cfg, params, h, shard)
     return logits, {"kv": new_kv, "enc_out": state["enc_out"]}
+
+
+def _active_param_count(cfg: ModelConfig) -> int:
+    from . import api  # lazy: api imports this module at load time
+    return api.param_count(cfg)  # encdec is dense — all params active
+
+
+registry.register(registry.FamilyOps(
+    family="encdec",
+    init_params=init_encdec,
+    forward=forward,
+    loss=lm_loss,
+    init_decode_state=init_decode_state,
+    prefill=prefill,
+    decode_step=decode_step,
+    active_param_count=_active_param_count,
+))

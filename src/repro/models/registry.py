@@ -1,0 +1,58 @@
+"""Family registry: each model family registers a ``FamilyOps`` record and
+``repro.models.api`` / ``ModelRuntime`` dispatch on ``ModelConfig.family`` —
+no hardcoded family booleans, and new families (or new orthogonal-FT
+variants that need their own serve path) plug in without touching every
+call-site signature.
+
+``transformer`` registers explicit entries for decoder / vlm / ssm / hybrid
+(previously the last three were silently routed through the decoder path);
+``encdec`` registers itself. Importing ``repro.models.api`` (or the
+``repro.models`` package) triggers registration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyOps:
+    """The per-family call surface. Uniform signatures:
+
+    * ``init_params(cfg, key) -> params``
+    * ``forward(cfg, params, batch, shard=no_shard) -> (logits, aux)``
+    * ``loss(cfg, params, batch, shard=no_shard) -> (loss, metrics)``
+    * ``init_decode_state(cfg, batch, max_len, enc_len=0) -> state``
+    * ``prefill(cfg, params, req: PrefillRequest, state, shard=no_shard)
+      -> (last_logits, state)``
+    * ``decode_step(cfg, params, tokens, state, pos, shard=no_shard,
+      ctx: AdapterContext | None = None) -> (logits, state)``
+    * ``active_param_count(cfg) -> int``
+    """
+    family: str
+    init_params: Callable
+    forward: Callable
+    loss: Callable
+    init_decode_state: Callable
+    prefill: Callable
+    decode_step: Callable
+    active_param_count: Callable
+
+
+_FAMILIES: Dict[str, FamilyOps] = {}
+
+
+def register(ops: FamilyOps) -> FamilyOps:
+    _FAMILIES[ops.family] = ops
+    return ops
+
+
+def get(family: str) -> FamilyOps:
+    if family not in _FAMILIES:
+        raise KeyError(f"unknown model family {family!r}; registered "
+                       f"families: {sorted(_FAMILIES)}")
+    return _FAMILIES[family]
+
+
+def families() -> List[str]:
+    return sorted(_FAMILIES)

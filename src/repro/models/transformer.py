@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core.peft import bank_group_rotator
+from repro.core.peft import AdapterContext, PrefillRequest
+from . import registry
 from .attention import attention_block, init_attention, init_cache
 from .layers import (Shard, apply_mlp, cross_entropy, embed_init, init_mlp,
                      init_stacked_mlp, no_shard, rms_norm, softcap,
@@ -267,30 +268,28 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def decode_step(cfg: ModelConfig, params, tokens: Array, state,
-                pos, shard: Shard = no_shard, bank=None, adapter_ids=None,
-                bank_cfg=None):
+                pos, shard: Shard = no_shard,
+                ctx: Optional[AdapterContext] = None):
     """One token for the whole batch. tokens: (B, 1); pos: scalar int32
     (current write index) or an int32 (B,) array of per-slot positions
     (continuous batching). Returns (logits (B, 1, Vp), new_state).
 
-    ``bank``/``adapter_ids``/``bank_cfg``: per-request GS adapter bank
-    (AdapterBank.tree / (B,) slot ids / the bank's PEFTConfig) — row i
-    rotates its activations with adapter ``adapter_ids[i]`` before every
-    adapted projection (activation-side x Q; slot 0 is the identity).
+    ``ctx``: per-request AdapterContext (bank subtree + (B,) slot ids +
+    PEFT config as one pytree) — row i rotates its activations with adapter
+    ``ctx.slots[i]`` before every adapted projection (activation-side x Q;
+    slot 0 is the identity).
     """
     h = _embed(cfg, params, tokens, shard)
 
     if cfg.family in ("decoder", "vlm"):
-        bl_tree = bank.get("layers") if bank is not None else None
+        bl_tree = ctx.group("layers") if ctx is not None else None
         if bl_tree is not None:
             def body(hc, xs):
                 lp, cache, bl = xs
                 hc, _, new_cache = _decoder_layer(
                     cfg, lp, hc, shard, cache=cache, cache_pos=pos,
-                    rot_attn=bank_group_rotator(bank_cfg, bl.get("attn"),
-                                                adapter_ids),
-                    rot_mlp=bank_group_rotator(bank_cfg, bl.get("mlp"),
-                                               adapter_ids))
+                    rot_attn=ctx.rotator(bl.get("attn")),
+                    rot_mlp=ctx.rotator(bl.get("mlp")))
                 return hc, new_cache
             h, new_kv = jax.lax.scan(
                 body, h, (params["layers"], state["kv"], bl_tree))
@@ -302,7 +301,7 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state,
                 return hc, new_cache
             h, new_kv = jax.lax.scan(body, h, (params["layers"], state["kv"]))
         new_state = {"kv": new_kv}
-    elif bank is not None:
+    elif ctx is not None:
         raise ValueError(f"adapter bank serving not supported for "
                          f"family {cfg.family}")
     elif cfg.family == "ssm":
@@ -352,45 +351,41 @@ def _gather_last(h: Array, last_idx) -> Array:
     return jnp.take_along_axis(h, idx[:, None, None], axis=1)
 
 
-def prefill(cfg: ModelConfig, params, batch: Dict[str, Array], state,
-            shard: Shard = no_shard, last_idx=None, bank=None,
-            adapter_ids=None, bank_cfg=None):
+def prefill(cfg: ModelConfig, params, req: PrefillRequest, state,
+            shard: Shard = no_shard):
     """Full-prompt forward that fills caches; returns (last_logits, state).
 
-    ``last_idx`` (scalar or (B,) int32): index of each row's last valid
-    position in the processed stream (prompt_len - 1, plus the patch-prefix
-    offset for vlm) — logits are gathered there instead of at the padded
-    batch max. ``bank``/``adapter_ids``/``bank_cfg``: per-request adapter
-    bank, as in ``decode_step``.
+    ``req`` bundles the input batch, ``last_idx`` (scalar or (B,) int32:
+    index of each row's last valid position in the processed stream —
+    prompt_len - 1, plus the patch-prefix offset for vlm; logits are
+    gathered there instead of at the padded batch max) and the optional
+    per-request AdapterContext, as in ``decode_step``.
 
     For attention families the KV cache is written; SSM/hybrid prefill runs
     the scan then (for brevity) re-derives the final state via decode of the
     last token — states for SSD prefill are produced by the chunked scan in
     a production setting; here the decode path is the state authority."""
+    batch, last_idx, ctx = req.batch, req.last_idx, req.ctx
     tokens = batch["tokens"]
-    b, s = tokens.shape
     h = _embed(cfg, params, tokens, shard)
     if cfg.family in ("decoder", "vlm"):
         if cfg.family == "vlm" and "patches" in batch:
             patches = batch["patches"].astype(cfg.act_dtype)
-            prot = bank_group_rotator(
-                bank_cfg, bank.get("patch_proj") if bank is not None else None,
-                adapter_ids)
+            prot = (ctx.rotator(ctx.group("patch_proj"))
+                    if ctx is not None else None)
             if prot is not None:
                 patches = prot("wi", patches)
             pe = patches @ params["patch_proj"]["wi"].astype(cfg.act_dtype)
             h = jnp.concatenate([shard(pe, "act_btd"), h], axis=1)
 
-        bl_tree = bank.get("layers") if bank is not None else None
+        bl_tree = ctx.group("layers") if ctx is not None else None
         if bl_tree is not None:
             def body(hc, xs):
                 lp, cache, bl = xs
                 hc, _, new_cache = _decoder_layer(
                     cfg, lp, hc, shard, cache=cache,
-                    rot_attn=bank_group_rotator(bank_cfg, bl.get("attn"),
-                                                adapter_ids),
-                    rot_mlp=bank_group_rotator(bank_cfg, bl.get("mlp"),
-                                               adapter_ids))
+                    rot_attn=ctx.rotator(bl.get("attn")),
+                    rot_mlp=ctx.rotator(bl.get("mlp")))
                 return hc, new_cache
             h, new_kv = jax.lax.scan(_remat(cfg, body), h,
                                      (params["layers"], state["kv"], bl_tree))
@@ -404,10 +399,34 @@ def prefill(cfg: ModelConfig, params, batch: Dict[str, Array], state,
                                      (params["layers"], state["kv"]))
         logits = _unembed(cfg, params, _gather_last(h, last_idx), shard)
         return logits, {"kv": new_kv}
-    if bank is not None:
+    if ctx is not None:
         raise ValueError(f"adapter bank serving not supported for "
                          f"family {cfg.family}")
     # ssm / hybrid: run the train-path forward for logits; advance states by
     # scanning decode steps is O(S) — production uses the SSD state output.
     logits, _ = forward(cfg, params, batch, shard)
     return _gather_last(logits, last_idx), state
+
+
+# ---------------------------------------------------------------------------
+# registry entries — one EXPLICIT record per family this module implements
+# (ssm / hybrid / vlm used to be silently routed through the decoder path)
+# ---------------------------------------------------------------------------
+
+def _init_decode_state_ops(cfg: ModelConfig, batch: int, max_len: int,
+                           enc_len: int = 0):
+    del enc_len  # uniform FamilyOps signature; no encoder stream here
+    return init_decode_state(cfg, batch, max_len)
+
+
+for _family in ("decoder", "vlm", "ssm", "hybrid"):
+    registry.register(registry.FamilyOps(
+        family=_family,
+        init_params=init_lm,
+        forward=forward,
+        loss=lm_loss,
+        init_decode_state=_init_decode_state_ops,
+        prefill=prefill,
+        decode_step=decode_step,
+        active_param_count=active_param_count,
+    ))

@@ -1,5 +1,7 @@
 """Serving engines: continuous batching with slot-based KV cache + the
-static-batch reference engine.
+static-batch reference engine. Both are drivers over ONE ``ModelRuntime``
+(`repro.core.runtime`), which owns the jitted prefill/decode closures and
+the optional per-request adapter bank.
 
 ``ServeEngine`` (the default) is a scheduler over ``max_batch`` persistent
 decode slots:
@@ -12,22 +14,23 @@ decode slots:
   * admission prefills a single request (batch 1, prompt padded to a
     power-of-two bucket to bound recompiles) and scatters the fresh state
     row into the slot (``train.steps.build_slot_prefill_step``);
-  * each slot carries an adapter id into a per-request GS adapter bank
-    (``core.peft.AdapterBank``): row i rotates its activations with its own
-    GSOFT rotation x Q_i before every adapted matmul — O(b*d) per token,
-    versus O(d^2) to re-merge a dense rotation per request. Slot 0 of the
-    bank is the identity (serves the base model).
+  * when the runtime carries an ``AdapterBank``, each slot's id flows
+    through an ``AdapterContext`` pytree: row i rotates its activations
+    with its own GSOFT rotation x Q_i before every adapted matmul —
+    O(b*d) per token, versus O(d^2) to re-merge a dense rotation per
+    request. Slot 0 of the bank is the identity (serves the base model).
 
 ``StaticServeEngine`` is the drain-queue -> pad -> prefill -> lockstep
 decode reference (the paper's merged-weight serving story, §6.1): one
-adapter merged into the weights offline, zero per-token overhead. Use it
-when every request shares one fine-tune; use ``ServeEngine`` + a bank when
-requests carry different adapters.
+adapter merged into the weights offline (``ModelRuntime(adapters=...,
+peft_cfg=...)``), zero per-token overhead. Use it when every request shares
+one fine-tune; use ``ServeEngine`` over a banked runtime when requests
+carry different adapters.
 
 Both engines sample each row's first token at its OWN last valid prompt
 index (ragged prompts — shorter rows no longer read a padded position) and
-decode with per-row positions. Sharding-ready: pass a mesh to shard
-params/caches like the dry-run does.
+decode with per-row positions. Sharding-ready: build the runtime with a
+mesh to shard params/caches like the dry-run does.
 """
 from __future__ import annotations
 
@@ -36,15 +39,12 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.core import peft as peft_lib
-from repro.models import api
-from repro.train.steps import (build_decode_step, build_prefill_step,
-                               build_slot_prefill_step)
+from repro.core.peft import PrefillRequest
+from repro.core.runtime import ModelRuntime
 
 
 @dataclasses.dataclass
@@ -82,6 +82,20 @@ def _check_capacity(cfg: ModelConfig, prompt: List[int], max_new: int,
                          f"exceeds max_len={max_len}")
 
 
+def _family_feed(cfg: ModelConfig, toks: np.ndarray,
+                 enc_len: int) -> Dict[str, Any]:
+    """Prefill feed for a (B, S) token block, plus the per-family extra
+    streams (encdec frames / vlm patches) — shared by both engines."""
+    feed: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+    b = toks.shape[0]
+    if cfg.family == "encdec":
+        feed["frames"] = jnp.zeros((b, enc_len, cfg.d_model), cfg.act_dtype)
+    if cfg.family == "vlm":
+        feed["patches"] = jnp.zeros(
+            (b, cfg.frontend_tokens, cfg.frontend_dim), cfg.act_dtype)
+    return feed
+
+
 def latency_percentiles(requests: List[Request],
                         qs=(50, 95)) -> Dict[int, float]:
     """{q: seconds} request-latency percentiles over finished Requests."""
@@ -92,46 +106,28 @@ def latency_percentiles(requests: List[Request],
 
 
 class ServeEngine:
-    """Continuous-batching engine over ``max_batch`` persistent slots."""
+    """Continuous-batching engine over ``max_batch`` persistent slots,
+    driving one ``ModelRuntime``."""
 
-    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_len: int = 256, eos_id: int = 0, mesh=None,
-                 adapters=None, peft_cfg: Optional[peft_lib.PEFTConfig] = None,
-                 bank: Optional[peft_lib.AdapterBank] = None):
-        self.cfg = cfg
-        if adapters and peft_cfg is not None:
-            if bank is not None:
-                raise ValueError(
-                    "pass EITHER merged adapters (adapters + peft_cfg) OR a "
-                    "per-request bank — merging and then rotating per "
-                    "request would apply adapters twice")
-            params = peft_lib.merge_tree(peft_cfg, params, adapters)  # offline
-        self.params = params
+    def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
+                 max_len: int = 256, eos_id: int = 0):
+        self.rt = runtime
+        self.cfg = runtime.cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.mesh = mesh
-        self.bank = bank
-        self._bank_tree = bank.tree if bank is not None else {}
-        bank_cfg = bank.cfg if bank is not None else None
         self._enc_len = max(max_len // 4, 8)
-        self._prefix = _stream_prefix(cfg)
+        self._prefix = _stream_prefix(self.cfg)
 
-        self._slot_prefill = jax.jit(
-            build_slot_prefill_step(cfg, mesh, max_len=max_len,
-                                    enc_len=self._enc_len, bank_cfg=bank_cfg),
-            donate_argnums=(3,))
-        self._banked = bank_cfg is not None
-        self._decode = jax.jit(
-            build_decode_step(cfg, mesh, bank_cfg=bank_cfg),
-            donate_argnums=(3,) if self._banked else (2,))
+        self._slot_prefill = runtime.slot_prefill_fn(max_len, self._enc_len)
+        self._decode = runtime.decode_fn()
 
-        self._state = api.init_decode_state(cfg, max_batch, max_len,
-                                            enc_len=self._enc_len)
+        self._state = runtime.init_decode_state(max_batch, max_len,
+                                                enc_len=self._enc_len)
         # per-slot bookkeeping (host side)
         self._pos = np.zeros(max_batch, np.int32)
         self._last = np.zeros(max_batch, np.int32)
-        self._adapter_ids = np.zeros(max_batch, np.int32)
+        self._slot_ids = np.zeros(max_batch, np.int32)
         self._slot_req: List[Optional[Request]] = [None] * max_batch
         self._outs: List[List[int]] = [[] for _ in range(max_batch)]
 
@@ -147,11 +143,8 @@ class ServeEngine:
     # -- submission -----------------------------------------------------------
     def add_request(self, prompt: List[int], max_new_tokens: int = 16,
                     adapter: Optional[str] = None) -> int:
-        if self.bank is None and adapter is not None:
-            raise ValueError("engine has no adapter bank; build one with "
-                             "core.peft.build_adapter_bank")
-        if self.bank is not None:
-            self.bank.slot(adapter)          # validate the name eagerly
+        self.rt.slot(adapter)   # validate eagerly (raises on unknown name
+        # or on naming an adapter when the runtime has no bank)
         _check_capacity(self.cfg, prompt, max_new_tokens, self.max_len)
         rid = self._next_id
         self._next_id += 1
@@ -181,15 +174,7 @@ class ServeEngine:
         bucket = self._bucket(len(prompt))
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :len(prompt)] = prompt
-        feed: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
-        if self.cfg.family == "encdec":
-            feed["frames"] = jnp.zeros((1, self._enc_len, self.cfg.d_model),
-                                       self.cfg.act_dtype)
-        if self.cfg.family == "vlm":
-            feed["patches"] = jnp.zeros(
-                (1, self.cfg.frontend_tokens, self.cfg.frontend_dim),
-                self.cfg.act_dtype)
-        return feed
+        return _family_feed(self.cfg, toks, self._enc_len)
 
     def _finish(self, slot: int) -> None:
         req = self._slot_req[slot]
@@ -210,13 +195,14 @@ class ServeEngine:
             if self._slot_req[slot] is not None:
                 continue
             req = self._queue.popleft()
-            aid = self.bank.slot(req.adapter) if self.bank is not None else 0
+            aid = self.rt.slot(req.adapter)
             last_idx = self._prefix + len(req.prompt) - 1
+            feed = PrefillRequest(batch=self._feed(req.prompt),
+                                  last_idx=jnp.asarray(last_idx, jnp.int32),
+                                  ctx=self.rt.context([aid]))
             first, self._state = self._slot_prefill(
-                self.params, self._bank_tree, self._feed(req.prompt),
-                self._state, jnp.asarray(slot, jnp.int32),
-                jnp.asarray(aid, jnp.int32),
-                jnp.asarray(last_idx, jnp.int32))
+                self.rt.params, feed, self._state,
+                jnp.asarray(slot, jnp.int32))
             first = int(first)
             req.t_first = time.perf_counter()
             self.stats["prefills"] += 1
@@ -228,7 +214,7 @@ class ServeEngine:
             self._outs[slot] = [first]
             self._pos[slot] = self._prefix + len(req.prompt)
             self._last[slot] = first
-            self._adapter_ids[slot] = aid
+            self._slot_ids[slot] = aid
             if first == self.eos_id or req.max_new_tokens <= 1:
                 self._finish(slot)
 
@@ -236,13 +222,9 @@ class ServeEngine:
         """One jitted decode step over the full slot array."""
         tokens = jnp.asarray(self._last[:, None])
         pos = jnp.asarray(self._pos)
-        if self._banked:
-            nt, _, self._state = self._decode(
-                self.params, self._bank_tree, tokens, self._state, pos,
-                jnp.asarray(self._adapter_ids))
-        else:
-            nt, _, self._state = self._decode(self.params, tokens,
-                                              self._state, pos)
+        ctx = self.rt.context(self._slot_ids)
+        nt, _, self._state = self._decode(self.rt.params, ctx, tokens,
+                                          self._state, pos)
         self.stats["decode_steps"] += 1
         vals = np.asarray(nt[:, 0])
         for slot in range(self.max_batch):
@@ -286,26 +268,26 @@ class ServeEngine:
 
 class StaticServeEngine:
     """Static-batch reference: drain queue -> pad -> prefill -> lockstep
-    decode. Adapters (one per deployment) are merged into the weights
-    offline — the paper's zero-overhead serving mode."""
+    decode. Adapters (one per deployment) are merged into the runtime's
+    weights offline — the paper's zero-overhead serving mode."""
 
-    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_len: int = 256, eos_id: int = 0, mesh=None,
-                 adapters=None, peft_cfg: Optional[peft_lib.PEFTConfig] = None):
-        self.cfg = cfg
-        if adapters and peft_cfg is not None:
-            params = peft_lib.merge_tree(peft_cfg, params, adapters)  # offline
-        self.params = params
+    def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
+                 max_len: int = 256, eos_id: int = 0):
+        if runtime.banked:
+            raise ValueError(
+                "static serving merges ONE adapter offline "
+                "(ModelRuntime(adapters=..., peft_cfg=...)); per-request "
+                "banks need the continuous ServeEngine")
+        self.rt = runtime
+        self.cfg = runtime.cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.mesh = mesh
         self._queue: List[Request] = []
         self._next_id = 0
         self.finished: List[Request] = []    # completed Requests (latency)
-        self._prefill = jax.jit(build_prefill_step(cfg, mesh, ragged=True))
-        self._decode = jax.jit(build_decode_step(cfg, mesh),
-                               donate_argnums=(2,))
+        self._prefill = runtime.prefill_fn()
+        self._decode = runtime.decode_fn()
         self.stats = _new_stats()
 
     def add_request(self, prompt: List[int], max_new_tokens: int = 16) -> int:
@@ -329,23 +311,16 @@ class StaticServeEngine:
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(batch):
             toks[i, :len(r.prompt)] = r.prompt          # right-padded
-        state = api.init_decode_state(self.cfg, b, self.max_len,
-                                      enc_len=max(plen // 4, 8))
-        feed: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
-        if self.cfg.family == "encdec":
-            feed["frames"] = jnp.zeros((b, max(plen // 4, 8),
-                                        self.cfg.d_model), self.cfg.act_dtype)
-        if self.cfg.family == "vlm":
-            feed["patches"] = jnp.zeros(
-                (b, self.cfg.frontend_tokens, self.cfg.frontend_dim),
-                self.cfg.act_dtype)
+        enc_len = max(plen // 4, 8)
+        state = self.rt.init_decode_state(b, self.max_len, enc_len=enc_len)
+        feed = _family_feed(self.cfg, toks, enc_len)
         # ragged fix: each row samples at its OWN last prompt position and
         # decodes from its own position counter — padded rows no longer read
         # (or attend over) the pad tail
         last_idx = np.asarray([prefix + len(r.prompt) - 1 for r in batch],
                               np.int32)
-        logits, state = self._prefill(self.params, feed, state,
-                                      jnp.asarray(last_idx))
+        req = PrefillRequest(batch=feed, last_idx=jnp.asarray(last_idx))
+        logits, state = self._prefill(self.rt.params, req, state)
         last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         self.stats["prefills"] += 1
         for r in batch:
@@ -360,8 +335,8 @@ class StaticServeEngine:
         for t in range(max_new - 1):
             if done.all():
                 break
-            nt, logits, state = self._decode(self.params, last, state,
-                                             jnp.asarray(pos0 + t))
+            nt, logits, state = self._decode(self.rt.params, None, last,
+                                             state, jnp.asarray(pos0 + t))
             self.stats["decode_steps"] += 1
             last = nt
             vals = np.asarray(nt[:, 0])

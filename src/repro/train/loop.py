@@ -20,8 +20,8 @@ from repro import optim
 from repro.checkpoint import CheckpointManager
 from repro.config import ModelConfig
 from repro.core import peft as peft_lib
+from repro.core.runtime import ModelRuntime
 from repro.data import DataConfig, LMDataSource
-from repro.models import api
 from repro.runtime import Heartbeat, StepTimer
 from repro.train.steps import TrainStepConfig, build_train_step
 
@@ -40,7 +40,7 @@ def train(cfg: ModelConfig, tcfg: TrainStepConfig, dcfg: DataConfig,
           loop: LoopConfig, mesh=None, resume: bool = True,
           log_fn: Callable[[str], None] = print) -> Dict[str, Any]:
     key = jax.random.PRNGKey(dcfg.seed)
-    params = api.init_params(cfg, key)
+    params = ModelRuntime(cfg, key=key, mesh=mesh).params
     adapters = peft_lib.init_peft(tcfg.peft, params, key)
     trainable, frozen = peft_lib.trainable_and_frozen(tcfg.peft, params,
                                                       adapters)
@@ -112,5 +112,12 @@ def train(cfg: ModelConfig, tcfg: TrainStepConfig, dcfg: DataConfig,
                      extra={"data_step": step + 1})
     if mgr:
         mgr.wait()
+    # serving runtime over the TRAINED weights: adapters merged into the
+    # frozen base (PEFT) or the trained tree itself (full FT) — returning
+    # the init-time runtime here would silently serve untrained params
+    final_params = (peft_lib.materialize_tree(tcfg.peft, frozen, trainable,
+                                              merged=True)
+                    if tcfg.peft.is_peft else trainable)
     return {"trainable": trainable, "opt_state": opt_state, "frozen": frozen,
-            "history": history}
+            "history": history,
+            "runtime": ModelRuntime(cfg, final_params, mesh=mesh)}

@@ -8,9 +8,11 @@ train_step (PEFT mode — the paper's setting):
     (core.peft.materialize_tree) — zero extra collectives under TP.
 
 serve_step: decode_step over a sharded KV cache / SSM state (cache donated);
-``pos`` may be per-slot (continuous batching) and an adapter-bank tree adds
-per-request GS rotations. ``build_slot_prefill_step`` is the continuous
-engine's admission unit: batch-1 prefill scattered into a decode slot.
+``pos`` may be per-slot (continuous batching) and an optional
+``AdapterContext`` pytree adds per-request GS rotations.
+``build_slot_prefill_step`` is the continuous engine's admission unit:
+batch-1 prefill scattered into a decode slot. ``ModelRuntime`` owns the
+jitted closures built here — engines and launchers go through it.
 """
 from __future__ import annotations
 
@@ -127,62 +129,41 @@ def build_eval_step(cfg: ModelConfig, tcfg: TrainStepConfig,
 
 
 def build_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
-                      batch_divisible: bool = True,
-                      bank_cfg: Optional[peft_lib.PEFTConfig] = None):
+                      batch_divisible: bool = True):
     """One decode token for the whole batch. ``pos`` may be a scalar
     (lockstep) or an int32 (B,) array of per-slot write positions
     (continuous batching).
 
-    With ``bank_cfg`` set, the returned step takes an adapter-bank tree and
-    per-slot ``adapter_ids`` and rotates each row's activations with its own
-    GS adapter (slot 0 = identity)."""
+    ``ctx`` is an optional ``AdapterContext`` (None when serving the bare
+    model): each row's activations rotate with its own GS adapter, slot 0
+    being the identity. Structure of ctx is part of the jit cache key."""
     shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
              if mesh is not None else no_shard)
+    fam = api.family_ops(cfg)
 
-    def serve_step(params, tokens, state, pos):
-        logits, new_state = api.decode_step(cfg, params, tokens, state, pos,
-                                            shard)
+    def serve_step(params, ctx, tokens, state, pos):
+        logits, new_state = fam.decode_step(cfg, params, tokens, state, pos,
+                                            shard, ctx=ctx)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok[:, None], logits, new_state
 
-    def serve_step_banked(params, bank, tokens, state, pos, adapter_ids):
-        logits, new_state = api.decode_step(
-            cfg, params, tokens, state, pos, shard, bank=bank or None,
-            adapter_ids=adapter_ids, bank_cfg=bank_cfg)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return next_tok[:, None], logits, new_state
-
-    return serve_step_banked if bank_cfg is not None else serve_step
+    return serve_step
 
 
 def build_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
-                       batch_divisible: bool = True, ragged: bool = False,
-                       bank_cfg: Optional[peft_lib.PEFTConfig] = None):
-    """``ragged=True`` adds a ``last_idx`` argument: per-row index of the
-    last valid prompt position, where each row's logits are sampled (the
-    ragged-prompt fix — the default step reads the padded batch max)."""
+                       batch_divisible: bool = True):
+    """Full-prompt prefill. The single ``PrefillRequest`` argument carries
+    the input batch, the per-row ``last_idx`` (ragged-prompt fix) and the
+    optional AdapterContext — there are no mode flags or loose kwargs."""
     shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
              if mesh is not None else no_shard)
+    fam = api.family_ops(cfg)
 
-    def prefill_step(params, batch, state):
-        logits, new_state = api.prefill(cfg, params, batch, state, shard)
+    def prefill_step(params, req: peft_lib.PrefillRequest, state):
+        logits, new_state = fam.prefill(cfg, params, req, state, shard)
         return logits, new_state
 
-    def prefill_step_ragged(params, batch, state, last_idx):
-        logits, new_state = api.prefill(cfg, params, batch, state, shard,
-                                        last_idx=last_idx)
-        return logits, new_state
-
-    def prefill_step_banked(params, bank, batch, state, last_idx,
-                            adapter_ids):
-        logits, new_state = api.prefill(
-            cfg, params, batch, state, shard, last_idx=last_idx,
-            bank=bank or None, adapter_ids=adapter_ids, bank_cfg=bank_cfg)
-        return logits, new_state
-
-    if bank_cfg is not None:
-        return prefill_step_banked
-    return prefill_step_ragged if ragged else prefill_step
+    return prefill_step
 
 
 def _decode_state_batch_axes(cfg: ModelConfig, max_len: int, enc_len: int):
@@ -204,20 +185,20 @@ def _decode_state_batch_axes(cfg: ModelConfig, max_len: int, enc_len: int):
 
 def build_slot_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                             *, max_len: int, enc_len: int = 0,
-                            batch_divisible: bool = True,
-                            bank_cfg: Optional[peft_lib.PEFTConfig] = None):
+                            batch_divisible: bool = True):
     """Continuous-batching admission: prefill ONE request (batch 1) and
     scatter its fresh decode state into row ``slot`` of the engine's
     persistent slot-array state.
 
-    Returns step(params, bank, feed, state, slot, adapter_id, last_idx) ->
-    (first_token scalar, updated state). ``bank`` is the AdapterBank tree
-    ({} when serving without adapters), ``adapter_id`` the request's bank
-    slot, ``last_idx`` the request's last valid position in the processed
-    stream (ragged fix). Donate ``state`` when jitting.
+    Returns step(params, req, state, slot) -> (first_token scalar, updated
+    state). ``req`` is a batch-1 ``PrefillRequest`` carrying the bucketed
+    prompt feed, its ``last_idx`` (the request's last valid position in the
+    processed stream — ragged fix) and, when serving a bank, an
+    AdapterContext with the (1,) slot id. Donate ``state`` when jitting.
     """
     shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
              if mesh is not None else no_shard)
+    fam = api.family_ops(cfg)
     axes = _decode_state_batch_axes(cfg, max_len, enc_len)
 
     def scatter(dst, src, ax, slot):
@@ -226,12 +207,9 @@ def build_slot_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
         return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
                                             tuple(start))
 
-    def slot_prefill(params, bank, feed, state, slot, adapter_id, last_idx):
-        sub = api.init_decode_state(cfg, 1, max_len, enc_len=enc_len)
-        ids = jnp.asarray(adapter_id, jnp.int32)[None]
-        logits, sub = api.prefill(
-            cfg, params, feed, sub, shard, last_idx=last_idx,
-            bank=bank or None, adapter_ids=ids, bank_cfg=bank_cfg)
+    def slot_prefill(params, req, state, slot):
+        sub = fam.init_decode_state(cfg, 1, max_len, enc_len)
+        logits, sub = fam.prefill(cfg, params, req, sub, shard)
         first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[0]
         state = jax.tree.map(
             lambda dst, src, ax: scatter(dst, src, ax, slot),

@@ -100,11 +100,12 @@ def decode_cell(arch, mesh, mesh_name):
         jnp.ones((8, 1), jnp.int32),
         named(mesh, rules.batch_spec(jnp.ones((8, 1), jnp.int32), 8)))
     step = jax.jit(build_decode_step(cfg, mesh),
-                   donate_argnums=(2,))
+                   donate_argnums=(3,))
     ref = build_decode_step(cfg, mesh=None)
-    _, rl, _ = ref(jax.device_get(params), jax.device_get(tokens),
+    _, rl, _ = ref(jax.device_get(params), None, jax.device_get(tokens),
                    jax.device_get(state), jnp.asarray(0, jnp.int32))
-    nt, logits, state = step(params, tokens, state, jnp.asarray(0, jnp.int32))
+    nt, logits, state = step(params, None, tokens, state,
+                             jnp.asarray(0, jnp.int32))
     agree = np.allclose(np.asarray(jax.device_get(logits), np.float32),
                         np.asarray(jax.device_get(rl), np.float32),
                         atol=5e-2, rtol=5e-2)

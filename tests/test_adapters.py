@@ -235,3 +235,22 @@ def test_paper_table1_param_counts():
     W = {"attn": {"wq": jnp.zeros((d, d))}}
     adapters = peft.init_peft(cfg, W, KEY)
     assert peft.count_params(adapters) == 2 * d * 8
+
+
+def test_target_pattern_fullmatch_rejects_decoy_weights():
+    """Regression: the old ``re.search`` fallback in ``_matches`` ignored
+    the end anchor, so an unanchored target like ``.*/wq`` also adapted a
+    decoy weight named ``.../wq_extra``. Matching is fullmatch-only now."""
+    cfg = peft.PEFTConfig(method="gsoft", block_size=4,
+                          target_patterns=(r".*/wq",))
+    params = {"layers": {"attn": {
+        "wq": jnp.zeros((8, 8)),
+        "wq_extra": jnp.zeros((8, 8)),     # decoy: must NOT be adapted
+        "pre_wq": jnp.zeros((8, 8)),       # suffix decoy: also excluded
+    }}}
+    assert set(peft.adapted_paths(cfg, params)) == {"layers/attn/wq"}
+    # the shipped DEFAULT_TARGETS keep matching the real projections
+    dcfg = peft.PEFTConfig(method="gsoft", block_size=4)
+    tree = {"layers": {"mamba": {"in_proj": jnp.zeros((8, 8)),
+                                 "in_projector": jnp.zeros((8, 8))}}}
+    assert set(peft.adapted_paths(dcfg, tree)) == {"layers/mamba/in_proj"}

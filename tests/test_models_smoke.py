@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.config import get_smoke_config, list_archs
+from repro.core.peft import PrefillRequest
 from repro.data.synthetic import lm_batch
 from repro.models import api
 
@@ -51,8 +52,8 @@ def test_smoke_decode_step(arch):
         frames = jnp.zeros((b, 8, cfg.d_model), cfg.act_dtype)
         state["enc_out"] = frames
     tokens = jnp.ones((b, 1), jnp.int32)
-    logits, new_state = api.decode_step(cfg, params, tokens, state,
-                                        jnp.asarray(3, jnp.int32))
+    logits, new_state = api.family_ops(cfg).decode_step(
+        cfg, params, tokens, state, jnp.asarray(3, jnp.int32))
     assert logits.shape == (b, 1, cfg.padded_vocab())
     assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
     # state structure preserved
@@ -75,7 +76,8 @@ def test_smoke_prefill_matches_decode(arch):
     batch = lm_batch(cfg, batch=b, seq=s)
     if cfg.family in ("decoder", "encdec"):
         state = api.init_decode_state(cfg, b, s + 4, enc_len=max(s // 4, 8))
-        logits_pre, state = api.prefill(cfg, params, batch, state)
+        logits_pre, state = api.family_ops(cfg).prefill(
+            cfg, params, PrefillRequest(batch=batch), state)
         full, _ = api.forward(cfg, params, batch)
         np.testing.assert_allclose(np.asarray(logits_pre[:, 0], np.float32),
                                    np.asarray(full[:, -1], np.float32),
@@ -95,7 +97,7 @@ def test_ssm_decode_matches_forward(arch):
     state = api.init_decode_state(cfg, b, s + 1)
     outs = []
     for t in range(s):
-        logits, state = api.decode_step(
+        logits, state = api.family_ops(cfg).decode_step(
             cfg, params, batch["tokens"][:, t:t + 1], state,
             jnp.asarray(t, jnp.int32))
         outs.append(logits[:, 0])

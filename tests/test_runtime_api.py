@@ -1,0 +1,295 @@
+"""Registry / AdapterContext / ModelRuntime API-surface tests: unknown
+families fail loud, the context pytrees survive jit, the bank error paths
+stay exercised through the new API, the deprecation shims warn exactly
+once, and the retired kwarg triple cannot creep back into model/serve
+signatures."""
+import dataclasses
+import pathlib
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, get_smoke_config
+from repro.core import peft as peft_lib
+from repro.core.runtime import ModelRuntime
+from repro.models import api, registry
+
+CFG = get_smoke_config("qwen2-72b")
+PARAMS = api.init_params(CFG, jax.random.PRNGKey(0))
+PCFG = peft_lib.PEFTConfig(method="gsoft", block_size=8)
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_explicit_entries_per_family():
+    assert registry.families() == ["decoder", "encdec", "hybrid", "ssm",
+                                   "vlm"]
+
+
+def test_unknown_family_raises_keyerror_listing_registered():
+    bad = dataclasses.replace(CFG, family="retnet")
+    with pytest.raises(KeyError, match="retnet") as ei:
+        api.init_params(bad, jax.random.PRNGKey(0))
+    # the error must tell the user what IS available
+    for fam in ("decoder", "encdec", "ssm"):
+        assert fam in str(ei.value)
+    with pytest.raises(KeyError, match="retnet"):
+        ModelRuntime(bad)
+
+
+def test_registry_dispatch_matches_family_modules():
+    from repro.models import encdec, transformer
+    assert registry.get("decoder").prefill is transformer.prefill
+    assert registry.get("ssm").decode_step is transformer.decode_step
+    assert registry.get("encdec").prefill is encdec.prefill
+
+
+# ---------------------------------------------------------------------------
+# AdapterContext / PrefillRequest pytrees
+# ---------------------------------------------------------------------------
+
+def _small_ctx():
+    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, {})
+    return bank.context([0, 0])
+
+
+def test_adapter_context_tree_roundtrip():
+    ctx = _small_ctx()
+    leaves, treedef = jax.tree_util.tree_flatten(ctx)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, peft_lib.AdapterContext)
+    assert back.peft == ctx.peft                    # static aux preserved
+    for a, b in zip(leaves, jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adapter_context_jitted_identity():
+    ctx = _small_ctx()
+    out = jax.jit(lambda c: c)(ctx)
+    assert isinstance(out, peft_lib.AdapterContext)
+    assert out.peft == ctx.peft
+    np.testing.assert_array_equal(np.asarray(out.slots),
+                                  np.asarray(ctx.slots))
+    for a, b in zip(jax.tree_util.tree_leaves(ctx.bank),
+                    jax.tree_util.tree_leaves(out.bank)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_prefill_request_tree_roundtrip_and_jit():
+    req = peft_lib.PrefillRequest(
+        batch={"tokens": jnp.ones((1, 8), jnp.int32)},
+        last_idx=jnp.asarray(3, jnp.int32), ctx=_small_ctx())
+    leaves, treedef = jax.tree_util.tree_flatten(req)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, peft_lib.PrefillRequest)
+    assert isinstance(back.ctx, peft_lib.AdapterContext)
+    out = jax.jit(lambda r: r)(req)
+    np.testing.assert_array_equal(np.asarray(out.batch["tokens"]),
+                                  np.asarray(req.batch["tokens"]))
+    assert int(out.last_idx) == 3
+
+
+def test_context_group_and_rotator():
+    ctx = _small_ctx()
+    assert ctx.group("layers") is not None
+    assert ctx.group("nope") is None
+    assert ctx.rotator(None) is None
+    layers = ctx.group("layers")
+    rot = ctx.rotator(jax.tree.map(lambda v: v[0], layers)["attn"])
+    x = jnp.ones((2, 1, CFG.d_model))
+    np.testing.assert_allclose(np.asarray(rot("wq", x)), np.asarray(x),
+                               atol=1e-6)          # identity slot
+    np.testing.assert_array_equal(np.asarray(rot("not_adapted", x)),
+                                  np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# bank error paths through the new API
+# ---------------------------------------------------------------------------
+
+def test_bank_build_rejects_double_gsoft_and_use_scale():
+    with pytest.raises(ValueError, match="double_gsoft|gsoft"):
+        ModelRuntime(CFG, PARAMS).with_bank(
+            {}, peft_lib.PEFTConfig(method="double_gsoft"))
+    with pytest.raises(ValueError, match="use_scale"):
+        ModelRuntime(CFG, PARAMS).with_bank(
+            {}, peft_lib.PEFTConfig(method="gsoft", use_scale=True))
+
+
+def test_bank_build_rejects_moe_batch_dims():
+    moe_cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    rt = ModelRuntime(moe_cfg, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="batch dims|routing-aware"):
+        rt.with_bank({}, PCFG)
+
+
+def test_runtime_slot_validation():
+    rt = ModelRuntime(CFG, PARAMS).with_bank({}, PCFG)
+    assert rt.slot(None) == 0
+    with pytest.raises(KeyError, match="nope"):
+        rt.slot("nope")
+    # bare runtime: no bank — None maps to identity, a NAME must not
+    # silently fall back to serving the base model
+    assert ModelRuntime(CFG, PARAMS).slot(None) == 0
+    assert ModelRuntime(CFG, PARAMS).context([0]) is None
+    with pytest.raises(KeyError, match="no adapter bank"):
+        ModelRuntime(CFG, PARAMS).slot("alice")
+
+
+def test_load_named_adapters_handles_dir_with_equals(tmp_path):
+    """A bare checkpoint dir whose PATH contains '=' must not be misparsed
+    as a name=dir entry (the --save-adapters round-trip path)."""
+    adapters = {"a0": peft_lib.init_peft(PCFG, PARAMS, jax.random.PRNGKey(2))}
+    ckpt = tmp_path / "run=3"
+    ModelRuntime.save_bank(str(ckpt), adapters, PCFG)
+    loaded, cfg = ModelRuntime.load_named_adapters([str(ckpt)])
+    assert sorted(loaded) == ["a0"] and cfg == PCFG
+    # explicit name=dir still works against the same checkpoint
+    picked, _ = ModelRuntime.load_named_adapters([f"a0={ckpt}"])
+    assert sorted(picked) == ["a0"]
+
+
+def test_runtime_rejects_merge_plus_bank():
+    adapters = peft_lib.init_peft(PCFG, PARAMS, jax.random.PRNGKey(1))
+    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, {})
+    with pytest.raises(ValueError, match="EITHER"):
+        ModelRuntime(CFG, PARAMS, bank=bank, adapters=adapters,
+                     peft_cfg=PCFG)
+    # banking on top of already-merged params would double-apply adapters
+    merged = ModelRuntime(CFG, PARAMS, adapters=adapters, peft_cfg=PCFG)
+    with pytest.raises(ValueError, match="already-rotated|merged"):
+        merged.with_bank({}, PCFG)
+    # half-passed merge args would silently serve the base model
+    with pytest.raises(ValueError, match="BOTH"):
+        ModelRuntime(CFG, PARAMS, adapters=adapters)
+    with pytest.raises(ValueError, match="BOTH"):
+        ModelRuntime(CFG, PARAMS, peft_cfg=PCFG)
+    # so would "merging" an empty adapter tree (no targets matched)
+    with pytest.raises(ValueError, match="empty adapter"):
+        ModelRuntime(CFG, PARAMS, adapters={}, peft_cfg=PCFG)
+
+
+def test_train_returns_runtime_over_trained_weights():
+    """train()['runtime'] must serve the TRAINED model (adapters merged),
+    not the init-time params."""
+    from repro.data import DataConfig
+    from repro.train.loop import LoopConfig, train
+    from repro.train.steps import TrainStepConfig
+    out = train(CFG, TrainStepConfig(peft=PCFG),
+                DataConfig(seq_len=16, global_batch=2,
+                           vocab_size=min(CFG.vocab_size, 256)),
+                LoopConfig(steps=2, log_every=10))
+    rt = out["runtime"]
+    assert isinstance(rt, ModelRuntime)
+    expected = peft_lib.materialize_tree(PCFG, out["frozen"],
+                                         out["trainable"], merged=True)
+    for a, b in zip(jax.tree.leaves(rt.params), jax.tree.leaves(expected)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# runtime facade basics
+# ---------------------------------------------------------------------------
+
+def test_runtime_loss_matches_api():
+    from repro.data.synthetic import lm_batch
+    batch = lm_batch(CFG, batch=2, seq=16)
+    rt = ModelRuntime(CFG, PARAMS)
+    loss_rt, _ = rt.loss(batch)
+    loss_api, _ = api.loss_fn(CFG, PARAMS, batch)
+    np.testing.assert_allclose(float(loss_rt), float(loss_api), rtol=1e-5)
+
+
+def test_runtime_abstract_params_for_dryrun():
+    rt = ModelRuntime.abstract(CFG)
+    assert all(isinstance(l, jax.ShapeDtypeStruct)
+               for l in jax.tree.leaves(rt.params))
+    assert rt.active_param_count() > 0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_legacy_api_warns_exactly_once_per_process():
+    api._legacy_warned = False          # isolate from other tests
+    state = api.init_decode_state(CFG, 1, 8)
+    tokens = jnp.ones((1, 1), jnp.int32)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        l1, _ = api.decode_step(CFG, PARAMS, tokens, state,
+                                jnp.asarray(0, jnp.int32))
+        state2 = api.init_decode_state(CFG, 1, 8)
+        api.prefill(CFG, PARAMS, {"tokens": jnp.ones((1, 4), jnp.int32)},
+                    state2)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(w.message) for w in caught]
+    assert "ModelRuntime" in str(dep[0].message)
+    # the shim forwards to the registry path — same numbers
+    state3 = api.init_decode_state(CFG, 1, 8)
+    l2, _ = api.family_ops(CFG).decode_step(CFG, PARAMS, tokens, state3,
+                                            jnp.asarray(0, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32))
+
+
+def test_legacy_kwarg_triple_still_forwards():
+    """Old-style bank/adapter_ids/bank_cfg kwargs reach the new context
+    path (one release of backward compatibility)."""
+    api._legacy_warned = False
+    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, {})
+    tokens = jnp.asarray([[5]], jnp.int32)
+    state = api.init_decode_state(CFG, 1, 8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy, _ = api.decode_step(
+            CFG, PARAMS, tokens, state, jnp.asarray(0, jnp.int32),
+            **{"bank": bank.tree, "adapter_ids": jnp.zeros((1,), jnp.int32),
+               "bank_cfg": PCFG})
+    state = api.init_decode_state(CFG, 1, 8)
+    new, _ = api.family_ops(CFG).decode_step(
+        CFG, PARAMS, tokens, state, jnp.asarray(0, jnp.int32),
+        ctx=bank.context([0]))
+    np.testing.assert_allclose(np.asarray(legacy, np.float32),
+                               np.asarray(new, np.float32), atol=1e-6)
+    with pytest.raises(TypeError, match="unexpected"):
+        api.decode_step(CFG, PARAMS, tokens, state,
+                        jnp.asarray(0, jnp.int32), bogus=1)
+    # half the triple must raise, not silently serve the base model
+    with pytest.raises(ValueError, match="half the legacy triple"):
+        api.decode_step(CFG, PARAMS, tokens, state,
+                        jnp.asarray(0, jnp.int32),
+                        **{"bank": bank.tree, "bank_cfg": PCFG})
+
+
+# ---------------------------------------------------------------------------
+# the retired kwarg triple must not creep back into signatures
+# ---------------------------------------------------------------------------
+
+def test_no_retired_adapter_kwargs_in_model_or_serve_signatures():
+    """Mirror of the CI lint grep: per-request adapter state flows only
+    through AdapterContext — no function under models/, serve/ or train/
+    may take the loose bank/adapter_ids/bank_cfg kwargs again."""
+    # kwarg syntax only (no space before '='): signature defaults and
+    # call-site keyword threading are banned; PEP8 assignments are not
+    pat = re.compile(r"\b(bank|adapter_ids|bank_cfg)=")
+    offenders = []
+    scanned = 0
+    for sub in ("models", "serve", "train"):
+        paths = sorted((SRC / sub).rglob("*.py"))
+        assert paths, f"guard scanned nothing under src/repro/{sub}"
+        scanned += len(paths)
+        for path in paths:
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if pat.search(line):
+                    offenders.append(f"{path.relative_to(SRC)}:{i}: {line.strip()}")
+    assert scanned > 5, "guard expected to scan the model/serve/train stack"
+    assert not offenders, "\n".join(offenders)

@@ -7,11 +7,12 @@ import pytest
 
 from repro.config import get_smoke_config
 from repro.core import peft as peft_lib
-from repro.models import api
+from repro.core.runtime import ModelRuntime
 from repro.serve.engine import ServeEngine, StaticServeEngine
 
 CFG = get_smoke_config("qwen2-72b")
-PARAMS = api.init_params(CFG, jax.random.PRNGKey(0))
+RT = ModelRuntime(CFG, key=jax.random.PRNGKey(0))
+PARAMS = RT.params
 PCFG = peft_lib.PEFTConfig(method="gsoft", block_size=8)
 
 
@@ -24,15 +25,15 @@ def _tuned_adapters(seed, scale=0.3):
 
 def _solo(prompt, max_new, adapters=None, eos_id=-1):
     """Single-request reference: batch of one, offline-merged adapter."""
-    eng = StaticServeEngine(CFG, PARAMS, max_batch=1, max_len=48,
-                            eos_id=eos_id, adapters=adapters,
-                            peft_cfg=PCFG if adapters is not None else None)
+    rt = (ModelRuntime(CFG, PARAMS, adapters=adapters, peft_cfg=PCFG)
+          if adapters is not None else RT)
+    eng = StaticServeEngine(rt, max_batch=1, max_len=48, eos_id=eos_id)
     rid = eng.add_request(list(prompt), max_new_tokens=max_new)
     return eng.run()[rid]
 
 
 def test_engine_serves_all_requests():
-    eng = ServeEngine(CFG, PARAMS, max_batch=3, max_len=48, eos_id=-1)
+    eng = ServeEngine(RT, max_batch=3, max_len=48, eos_id=-1)
     rng = np.random.default_rng(0)
     rids = [eng.add_request(rng.integers(1, 200, size=n).tolist(),
                             max_new_tokens=4)
@@ -47,7 +48,7 @@ def test_engine_serves_all_requests():
 
 def test_engine_deterministic():
     def go():
-        eng = ServeEngine(CFG, PARAMS, max_batch=2, max_len=32, eos_id=-1)
+        eng = ServeEngine(RT, max_batch=2, max_len=32, eos_id=-1)
         eng.add_request([5, 6, 7], max_new_tokens=4)
         eng.add_request([9, 10, 11, 12], max_new_tokens=4)
         return eng.run()
@@ -58,9 +59,10 @@ def test_merged_gsoft_identity_matches_base():
     """Zero-init adapters merged == base model outputs (paper §6.1)."""
     pcfg = peft_lib.PEFTConfig(method="gsoft", block_size=8)
     adapters = peft_lib.init_peft(pcfg, PARAMS, jax.random.PRNGKey(1))
-    base = ServeEngine(CFG, PARAMS, max_batch=2, max_len=32, eos_id=-1)
-    merged = ServeEngine(CFG, PARAMS, max_batch=2, max_len=32, eos_id=-1,
-                         adapters=adapters, peft_cfg=pcfg)
+    base = ServeEngine(RT, max_batch=2, max_len=32, eos_id=-1)
+    merged = ServeEngine(ModelRuntime(CFG, PARAMS, adapters=adapters,
+                                      peft_cfg=pcfg),
+                         max_batch=2, max_len=32, eos_id=-1)
     for eng in (base, merged):
         eng.add_request([3, 4, 5], max_new_tokens=4)
     assert base.run()[0] == merged.run()[0]
@@ -73,7 +75,7 @@ def test_ragged_prompts_match_solo_reference():
     prompts = [[7, 8, 9], [3, 4, 5, 6, 7, 8, 9, 10, 11], [5, 6, 7, 8, 9]]
     refs = [_solo(p, 4) for p in prompts]
     for cls in (ServeEngine, StaticServeEngine):
-        eng = cls(CFG, PARAMS, max_batch=3, max_len=48, eos_id=-1)
+        eng = cls(RT, max_batch=3, max_len=48, eos_id=-1)
         rids = [eng.add_request(list(p), max_new_tokens=4) for p in prompts]
         results = eng.run()
         for rid, ref in zip(rids, refs):
@@ -84,11 +86,10 @@ def test_multi_adapter_slots_match_merged_references():
     """Per-request adapters served from one bank == each adapter merged
     offline into its own dedicated engine; the identity slot == no-PEFT."""
     adapters = {"alice": _tuned_adapters(7), "bob": _tuned_adapters(11)}
-    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, adapters)
-    assert bank.names == (peft_lib.BASE_ADAPTER, "alice", "bob")
+    rt = RT.with_bank(adapters, PCFG)
+    assert rt.bank.names == (peft_lib.BASE_ADAPTER, "alice", "bob")
     prompt = [3, 4, 5, 6]
-    eng = ServeEngine(CFG, PARAMS, max_batch=3, max_len=48, eos_id=-1,
-                      bank=bank)
+    eng = ServeEngine(rt, max_batch=3, max_len=48, eos_id=-1)
     rids = {name: eng.add_request(prompt, max_new_tokens=5, adapter=name)
             for name in ("alice", "bob", None)}
     results = eng.run()
@@ -104,14 +105,16 @@ def test_banked_decode_logits_match_merged_fp32():
     from repro.train.steps import build_decode_step
     adapters = {"a": _tuned_adapters(3)}
     bank = peft_lib.build_adapter_bank(PCFG, PARAMS, adapters)
-    merged = peft_lib.merge_tree(PCFG, PARAMS, adapters["a"])
+    merged = peft_lib.materialize_tree(PCFG, PARAMS, adapters["a"],
+                                       merged=True)
     tokens = jnp.asarray([[5], [9]], jnp.int32)
     pos = jnp.zeros((2,), jnp.int32)
-    state = api.init_decode_state(CFG, 2, 16)
-    _, logits_bank, _ = build_decode_step(CFG, bank_cfg=PCFG)(
-        PARAMS, bank.tree, tokens, state, pos, jnp.asarray([1, 1], jnp.int32))
-    state = api.init_decode_state(CFG, 2, 16)
-    _, logits_merged, _ = build_decode_step(CFG)(merged, tokens, state, pos)
+    state = RT.init_decode_state(2, 16)
+    _, logits_bank, _ = build_decode_step(CFG)(
+        PARAMS, bank.context([1, 1]), tokens, state, pos)
+    state = RT.init_decode_state(2, 16)
+    _, logits_merged, _ = build_decode_step(CFG)(merged, None, tokens, state,
+                                                 pos)
     np.testing.assert_allclose(np.asarray(logits_bank),
                                np.asarray(logits_merged), atol=2e-4)
 
@@ -122,9 +125,8 @@ def test_banked_serving_kernel_path_matches_merged():
     pcfg_k = peft_lib.PEFTConfig(method="gsoft", block_size=8,
                                  use_pallas=True)
     adapters = {"a": _tuned_adapters(3)}
-    bank = peft_lib.build_adapter_bank(pcfg_k, PARAMS, adapters)
-    eng = ServeEngine(CFG, PARAMS, max_batch=2, max_len=48, eos_id=-1,
-                      bank=bank)
+    eng = ServeEngine(RT.with_bank(adapters, pcfg_k), max_batch=2,
+                      max_len=48, eos_id=-1)
     rid = eng.add_request([3, 4, 5, 6], max_new_tokens=4, adapter="a")
     assert eng.run()[rid] == _solo([3, 4, 5, 6], 4, adapters["a"])
 
@@ -136,7 +138,7 @@ def test_eos_frees_slot_and_admits_queued_request():
     eos = next(t for t in probe[1:] if t != probe[0])
     k = probe.index(eos) + 1                   # tokens until EOS emitted
     assert k < 8
-    eng = ServeEngine(CFG, PARAMS, max_batch=1, max_len=64, eos_id=eos)
+    eng = ServeEngine(RT, max_batch=1, max_len=64, eos_id=eos)
     r1 = eng.add_request([3, 4, 5], max_new_tokens=8)
     r2 = eng.add_request([9, 10, 11, 12], max_new_tokens=4)
     results = eng.run()
@@ -150,10 +152,9 @@ def test_eos_frees_slot_and_admits_queued_request():
 
 def test_identity_bank_matches_no_peft_engine():
     """A bank with only the identity slot serves exactly the base model."""
-    bank = peft_lib.build_adapter_bank(PCFG, PARAMS, {})
-    banked = ServeEngine(CFG, PARAMS, max_batch=2, max_len=32, eos_id=-1,
-                         bank=bank)
-    plain = ServeEngine(CFG, PARAMS, max_batch=2, max_len=32, eos_id=-1)
+    banked = ServeEngine(RT.with_bank({}, PCFG), max_batch=2, max_len=32,
+                         eos_id=-1)
+    plain = ServeEngine(RT, max_batch=2, max_len=32, eos_id=-1)
     for eng in (banked, plain):
         eng.add_request([3, 4, 5], max_new_tokens=4)
     assert banked.run()[0] == plain.run()[0]
@@ -163,7 +164,7 @@ def test_oversized_request_rejected_by_both_engines():
     """A request that cannot fit prompt + budget in the slot cache must be
     rejected up front (clamped cache writes would silently corrupt it)."""
     for cls in (ServeEngine, StaticServeEngine):
-        eng = cls(CFG, PARAMS, max_batch=1, max_len=16, eos_id=-1)
+        eng = cls(RT, max_batch=1, max_len=16, eos_id=-1)
         with pytest.raises(ValueError, match="max_len"):
             eng.add_request(list(range(1, 13)), max_new_tokens=8)
 
@@ -181,13 +182,11 @@ def test_adapter_bank_build_validation():
 
 
 def test_adapter_bank_checkpoint_roundtrip(tmp_path):
-    """save_adapters -> restore_adapters preserves trees + PEFTConfig, and
+    """save_bank -> load_named_adapters preserves trees + PEFTConfig, and
     the restored bank serves identically (launch --adapters path)."""
-    from repro.checkpoint.manager import CheckpointManager
     adapters = {"alice": _tuned_adapters(7), "bob": _tuned_adapters(11)}
-    mgr = CheckpointManager(str(tmp_path))
-    mgr.save_adapters(0, adapters, PCFG)
-    restored, cfg2 = mgr.restore_adapters()
+    RT.save_bank(str(tmp_path), adapters, PCFG)
+    restored, cfg2 = ModelRuntime.load_named_adapters([str(tmp_path)])
     assert cfg2 == PCFG
     assert sorted(restored) == ["alice", "bob"]
     for name in adapters:
@@ -197,12 +196,10 @@ def test_adapter_bank_checkpoint_roundtrip(tmp_path):
                 np.testing.assert_array_equal(
                     np.asarray(restored[name][path][pkey]), np.asarray(arr))
     # restored bank produces the same tokens
-    b1 = peft_lib.build_adapter_bank(PCFG, PARAMS, adapters)
-    b2 = peft_lib.build_adapter_bank(cfg2, PARAMS, restored)
     outs = []
-    for bank in (b1, b2):
-        eng = ServeEngine(CFG, PARAMS, max_batch=1, max_len=32, eos_id=-1,
-                          bank=bank)
+    for ad, pc in ((adapters, PCFG), (restored, cfg2)):
+        eng = ServeEngine(RT.with_bank(ad, pc), max_batch=1, max_len=32,
+                          eos_id=-1)
         eng.add_request([4, 5, 6], max_new_tokens=3, adapter="bob")
         outs.append(eng.run()[0])
     assert outs[0] == outs[1]
@@ -216,7 +213,7 @@ def test_continuous_scheduler_does_less_decode_work():
              int(rng.integers(2, 13))) for _ in range(8)]
     steps = {}
     for cls in (ServeEngine, StaticServeEngine):
-        eng = cls(CFG, PARAMS, max_batch=2, max_len=48, eos_id=-1)
+        eng = cls(RT, max_batch=2, max_len=48, eos_id=-1)
         for p, m in reqs:
             eng.add_request(p, max_new_tokens=m)
         eng.run()
@@ -231,9 +228,10 @@ def test_nonidentity_adapters_change_output():
     adapters = jax.tree.map(
         lambda a: a + 0.5 * jax.random.normal(jax.random.PRNGKey(7), a.shape),
         adapters)
-    base = ServeEngine(CFG, PARAMS, max_batch=1, max_len=32, eos_id=-1)
-    tuned = ServeEngine(CFG, PARAMS, max_batch=1, max_len=32, eos_id=-1,
-                        adapters=adapters, peft_cfg=pcfg)
+    base = ServeEngine(RT, max_batch=1, max_len=32, eos_id=-1)
+    tuned = ServeEngine(ModelRuntime(CFG, PARAMS, adapters=adapters,
+                                     peft_cfg=pcfg),
+                        max_batch=1, max_len=32, eos_id=-1)
     for eng in (base, tuned):
         eng.add_request([3, 4, 5, 6, 7, 8], max_new_tokens=6)
     assert base.run()[0] != tuned.run()[0]
