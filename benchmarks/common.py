@@ -1,11 +1,15 @@
-"""Benchmark utilities: timing + the assignment's CSV contract
-(``name,us_per_call,derived``)."""
+"""Benchmark utilities: timing, the assignment's CSV contract
+(``name,us_per_call,derived``), and the shared serving-benchmark protocol
+(mixed-length workload generation + warmup-then-timed engine runs) so the
+serve and quant lanes measure with ONE methodology and their JSON
+trajectories stay comparable."""
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional
 
 import jax
+import numpy as np
 
 ROWS: List[str] = []
 
@@ -14,6 +18,50 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def mixed_workload(n_req: int, prompt_hi: int, max_new_hi: int, seed: int = 0,
+                   adapters: Optional[List] = None) -> List[Dict]:
+    """Ragged prompts U[4, prompt_hi] + ragged budgets U[2, max_new_hi] —
+    the traffic shape continuous batching exists for. ``adapters`` (bank
+    names, may include None) round-robin over the requests."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_req):
+        req = {"prompt": rng.integers(
+                   1, 200, size=int(rng.integers(4, prompt_hi + 1))).tolist(),
+               "max_new_tokens": int(rng.integers(2, max_new_hi + 1))}
+        if adapters:
+            req["adapter"] = adapters[i % len(adapters)]
+        reqs.append(req)
+    return reqs
+
+
+def run_engine_timed(make_engine: Callable, warmup: List[Dict],
+                     workload: List[Dict]) -> Dict:
+    """The serving-bench protocol: run ``warmup`` first so every shape the
+    scheduler will see (prefill buckets / per-batch pads) is compiled, then
+    time ``workload`` — the measurement is scheduling + math, not
+    retracing. Returns tok/s, decode-step and latency stats."""
+    from repro.serve.engine import latency_percentiles
+    eng = make_engine()
+    for req in warmup:
+        eng.add_request(**req)
+    eng.run()
+    eng.drain_finished()
+    steps0, toks0 = eng.stats["decode_steps"], eng.stats["tokens_generated"]
+    for req in workload:
+        eng.add_request(**req)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = eng.stats["tokens_generated"] - toks0
+    steps = eng.stats["decode_steps"] - steps0
+    lat = latency_percentiles(eng.drain_finished())
+    return {"tok_s": toks / max(dt, 1e-9), "dt": dt, "tokens": toks,
+            "decode_steps": steps,
+            "util": toks / max(steps * eng.max_batch, 1),
+            "p50_ms": lat[50] * 1e3, "p95_ms": lat[95] * 1e3}
 
 
 def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:

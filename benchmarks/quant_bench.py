@@ -1,0 +1,159 @@
+"""Quantized-serving benchmark: int8 base weights vs the bf16 baseline.
+
+Reports, on the tiny smoke config:
+  * parameter HBM footprint (the decode path re-reads the whole weight
+    tree per token — bytes ARE the roofline on a bandwidth-bound step);
+  * decode throughput through ``ServeEngine`` for bf16 vs int8 runtimes
+    (and int8 with a multi-adapter bank — rotations stay bf16);
+  * greedy-token agreement and max prefill-logit error vs the bf16
+    reference (the accuracy side of the trade);
+  * q_matmul kernel-vs-reference microbenchmark timings.
+
+NOTE on CPU results: this container benches on the CPU backend, where the
+reference einsum path dequantizes explicitly and Pallas runs in interpret
+mode, so int8 shows little or no wall-clock win here — the bandwidth win
+the kernel exists for (int8 HBM reads + epilogue dequant on the MXU) only
+materializes on TPU. The footprint and logit-error numbers are
+backend-independent; ``BENCH_quant.json`` records both plus the backend
+so the perf trajectory is comparable PR-over-PR.
+
+``REPRO_BENCH_TINY=1`` shrinks the workload and writes BENCH_quant.json
+at the repo root for the CI artifact lane.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import quant
+from repro.config import get_smoke_config
+from repro.core import peft as peft_lib
+from repro.core.peft import PrefillRequest
+from repro.core.runtime import ModelRuntime
+from repro.kernels import dispatch, ops, ref
+from repro.serve.engine import ServeEngine
+
+from .common import emit, mixed_workload, run_engine_timed, time_fn
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _tok_s(rt, workload, max_batch, max_len):
+    make = lambda: ServeEngine(rt, max_batch=max_batch, max_len=max_len,
+                               eos_id=-1)
+    return run_engine_timed(make, workload, workload)["tok_s"]
+
+
+def run():
+    cfg = get_smoke_config("qwen2-72b")
+    n_req = 12 if TINY else 32
+    prompt_hi = 12 if TINY else 24
+    max_new_hi = 24 if TINY else 48
+    max_batch = 4
+    max_len = prompt_hi + max_new_hi + 8
+    rollout = 64
+
+    rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0))
+    qrt = rt.quantized("int8")
+    summary = {"backend": jax.default_backend(), "arch": cfg.name}
+
+    # ---- HBM footprint -----------------------------------------------------
+    b_bf16 = quant.tree_bytes(rt.params)
+    b_int8 = quant.tree_bytes(qrt.params)
+    summary["params_bytes_bf16"] = b_bf16
+    summary["params_bytes_int8"] = b_int8
+    summary["footprint_ratio"] = b_bf16 / max(b_int8, 1)
+    emit("quant/hbm_footprint", 0.0,
+         f"bf16={b_bf16};int8={b_int8};ratio={summary['footprint_ratio']:.2f}")
+
+    # ---- accuracy: prefill logits + greedy rollout -------------------------
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        1, 200, size=(2, 16)), jnp.int32)
+    req = PrefillRequest(batch={"tokens": toks},
+                         last_idx=jnp.asarray([15, 15], jnp.int32))
+    st = rt.init_decode_state(2, 32)
+    logits, _ = rt.prefill(req, st)
+    st = qrt.init_decode_state(2, 32)
+    qlogits, _ = qrt.prefill(req, st)
+    l32 = np.asarray(logits, np.float32)
+    err = float(np.max(np.abs(l32 - np.asarray(qlogits, np.float32))))
+    spread = float(np.std(l32))
+    summary["prefill_logit_max_err"] = err
+    summary["prefill_logit_std"] = spread
+    emit("quant/logit_error", 0.0,
+         f"max_abs={err:.4f};logit_std={spread:.3f}")
+
+    prompt = [3, 4, 5, 6]
+    outs = []
+    for r in (rt, qrt):
+        eng = ServeEngine(r, max_batch=1, max_len=rollout + 16, eos_id=-1)
+        eng.add_request(prompt, max_new_tokens=rollout)
+        outs.append(eng.run()[0])
+    agree = sum(a == b for a, b in zip(*outs))
+    first_div = next((i for i, (a, b) in enumerate(zip(*outs)) if a != b),
+                     rollout)
+    summary["rollout_tokens"] = rollout
+    summary["rollout_agreement"] = agree
+    summary["rollout_first_divergence"] = first_div
+    emit("quant/greedy_rollout", 0.0,
+         f"agree={agree}/{rollout};first_div={first_div}")
+
+    # ---- decode throughput: bf16 vs int8 vs int8+bank ----------------------
+    workload = mixed_workload(n_req, prompt_hi, max_new_hi)
+    tok_bf16 = _tok_s(rt, workload, max_batch, max_len)
+    tok_int8 = _tok_s(qrt, workload, max_batch, max_len)
+    pcfg = peft_lib.PEFTConfig(method="gsoft", block_size=8)
+    ad = {f"a{i}": peft_lib.init_peft(pcfg, rt.params,
+                                      jax.random.PRNGKey(i + 1))
+          for i in range(2)}
+    qrt_bank = rt.with_bank(ad, pcfg).quantized("int8")
+    bank_workload = mixed_workload(n_req, prompt_hi, max_new_hi,
+                                   adapters=list(ad) + [None])
+    tok_bank = _tok_s(qrt_bank, bank_workload, max_batch, max_len)
+    speedup = tok_int8 / max(tok_bf16, 1e-9)
+    summary["decode_tok_s_bf16"] = tok_bf16
+    summary["decode_tok_s_int8"] = tok_int8
+    summary["decode_tok_s_int8_banked"] = tok_bank
+    summary["decode_speedup_int8"] = speedup
+    emit("quant/decode_bf16", 1e6 / max(tok_bf16, 1e-9),
+         f"tok/s={tok_bf16:.1f}")
+    emit("quant/decode_int8", 1e6 / max(tok_int8, 1e-9),
+         f"tok/s={tok_int8:.1f};speedup=x{speedup:.2f}")
+    emit("quant/decode_int8_banked", 1e6 / max(tok_bank, 1e-9),
+         f"tok/s={tok_bank:.1f}")
+
+    # ---- kernel micro: q_matmul ref vs pallas vs bf16 matmul ---------------
+    t, k, n = (256, 256, 512) if TINY else (1024, 1024, 2048)
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (t, k), jnp.bfloat16)
+    w = jax.random.normal(kw, (k, n), jnp.bfloat16)
+    qw, scale = quant.quantize_int8(w, axis=-1)
+    us_bf16 = time_fn(jax.jit(lambda a, b: a @ b), x, w)
+    us_ref = time_fn(jax.jit(lambda a, b, s: ref.q_matmul_ref(a, b, s)),
+                     x, qw, scale)
+    tun = dispatch.autotune_qmm(k, n, t, jnp.bfloat16)
+    us_pal = time_fn(jax.jit(
+        lambda a, b, s: ops.q_matmul(a, b, s, use_pallas=True, tuning=tun)),
+        x, qw, scale)
+    summary["qmm_us_bf16_matmul"] = us_bf16
+    summary["qmm_us_ref"] = us_ref
+    summary["qmm_us_pallas"] = us_pal
+    emit("quant/qmm_bf16_matmul", us_bf16, f"t={t};k={k};n={n}")
+    emit("quant/qmm_ref", us_ref, f"t={t};k={k};n={n}")
+    emit("quant/qmm_pallas", us_pal,
+         f"t={t};k={k};n={n};tt={tun.token_tile};nt={tun.group_tile}")
+
+    if TINY:
+        out = REPO_ROOT / "BENCH_quant.json"
+        out.write_text(json.dumps(summary, indent=2, sort_keys=True))
+        print(f"# wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

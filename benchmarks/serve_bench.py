@@ -8,56 +8,25 @@ deterministic measure of how much decode work the scheduler wastes on
 finished-or-empty rows (lockstep static batching burns steps on the
 max(max_new) barrier; slot-based continuous batching refills them).
 
-``REPRO_BENCH_TINY=1`` shrinks the workload for the CI smoke lane.
+``REPRO_BENCH_TINY=1`` shrinks the workload for the CI smoke lane and
+writes a ``BENCH_serve.json`` summary at the repo root (uploaded as a CI
+artifact so the serving-perf trajectory is tracked PR-over-PR).
 """
 from __future__ import annotations
 
+import json
 import os
-import time
+import pathlib
 
 import jax
-import numpy as np
 
 from repro.config import get_smoke_config
 from repro.core.runtime import ModelRuntime
-from repro.serve.engine import (ServeEngine, StaticServeEngine,
-                                latency_percentiles)
+from repro.serve.engine import ServeEngine, StaticServeEngine
 
-from .common import emit
+from .common import emit, mixed_workload, run_engine_timed
 
 TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
-
-
-def _workload(n_req, prompt_hi, max_new_hi, seed=0):
-    rng = np.random.default_rng(seed)
-    return [
-        {"prompt": rng.integers(1, 200,
-                                size=int(rng.integers(4, prompt_hi + 1))
-                                ).tolist(),
-         "max_new_tokens": int(rng.integers(2, max_new_hi + 1))}
-        for _ in range(n_req)
-    ]
-
-
-def _run_engine(make_engine, warmup, workload):
-    eng = make_engine()
-    for req in warmup:                       # compile prefill buckets + decode
-        eng.add_request(**req)
-    eng.run()
-    eng.drain_finished()
-    steps0, toks0 = eng.stats["decode_steps"], eng.stats["tokens_generated"]
-    for req in workload:
-        eng.add_request(**req)
-    t0 = time.perf_counter()
-    eng.run()
-    dt = time.perf_counter() - t0
-    toks = eng.stats["tokens_generated"] - toks0
-    steps = eng.stats["decode_steps"] - steps0
-    lat = latency_percentiles(eng.drain_finished())
-    return {"tok_s": toks / max(dt, 1e-9), "dt": dt, "tokens": toks,
-            "decode_steps": steps,
-            "util": toks / max(steps * eng.max_batch, 1),
-            "p50_ms": lat[50] * 1e3, "p95_ms": lat[95] * 1e3}
 
 
 def run():
@@ -70,7 +39,7 @@ def run():
     max_new_hi = 32 if TINY else 48
     max_len = prompt_hi + max_new_hi + 8
     rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0))
-    workload = _workload(n_req, prompt_hi, max_new_hi, seed=0)
+    workload = mixed_workload(n_req, prompt_hi, max_new_hi, seed=0)
     # warmup = the same workload, so every shape both schedulers will see
     # (static: per-batch pad shapes; continuous: prefill buckets) is
     # compiled before the timed pass — the comparison measures scheduling,
@@ -84,7 +53,7 @@ def run():
         ("continuous", lambda: ServeEngine(
             rt, max_batch=max_batch, max_len=max_len, eos_id=-1)),
     ):
-        r = res[name] = _run_engine(make, warmup, workload)
+        r = res[name] = run_engine_timed(make, warmup, workload)
         emit(f"serve/{name}_mixed",
              1e6 * r["dt"] / max(r["tokens"], 1),
              f"tok/s={r['tok_s']:.1f};util={r['util']:.2f};"
@@ -95,6 +64,16 @@ def run():
     emit("serve/continuous_speedup", 0.0,
          f"x{speedup:.2f};util {res['static']['util']:.2f}->"
          f"{res['continuous']['util']:.2f}")
+
+    if TINY:
+        summary = {"backend": jax.default_backend(), "arch": cfg.name,
+                   "continuous_speedup": speedup}
+        for name, r in res.items():
+            for key, val in r.items():
+                summary[f"{name}_{key}"] = val
+        out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+        out.write_text(json.dumps(summary, indent=2, sort_keys=True))
+        print(f"# wrote {out}", flush=True)
 
 
 if __name__ == "__main__":

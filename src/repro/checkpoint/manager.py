@@ -149,6 +149,62 @@ class CheckpointManager:
         with open(os.path.join(d, "index.json")) as f:
             return json.load(f).get("extra", {})
 
+    # -- quantized weight trees ----------------------------------------------
+    def save_quantized(self, step: int, qparams: Tree, quant_cfg,
+                       blocking: bool = True) -> None:
+        """Persist a quantized parameter tree (``quant.quantize_params``
+        output): int8/fp8 codes + fp32 scales as ordinary leaves, the
+        QuantConfig as index metadata so restore is self-describing."""
+        extra = {"kind": "quantized_params",
+                 "quant": dataclasses.asdict(quant_cfg)}
+        self.save(step, qparams, blocking=blocking, extra=extra)
+
+    def restore_quantized(self, base_abstract: Tree, qcfg=None,
+                          step: Optional[int] = None,
+                          use_pallas: Optional[bool] = None):
+        """-> (quantized tree, QuantConfig) from either checkpoint kind.
+
+        ``base_abstract`` is the UNQUANTIZED abstract param tree (shapes
+        only). A ``save_quantized`` checkpoint restores codes + scales
+        directly under its saved config; a plain float checkpoint is
+        restored and quantized ON LOAD with ``qcfg`` (default int8) — the
+        migration path for pre-quantization checkpoints.
+
+        ``use_pallas`` is execution strategy, not data layout: it is
+        chosen by the LOADER (this argument, or ``qcfg.use_pallas`` when
+        a full config is passed), never pinned by the checkpoint — saved
+        trees stay portable across backends. Everything else in an
+        explicit ``qcfg`` must match a quantized checkpoint's stored
+        codes/scales.
+        """
+        import dataclasses as dc
+
+        from repro import quant
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        ex = self.extra(step)
+        if ex.get("kind") == "quantized_params":
+            saved = dict(ex["quant"])
+            saved["target_patterns"] = tuple(saved.get("target_patterns", ()))
+            saved_cfg = quant.QuantConfig(**saved)
+            if qcfg is not None:
+                used_cfg = dc.replace(saved_cfg, use_pallas=qcfg.use_pallas)
+                if qcfg != used_cfg:
+                    raise ValueError(
+                        f"checkpoint was quantized with {saved_cfg}, which "
+                        f"conflicts with the requested {qcfg} — re-quantize "
+                        "from a float checkpoint to change modes")
+            elif use_pallas is not None:
+                used_cfg = dc.replace(saved_cfg, use_pallas=use_pallas)
+            else:
+                used_cfg = saved_cfg
+            like = quant.quantized_abstract(base_abstract, used_cfg)
+            return self.restore(like, step=step), used_cfg
+        qcfg = qcfg or quant.QuantConfig(use_pallas=bool(use_pallas))
+        params = self.restore(base_abstract, step=step)
+        return quant.quantize_params(params, qcfg), qcfg
+
     # -- named adapter banks --------------------------------------------------
     def save_adapters(self, step: int,
                       adapters_by_name: Dict[str, Dict[str, Dict[str, Any]]],

@@ -76,16 +76,22 @@ def path_str(path) -> str:
     return "/".join(_key_name(p) for p in path)
 
 
-def flatten_paths(tree: Tree) -> Dict[str, Array]:
-    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+def flatten_paths(tree: Tree, is_leaf=None) -> Dict[str, Array]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
     return {path_str(p): v for p, v in leaves}
 
 
+def matches_patterns(patterns, path: str) -> bool:
+    """fullmatch only: an unanchored target like ``.*/wq`` must not also
+    match a decoy weight named ``.../wq_extra`` (the old ``re.search``
+    fallback ignored the end anchor). THE one implementation of
+    target-pattern semantics — PEFT adapter selection and
+    ``quant.weights`` both use it."""
+    return any(re.fullmatch(pat, path) for pat in patterns)
+
+
 def _matches(cfg: PEFTConfig, path: str) -> bool:
-    # fullmatch only: an unanchored target like ``.*/wq`` must not also
-    # adapt a decoy weight named ``.../wq_extra`` (the old ``re.search``
-    # fallback ignored the end anchor)
-    return any(re.fullmatch(pat, path) for pat in cfg.target_patterns)
+    return matches_patterns(cfg.target_patterns, path)
 
 
 # ---------------------------------------------------------------------------
@@ -116,13 +122,20 @@ def spec_for(cfg: PEFTConfig, shape: Tuple[int, ...]) -> AdapterSpec:
 
 
 def adapted_paths(cfg: PEFTConfig, params: Tree) -> Dict[str, AdapterSpec]:
-    """Which weights get adapters, and with what spec."""
+    """Which weights get adapters, and with what spec.
+
+    Quantized trees work too: a ``QuantTensor`` stays ONE leaf here (its
+    ``shape``/``ndim`` mirror the logical weight), so an adapter bank can
+    be built over an already-quantized runtime — the adapters themselves
+    are always full-precision, applied activation-side.
+    """
     if not cfg.is_peft:
         return {}
+    from repro.quant.core import is_quant_tensor
     out = {}
-    for path, leaf in flatten_paths(params).items():
+    for path, leaf in flatten_paths(params, is_leaf=is_quant_tensor).items():
         if leaf.ndim >= 2 and _matches(cfg, path):
-            out[path] = spec_for(cfg, leaf.shape)
+            out[path] = spec_for(cfg, tuple(leaf.shape))
     return out
 
 
@@ -308,24 +321,56 @@ class AdapterContext:
                 return None
         return node or None
 
-    def rotator(self, group: Optional[Dict]
-                ) -> Optional[Callable[[str, Array], Array]]:
-        """Rotation callback ``rot(name, x)`` over one (scan-sliced) module
-        subtree, e.g. ``{"wq": {"L": (A, r, b, b), "R": ...}, ...}``.
-        Returns None when there is nothing to rotate, so model code can pass
-        it straight through to attention_block/apply_mlp."""
+    def rotator(self, group: Optional[Dict]) -> Optional["BankRotator"]:
+        """Rotation hook over one (scan-sliced) module subtree, e.g.
+        ``{"wq": {"L": (A, r, b, b), "R": ...}, ...}``. Returns None when
+        there is nothing to rotate, so model code can pass it straight
+        through to attention_block/apply_mlp."""
         if group is None or self.slots is None:
             return None
-        ids, peft = self.slots, self.peft
+        return BankRotator(group, self.slots, self.peft)
 
-        def rot(name: str, x: Array) -> Array:
-            entry = group.get(name)
-            if entry is None:
-                return x
-            return gs_rotate_banked(entry["L"], entry["R"], ids, x,
-                                    use_pallas=peft.use_pallas if peft
-                                    else False)
-        return rot
+
+class BankRotator:
+    """Per-request GS rotation hook: ``rot(name, x)`` rotates row i of x
+    with its own adapter (slot 0 = identity) before projection ``name``.
+
+    Besides being callable, it exposes ``banked_factors`` — the per-row
+    pre-orthogonalized (L, R) stacks — so the ``qlinear`` hook can fuse
+    rotation + quantized base matmul into one ``gs_q_matmul_banked`` call
+    instead of round-tripping the rotated slab through HBM. The factors
+    are gathered/cast to the ACTIVATION dtype: rotations stay bf16 even
+    when the base weights are int8 (QOFT rationale, DESIGN.md)."""
+
+    __slots__ = ("_group", "slots", "_peft")
+
+    def __init__(self, group: Dict, slots: Array,
+                 peft: Optional[PEFTConfig]):
+        self._group = group
+        self.slots = slots
+        self._peft = peft
+
+    @property
+    def use_pallas(self) -> bool:
+        return self._peft.use_pallas if self._peft else False
+
+    def __call__(self, name: str, x: Array) -> Array:
+        entry = self._group.get(name)
+        if entry is None:
+            return x
+        return gs_rotate_banked(entry["L"], entry["R"], self.slots, x,
+                                use_pallas=self.use_pallas)
+
+    def banked_factors(self, name: str, dtype
+                       ) -> Optional[Tuple[Array, Array]]:
+        """Per-row (L, R) blocks for projection ``name`` in ``dtype``
+        ((B, r, b, b) each), or None when ``name`` has no bank entry."""
+        entry = self._group.get(name)
+        if entry is None:
+            return None
+        L = jnp.take(entry["L"], self.slots, axis=0).astype(dtype)
+        R = jnp.take(entry["R"], self.slots, axis=0).astype(dtype)
+        return L, R
 
 
 @jax.tree_util.register_pytree_node_class

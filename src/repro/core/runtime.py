@@ -46,6 +46,13 @@ class ModelRuntime:
             params = (api.abstract_params(cfg) if abstract else
                       api.init_params(cfg, key if key is not None
                                       else jax.random.PRNGKey(0)))
+        if adapters is not None:
+            from repro import quant
+            if quant.is_quantized_tree(params):
+                raise ValueError(
+                    "cannot merge adapters into already-quantized weights — "
+                    "merge first, then call runtime.quantized() (quantizing "
+                    "the merged tree keeps the rotation at full precision)")
         if (adapters is None) != (peft_cfg is None):
             raise ValueError(
                 "offline merge needs BOTH adapters and peft_cfg — passing "
@@ -67,6 +74,7 @@ class ModelRuntime:
         self.params = params
         self.mesh = mesh
         self.bank = bank
+        self.quant_cfg = None        # set by .quantized() / load_quantized
         self._decode = None
         self._prefill = None
         self._loss = None
@@ -113,7 +121,60 @@ class ModelRuntime:
                 "build the bank from the unmerged base runtime")
         bank = peft_lib.build_adapter_bank(peft_cfg, self.params,
                                            adapters_by_name)
-        return ModelRuntime(self.cfg, self.params, mesh=self.mesh, bank=bank)
+        rt = ModelRuntime(self.cfg, self.params, mesh=self.mesh, bank=bank)
+        rt.quant_cfg = self.quant_cfg   # quantize-then-bank commutes
+        return rt
+
+    # -- quantized serving ----------------------------------------------------
+    @property
+    def is_quantized(self) -> bool:
+        return self.quant_cfg is not None
+
+    def quantized(self, mode: Optional[str] = None, *,
+                  qcfg=None) -> "ModelRuntime":
+        """New runtime over the same model with base weights quantized for
+        inference (per-output-channel symmetric int8 by default; fp8 stub
+        behind a dtype gate). Pass ``mode`` OR a full ``qcfg`` — naming
+        both only works when they agree. The adapter bank — when present —
+        is carried over UNTOUCHED: GS rotations stay bf16 and apply
+        activation-side before the quantized base matmuls (QOFT recipe,
+        DESIGN.md)."""
+        from repro import quant
+        if self.is_quantized:
+            raise ValueError("runtime is already quantized "
+                             f"(mode={self.quant_cfg.mode!r})")
+        if qcfg is None:
+            qcfg = quant.QuantConfig(mode=mode or "int8",
+                                     use_pallas=self.cfg.use_pallas)
+        elif mode is not None and qcfg.mode != mode:
+            raise ValueError(
+                f"quantized(mode={mode!r}) conflicts with qcfg.mode="
+                f"{qcfg.mode!r} — pass one or the other")
+        rt = ModelRuntime(self.cfg, quant.quantize_params(self.params, qcfg),
+                          mesh=self.mesh, bank=self.bank)
+        rt._merged = self._merged
+        rt.quant_cfg = qcfg
+        return rt
+
+    @classmethod
+    def load_quantized(cls, directory: str, cfg: ModelConfig, *,
+                       qcfg=None, mesh=None, step: Optional[int] = None
+                       ) -> "ModelRuntime":
+        """Runtime from a checkpoint, served quantized.
+
+        A quantized checkpoint (``CheckpointManager.save_quantized``)
+        restores codes+scales directly with its saved QuantConfig (the
+        kernel path follows ``cfg.use_pallas``/``qcfg`` — execution
+        strategy is chosen at load time, not baked into the checkpoint);
+        a plain float checkpoint is quantized ON LOAD with ``qcfg``
+        (default int8) — the upgrade path for existing bf16 checkpoints."""
+        from repro.checkpoint.manager import CheckpointManager
+        qparams, used_cfg = CheckpointManager(directory).restore_quantized(
+            api.abstract_params(cfg), qcfg=qcfg, step=step,
+            use_pallas=cfg.use_pallas)
+        rt = cls(cfg, qparams, mesh=mesh)
+        rt.quant_cfg = used_cfg
+        return rt
 
     # -- checkpoint integration ----------------------------------------------
     @staticmethod

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from .bdmm import bdmm_dblocks_pallas, bdmm_pallas, default_group_tile
 from .gs_fused import (gs_fused_T_pallas, gs_fused_bwd_pallas,
                        gs_fused_grads_pallas, gs_fused_pallas)
+from .q_matmul import default_n_tile, gs_q_matmul_pallas, q_matmul_pallas
 
 Array = jnp.ndarray
 
@@ -84,6 +85,19 @@ def gs_key(r: int, b: int, dtype, backend: Optional[str] = None) -> Key:
     return ("gs", r, b, jnp.dtype(dtype).name, backend or _backend())
 
 
+def qmm_key(k: int, n: int, dtype, backend: Optional[str] = None) -> Key:
+    """Quantized matmul (kernels/q_matmul.py): x (T, k) @ W_q (k, n).
+    ``dtype`` is the ACTIVATION dtype (codes are int8 by construction);
+    ``Tuning.group_tile`` doubles as the out-channel tile here."""
+    return ("qmm", k, n, jnp.dtype(dtype).name, backend or _backend())
+
+
+def gs_qmm_key(r: int, b: int, n: int, dtype,
+               backend: Optional[str] = None) -> Key:
+    """Fused rotate+quantized-matmul: GS factors (r, b, b), W_q (r*b, n)."""
+    return ("gs_qmm", r, b, n, jnp.dtype(dtype).name, backend or _backend())
+
+
 def _wildcard(key: Key) -> Key:
     return key[:-2] + ("*", "*")
 
@@ -97,8 +111,10 @@ def install_tunings(entries: Iterable[Tuple]) -> None:
     """Install config-level overrides (``ModelConfig.kernel_tunings``).
 
     Each entry is a tuple:
-        ("bdmm", r, bo, bi, token_tile, group_tile)
-        ("gs",   r, b,      token_tile)
+        ("bdmm",   r, bo, bi, token_tile, group_tile)
+        ("gs",     r, b,      token_tile)
+        ("qmm",    k, n,      token_tile, n_tile)
+        ("gs_qmm", r, b, n,   token_tile, n_tile)
     Entries apply to every dtype/backend (wildcard keys). Each call replaces
     the previously installed config set.
     """
@@ -115,6 +131,14 @@ def install_tunings(entries: Iterable[Tuple]) -> None:
             _, r, b, tt = e
             key = _wildcard(gs_key(r, b, jnp.float32))
             tun = Tuning(token_tile=tt)
+        elif op == "qmm":
+            _, k, n, tt, nt = e
+            key = _wildcard(qmm_key(k, n, jnp.float32))
+            tun = Tuning(token_tile=tt, group_tile=nt)
+        elif op == "gs_qmm":
+            _, r, b, n, tt, nt = e
+            key = _wildcard(gs_qmm_key(r, b, n, jnp.float32))
+            tun = Tuning(token_tile=tt, group_tile=nt)
         else:
             raise ValueError(f"unknown kernel_tunings op {op!r}")
         register_tuning(key, tun)
@@ -134,6 +158,10 @@ def get_tuning(key: Key) -> Tuning:
     if key[0] == "bdmm":
         _, r, bo, bi = key[:4]
         return Tuning(token_tile=128, group_tile=default_group_tile(r, bi))
+    if key[0] == "qmm":
+        return Tuning(token_tile=128, group_tile=default_n_tile(key[2]))
+    if key[0] == "gs_qmm":
+        return Tuning(token_tile=128, group_tile=default_n_tile(key[3]))
     return Tuning(token_tile=128)
 
 
@@ -212,6 +240,35 @@ def autotune_gs(r: int, b: int, t: int, dtype=jnp.float32, *,
         us = _time_us(fn, L, R, x, iters=iters)
         if us < best_us:
             best, best_us = Tuning(token_tile=tt), us
+    _TUNED[key] = best
+    return best
+
+
+def autotune_qmm(k: int, n: int, t: int, dtype=jnp.bfloat16, *,
+                 token_tiles: Sequence[int] = DEFAULT_TOKEN_TILES,
+                 n_tiles: Optional[Sequence[int]] = None,
+                 iters: int = 5) -> Tuning:
+    """Search (token_tile, n_tile) for the quantized matmul; cache best.
+    ``dtype`` is the activation dtype — codes are int8."""
+    key = qmm_key(k, n, dtype)
+    if key in _TUNED:
+        return _TUNED[key]
+    if n_tiles is None:
+        n_tiles = sorted({nt for nt in (128, 256, 512, default_n_tile(n))
+                          if n % nt == 0 and nt <= n} or {default_n_tile(n)})
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (t, k), dtype)
+    q = jax.random.randint(k2, (k, n), -127, 128, jnp.int8)
+    scale = jnp.full((1, n), 1e-2, jnp.float32)
+    interp = _interpret()
+    best, best_us = None, float("inf")
+    for tt in token_tiles:
+        for nt in n_tiles:
+            fn = jax.jit(functools.partial(
+                q_matmul_pallas, token_tile=tt, n_tile=nt, interpret=interp))
+            us = _time_us(fn, x, q, scale, iters=iters)
+            if us < best_us:
+                best, best_us = Tuning(token_tile=tt, group_tile=nt), us
     _TUNED[key] = best
     return best
 

@@ -122,6 +122,70 @@ def gs_banked_transform_T(L: Array, R: Array, x: Array,
     return ref.gs_banked_T_ref(L, R, x)
 
 
+def q_matmul(x: Array, q: Array, scale: Array, use_pallas: bool = False,
+             tuning: Optional[Tuning] = None) -> Array:
+    """Quantized-weight matmul y = x @ dequant(q, scale) with the dequant
+    in the epilogue. x: (..., K); q: (K, N) int8/fp8; scale broadcastable
+    (1, N) / scalar. The serving hot path of ``ModelRuntime.quantized``."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_pallas and q.dtype == jnp.int8:
+        k, n = q.shape
+        tun = tuning or dispatch.get_tuning(dispatch.qmm_key(k, n, x.dtype))
+        y = dispatch.q_matmul_pallas(x2, q, scale,
+                                     token_tile=tun.token_tile,
+                                     n_tile=tun.group_tile,
+                                     interpret=_interpret())
+    else:
+        # fp8 codes (and the no-kernel path) run the reference einsum
+        y = ref.q_matmul_ref(x2, q, scale)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def gs_q_matmul(L: Array, R: Array, x: Array, q: Array, scale: Array,
+                use_pallas: bool = False,
+                tuning: Optional[Tuning] = None) -> Array:
+    """Fused activation-side GS rotation + quantized matmul:
+    y = (x Q_gs) @ dequant(q, scale). L, R: (r, b, b); x: (..., d=r*b)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_pallas and q.dtype == jnp.int8:
+        r, b, _ = L.shape
+        n = q.shape[-1]
+        tun = tuning or dispatch.get_tuning(
+            dispatch.gs_qmm_key(r, b, n, x.dtype))
+        y = dispatch.gs_q_matmul_pallas(L, R, x2, q, scale,
+                                        token_tile=tun.token_tile,
+                                        n_tile=tun.group_tile,
+                                        interpret=_interpret())
+    else:
+        y = ref.gs_q_matmul_ref(L, R, x2, q, scale)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def gs_q_matmul_banked(L: Array, R: Array, x: Array, q: Array, scale: Array,
+                       use_pallas: bool = False,
+                       tuning: Optional[Tuning] = None) -> Array:
+    """Per-row fused rotate+quantized-matmul (multi-adapter quantized
+    serving): L, R (B, r, b, b) pre-gathered per-row GS blocks, x (B, T, d),
+    ONE shared quantized base weight q (d, N). Row i computes
+    (x_i Q_i) @ W_q — bf16 rotation, int8 base matmul, one kernel."""
+    if use_pallas and q.dtype == jnp.int8:
+        _, r, b, _bb = L.shape
+        n = q.shape[-1]
+        tun = tuning or dispatch.get_tuning(
+            dispatch.gs_qmm_key(r, b, n, x.dtype))
+        interp = _interpret()
+        return jax.vmap(
+            lambda l, rr, xx: dispatch.gs_q_matmul_pallas(
+                l, rr, xx, q, scale, token_tile=tun.token_tile,
+                n_tile=tun.group_tile, interpret=interp))(L, R, x)
+    xr = ref.gs_banked_T_ref(L, R, x)
+    bsz, t, d = xr.shape
+    y = ref.q_matmul_ref(xr.reshape(bsz * t, d), q, scale)
+    return y.reshape(bsz, t, y.shape[-1])
+
+
 def ssd(x: Array, loga: Array, B: Array, C: Array, chunk: int = 64,
         use_pallas: bool = False) -> Array:
     """Mamba2 SSD scan. Accepts (T,H,P) or batched (N,T,H,P) inputs."""

@@ -86,6 +86,34 @@ def gs_fused_T_ref(L: Array, R: Array, x: Array) -> Array:
     return y
 
 
+def q_matmul_ref(x: Array, q: Array, scale: Array) -> Array:
+    """Quantized-weight matmul oracle.
+
+    x: (T, K) float; q: (K, N) int8/fp8 codes; scale: fp32 broadcastable
+    against (K, N) (per-output-channel (1, N) or scalar).
+    y = (x @ q) * out_scale in fp32, cast back to x.dtype — the dequant
+    runs in the epilogue (scales fold into the N columns), never as a
+    materialized (K, N) float weight.
+    """
+    y = jnp.einsum("tk,kn->tn", x.astype(jnp.float32),
+                   q.astype(jnp.float32))
+    # per-channel scale is keepdims over the reduced axis -> (1, N); a
+    # scalar broadcasts trivially. Either way it multiplies the output.
+    return (y * jnp.asarray(scale, jnp.float32).reshape(
+        (1, -1) if jnp.ndim(scale) else ())).astype(x.dtype)
+
+
+def gs_q_matmul_ref(L: Array, R: Array, x: Array, q: Array,
+                    scale: Array) -> Array:
+    """Fused oracle: activation-side GS rotation then quantized matmul.
+
+    y = (x Q_gs) @ W_q  with  x Q_gs = (R^T P^T L^T P x^T)^T applied in
+    the activation dtype (bf16 rotations — the QOFT recipe) and the int8
+    base matmul dequantized in the epilogue.
+    """
+    return q_matmul_ref(gs_fused_T_ref(L, R, x), q, scale)
+
+
 def flash_ref(q: Array, k: Array, v: Array, causal: bool = True,
               scale: float = 0.0) -> Array:
     """Plain softmax attention oracle. q: (H, Sq, D); k, v: (H, Sk, D)."""

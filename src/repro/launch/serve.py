@@ -106,6 +106,10 @@ def main():
     ap.add_argument("--peft-demo", action="store_true",
                     help="attach + merge one GSOFT adapter into the weights "
                          "before serving (paper §6.1: zero overhead)")
+    ap.add_argument("--quantize", choices=("none", "int8", "fp8"),
+                    default="none",
+                    help="serve with quantized base weights (per-channel "
+                         "int8 / fp8 stub); GS adapter rotations stay bf16")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -157,6 +161,16 @@ def main():
                                       jax.random.PRNGKey(1))
         rt = ModelRuntime(cfg, rt.params, mesh=mesh, adapters=adapters,
                           peft_cfg=peft_cfg)
+
+    # ---- weight quantization (after any merge/bank: rotations stay bf16) ---
+    if args.quantize != "none":
+        from repro.quant import tree_bytes
+        before = tree_bytes(rt.params)
+        rt = rt.quantized(args.quantize)
+        after = tree_bytes(rt.params)
+        print(f"quantized base weights ({args.quantize}): params "
+              f"{before / 1e6:.2f} MB -> {after / 1e6:.2f} MB "
+              f"({before / max(after, 1):.2f}x smaller)")
 
     if args.engine == "static":
         if rt.banked:

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from .layers import Shard, apply_rope, dense_init, no_shard, stacked_dense_init
+from .layers import (Shard, apply_rope, dense_init, no_shard, qlinear,
+                     stacked_dense_init)
 
 Array = jnp.ndarray
 
@@ -147,8 +148,8 @@ def _positions(b: int, s: int) -> Array:
 # full attention block (projections + rope + core + output)
 # ---------------------------------------------------------------------------
 
-def _proj(x, w, bias=None):
-    y = x @ w
+def _proj(x, w, bias=None, rot=None, name=""):
+    y = qlinear(x, w, rot, name)
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y
@@ -179,10 +180,11 @@ def attention_block(p: Dict[str, Array], x: Array, cfg: ModelConfig, *,
     b, sq, _ = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
     src = x if kv_x is None else kv_x
-    rot = rot or (lambda name, t: t)
-    q = _proj(rot("wq", x), p["wq"], p.get("bq")).reshape(b, sq, H, hd)
-    k = _proj(rot("wk", src), p["wk"], p.get("bk")).reshape(b, src.shape[1], K, hd)
-    v = _proj(rot("wv", src), p["wv"], p.get("bv")).reshape(b, src.shape[1], K, hd)
+    q = _proj(x, p["wq"], p.get("bq"), rot, "wq").reshape(b, sq, H, hd)
+    k = _proj(src, p["wk"], p.get("bk"), rot, "wk").reshape(b, src.shape[1],
+                                                           K, hd)
+    v = _proj(src, p["wv"], p.get("bv"), rot, "wv").reshape(b, src.shape[1],
+                                                            K, hd)
     q = shard(q, "act_heads")
     k = shard(k, "act_kv_heads")
     v = shard(v, "act_kv_heads")
@@ -235,7 +237,7 @@ def attention_block(p: Dict[str, Array], x: Array, cfg: ModelConfig, *,
                                    causal=causal, chunk=cfg.attn_chunk,
                                    scale=scale)
     out = out.reshape(b, sq, H * hd)
-    return shard(rot("wo", out) @ p["wo"], "act_d"), new_cache
+    return shard(qlinear(out, p["wo"], rot, "wo"), "act_d"), new_cache
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,

@@ -18,7 +18,7 @@ from repro.core.peft import AdapterContext, PrefillRequest
 from . import registry
 from .attention import attention_block, init_attention, init_cache, online_attention
 from .layers import (Shard, apply_mlp, cross_entropy, embed_init,
-                     init_stacked_mlp, no_shard, rms_norm, softcap,
+                     init_stacked_mlp, no_shard, qlinear, rms_norm, softcap,
                      stacked_dense_init)
 from .transformer import MOE_AUX_COEF, _gather_last, _remat
 
@@ -101,7 +101,7 @@ def _decoder_pass(cfg, params, h, enc_out, shard, cache=None, cache_pos=None):
 
 def _unembed(cfg, params, h, shard):
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    logits = h @ params["lm_head"]["w"].astype(h.dtype)
+    logits = qlinear(h, params["lm_head"]["w"], cast=True)
     return shard(softcap(logits, cfg.logit_softcap), "logits")
 
 

@@ -15,12 +15,49 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+from repro.quant.core import QuantTensor
+
 Array = jnp.ndarray
 Shard = Callable[[Array, str], Array]
 
 
 def no_shard(x: Array, name: str) -> Array:
     return x
+
+
+def qlinear(x: Array, w, rot: Optional[Callable[[str, Array], Array]] = None,
+            name: str = "", cast: bool = False) -> Array:
+    """The QuantizedLinear hook — every base-weight projection on the
+    attention/MLP/head path routes through here.
+
+    ``w`` is either a plain weight array (y = x @ w, unchanged numerics)
+    or a ``QuantTensor`` (int8/fp8 codes + scales), in which case the
+    matmul dispatches through ``kernels.ops.q_matmul`` with the dequant in
+    the epilogue. ``rot(name, x)`` is the optional per-request GS rotation
+    (bf16, never quantized); when the rotator exposes its banked factors
+    AND the weight is quantized, rotation + base matmul fuse into one
+    ``gs_q_matmul_banked`` kernel call — the rotated slab never leaves
+    VMEM on the Pallas path.
+
+    ``cast=True`` pre-casts a PLAIN weight to the activation dtype (the
+    lm_head/patch_proj call sites, whose weights may be wider than the
+    activations); quantized matmuls already return ``x.dtype``.
+    """
+    if isinstance(w, QuantTensor):
+        factors = (rot.banked_factors(name, x.dtype)
+                   if hasattr(rot, "banked_factors") else None)
+        if factors is not None:
+            return kernel_ops.gs_q_matmul_banked(
+                factors[0], factors[1], x, w.q, w.scale,
+                use_pallas=w.meta.use_pallas)
+        if rot is not None:
+            x = rot(name, x)
+        return kernel_ops.q_matmul(x, w.q, w.scale,
+                                   use_pallas=w.meta.use_pallas)
+    if rot is not None:
+        x = rot(name, x)
+    return x @ (w.astype(x.dtype) if cast else w)
 
 
 # ---------------------------------------------------------------------------
@@ -115,19 +152,20 @@ def apply_mlp(p: Dict[str, Array], x: Array, mlp_type: str,
               shard: Shard = no_shard,
               rot: Optional[Callable[[str, Array], Array]] = None) -> Array:
     """``rot(name, x)`` optionally rotates the inputs of projection ``name``
-    (wi/wg/wo) — activation-side GSOFT for per-request adapters."""
-    rot = rot or (lambda name, t: t)
-    h = shard(rot("wi", x) @ p["wi"], "act_ff")
+    (wi/wg/wo) — activation-side GSOFT for per-request adapters. Every
+    projection goes through the ``qlinear`` hook, so int8-quantized base
+    weights (``ModelRuntime.quantized``) serve transparently."""
+    h = shard(qlinear(x, p["wi"], rot, "wi"), "act_ff")
     if mlp_type == "swiglu":
-        h = jax.nn.silu(shard(rot("wg", x) @ p["wg"], "act_ff")) * h
+        h = jax.nn.silu(shard(qlinear(x, p["wg"], rot, "wg"), "act_ff")) * h
     elif mlp_type == "geglu":
-        h = jax.nn.gelu(shard(rot("wg", x) @ p["wg"], "act_ff"),
+        h = jax.nn.gelu(shard(qlinear(x, p["wg"], rot, "wg"), "act_ff"),
                         approximate=True) * h
     elif mlp_type == "gelu":
         h = jax.nn.gelu(h, approximate=True)
     else:
         raise ValueError(mlp_type)
-    return shard(rot("wo", h) @ p["wo"], "act_d")
+    return shard(qlinear(h, p["wo"], rot, "wo"), "act_d")
 
 
 # ---------------------------------------------------------------------------

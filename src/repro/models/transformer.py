@@ -24,7 +24,7 @@ from repro.core.peft import AdapterContext, PrefillRequest
 from . import registry
 from .attention import attention_block, init_attention, init_cache
 from .layers import (Shard, apply_mlp, cross_entropy, embed_init, init_mlp,
-                     init_stacked_mlp, no_shard, rms_norm, softcap,
+                     init_stacked_mlp, no_shard, qlinear, rms_norm, softcap,
                      stacked_dense_init)
 from .moe import init_moe, moe_layer
 from .ssm import init_mamba, init_mamba_state, mamba_block, mamba_decode_step
@@ -173,7 +173,7 @@ def _unembed(cfg: ModelConfig, params, h: Array, shard: Shard) -> Array:
     if cfg.tie_embeddings:
         logits = h @ params["embed"]["table"].T.astype(h.dtype)
     else:
-        logits = h @ params["lm_head"]["w"].astype(h.dtype)
+        logits = qlinear(h, params["lm_head"]["w"], cast=True)
     logits = softcap(logits, cfg.logit_softcap)
     return shard(logits, "logits")
 
@@ -186,8 +186,8 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Array],
     h = _embed(cfg, params, tokens, shard)
     n_prefix = 0
     if cfg.family == "vlm" and "patches" in batch:
-        pe = (batch["patches"].astype(cfg.act_dtype)
-              @ params["patch_proj"]["wi"].astype(cfg.act_dtype))
+        pe = qlinear(batch["patches"].astype(cfg.act_dtype),
+                     params["patch_proj"]["wi"], cast=True)
         h = jnp.concatenate([shard(pe, "act_btd"), h], axis=1)
         n_prefix = pe.shape[1]
 
@@ -373,9 +373,8 @@ def prefill(cfg: ModelConfig, params, req: PrefillRequest, state,
             patches = batch["patches"].astype(cfg.act_dtype)
             prot = (ctx.rotator(ctx.group("patch_proj"))
                     if ctx is not None else None)
-            if prot is not None:
-                patches = prot("wi", patches)
-            pe = patches @ params["patch_proj"]["wi"].astype(cfg.act_dtype)
+            pe = qlinear(patches, params["patch_proj"]["wi"], prot, "wi",
+                         cast=True)
             h = jnp.concatenate([shard(pe, "act_btd"), h], axis=1)
 
         bl_tree = ctx.group("layers") if ctx is not None else None

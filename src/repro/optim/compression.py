@@ -9,28 +9,24 @@ standard fix that restores convergence for biased compressors.
 ``compressed_psum_mean`` is built on shard_map: quantize locally ->
 all_gather int8 (+ fp32 scales) -> dequantize-mean locally.  The dry-run
 lowers it to measure the collective-byte reduction (§Perf).
+
+The int8 codec itself lives in ``repro.quant.core`` (ONE implementation
+shared with serving-side weight quantization); ``quantize_int8`` /
+``dequantize_int8`` are re-exported here for the error-feedback call
+sites. New code should import them from ``repro.quant``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.quant.core import (dequantize_int8,  # noqa: F401  (re-export)
+                              quantize_int8)
+
 Tree = Any
-
-
-def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    x32 = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
 
 
 def ef_compress(grads: Tree, err: Tree) -> Tuple[Tree, Tree, Tree]:

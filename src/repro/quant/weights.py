@@ -1,0 +1,109 @@
+"""Weight-tree quantization for serving: int8 base weights, bf16 adapters.
+
+``quantize_params(params, cfg)`` walks a model parameter tree and replaces
+every weight matching ``cfg.target_patterns`` with a ``QuantTensor``
+(per-output-channel symmetric int8 by default, fp8 stub behind a dtype
+gate). Everything else — norms, biases, embeddings, SSM/MoE internals that
+are consumed by raw einsums rather than the ``qlinear`` hook — stays in its
+original dtype, and GS adapter banks are never part of the params tree at
+all, so per-request rotations stay bf16 by construction (the QOFT/OFTv2
+recipe: memory-bandwidth-bound base matmuls quantize; the tiny orthogonal
+factors, whose Cayley orthogonality int8 would destroy, do not).
+
+The default targets are exactly the projections the model layers route
+through the ``qlinear`` hook (attention q/k/v/o, MLP in/gate/out, the
+patch frontend and the LM head). MoE expert stacks and Mamba projections
+are deliberately excluded until their einsum call sites grow hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .core import QuantTensor, is_quant_tensor, quantize_tensor
+
+Array = jnp.ndarray
+Tree = Any
+
+# weights consumed through the qlinear hook (models/layers.py): attention +
+# cross-attention + dense-MLP projections (any nesting), the vlm patch
+# frontend, and the LM head. NOT moe/mamba (raw-einsum call sites).
+DEFAULT_QUANT_TARGETS: Tuple[str, ...] = (
+    r"(.*/)?(attn|cross|mlp|patch_proj)/(wq|wk|wv|wo|wi|wg)$",
+    r"lm_head/w$",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How to quantize a serving weight tree (hashable, jit-static)."""
+    mode: str = "int8"             # int8 | fp8 (stub) | none
+    per_channel: bool = True       # per-output-channel scales (axis -1)
+    use_pallas: bool = False       # matmuls via kernels/q_matmul.py
+    target_patterns: Tuple[str, ...] = DEFAULT_QUANT_TARGETS
+
+    @property
+    def axis(self) -> Optional[int]:
+        return -1 if self.per_channel else None
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+
+def _matches(cfg: QuantConfig, path: str) -> bool:
+    from repro.core.peft import matches_patterns
+    return matches_patterns(cfg.target_patterns, path)
+
+
+def quantize_params(params: Tree, cfg: QuantConfig) -> Tree:
+    """Replace every targeted >=2-D float weight with a QuantTensor."""
+    if not cfg.enabled:
+        return params
+    from repro.core.peft import path_str
+
+    def visit(path, leaf):
+        if is_quant_tensor(leaf):
+            raise ValueError(f"{path_str(path)} is already quantized — "
+                             "quantize_params expects a float weight tree")
+        if (leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and _matches(cfg, path_str(path))):
+            return quantize_tensor(leaf, mode=cfg.mode, axis=cfg.axis,
+                                   use_pallas=cfg.use_pallas)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params,
+                                            is_leaf=is_quant_tensor)
+
+
+def dequantize_params(params: Tree) -> Tree:
+    """Back to a plain float tree (testing / debugging / export)."""
+    return jax.tree_util.tree_map(
+        lambda l: l.dequantize() if is_quant_tensor(l) else l,
+        params, is_leaf=is_quant_tensor)
+
+
+def is_quantized_tree(params: Tree) -> bool:
+    return any(is_quant_tensor(l) for l in jax.tree_util.tree_leaves(
+        params, is_leaf=is_quant_tensor))
+
+
+def tree_bytes(params: Tree) -> int:
+    """Parameter-memory footprint in bytes (QuantTensor-aware) — the
+    HBM-residency number the quant benchmark reports."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params, is_leaf=is_quant_tensor):
+        if is_quant_tensor(leaf):
+            total += leaf.nbytes
+        else:
+            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def quantized_abstract(base_abstract: Tree, cfg: QuantConfig) -> Tree:
+    """Shape/dtype tree of ``quantize_params`` applied to an abstract base
+    tree — what the checkpoint manager restores quantized trees into."""
+    return jax.eval_shape(lambda t: quantize_params(t, cfg), base_abstract)
