@@ -1,0 +1,132 @@
+"""Adapter-method comparison benchmark — one row set per registered
+``core.methods`` entry (the registry is the source of truth; a newly
+registered parametrization shows up here with zero edits):
+
+  * adapter parameter count on the smoke config's adapted weights
+    (the PEFT-efficiency axis the paper's Table 1 argues about),
+  * merged-rotation orthogonality error ``max |Q^T Q - I|`` on random
+    params (orthogonal methods; the correctness axis),
+  * banked serving throughput (tok/s) through ``ServeEngine`` for every
+    bankable method — each method serves a single-tenant bank over the
+    same mixed-length workload — plus one MIXED bank row where all
+    bankable methods serve side by side (the heterogeneous-bank path).
+
+``REPRO_BENCH_TINY=1`` shrinks the workload for the CI smoke lane and
+writes a ``BENCH_methods.json`` summary at the repo root (uploaded as a CI
+artifact so the per-method trajectory is tracked PR-over-PR).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_smoke_config
+from repro.core import adapters as ad
+from repro.core import methods as methods_lib
+from repro.core import peft as peft_lib
+from repro.core.orthogonal import orthogonality_error
+from repro.core.runtime import ModelRuntime
+from repro.kernels.dispatch import banked_key_fn
+from repro.serve.engine import ServeEngine
+
+from .common import emit, mixed_workload, run_engine_timed
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+
+
+def _method_cfg(method: str) -> peft_lib.PEFTConfig:
+    return peft_lib.PEFTConfig(method=method, block_size=8, reflections=4)
+
+
+def _tuned_adapters(cfg, params, seed, scale=0.2):
+    adp = peft_lib.init_peft(cfg, params, jax.random.PRNGKey(seed))
+    return jax.tree.map(
+        lambda a: a + scale * jax.random.normal(
+            jax.random.PRNGKey(seed + 31), a.shape), adp)
+
+
+def run():
+    cfg = get_smoke_config("qwen2-72b")
+    rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0))
+    summary = {"backend": jax.default_backend(), "arch": cfg.name,
+               "methods": {}}
+
+    n_req = 8 if TINY else 24
+    prompt_hi, max_new_hi = (10, 8) if TINY else (24, 24)
+    max_len = prompt_hi + max_new_hi + 8
+    d = 64
+    workload = mixed_workload(n_req, prompt_hi, max_new_hi, seed=0)
+
+    for method in methods_lib.registered():
+        ops = methods_lib.get(method)
+        mcfg = _method_cfg(method)
+        row = {"orthogonal": ops.orthogonal,
+               "bankable": ops.bank_build is not None,
+               "quant_compatible": ops.quant_compatible,
+               # which dispatch key family the banked transform rides
+               # (None = reference-einsum fallback, nothing to autotune)
+               "banked_kernel": (ops.banked_kernel
+                                 if banked_key_fn(ops.banked_kernel)
+                                 else None)}
+
+        # parameter count over the smoke config's adapted weights
+        specs = peft_lib.adapted_paths(mcfg, rt.params)
+        row["params"] = sum(ad.num_adapter_params(s) for s in specs.values())
+        emit(f"methods/{method}_params", 0.0, f"n={row['params']}")
+
+        # merged orthogonality error on random (non-identity) params
+        if ops.orthogonal:
+            spec = peft_lib.spec_for(mcfg, (d, d))
+            p = ad.init_adapter(spec, jax.random.PRNGKey(1))
+            p = jax.tree.map(
+                lambda a: a + 0.3 * jax.random.normal(
+                    jax.random.PRNGKey(2), a.shape), p)
+            err = float(orthogonality_error(
+                ad.merge(spec, p, jnp.eye(d, dtype=jnp.float32))))
+            row["orthogonality_error"] = err
+            emit(f"methods/{method}_orth_err", 0.0, f"err={err:.2e}")
+
+        # banked serving throughput (single-tenant bank per method)
+        if ops.bank_build is not None:
+            adapters = {"t": _tuned_adapters(mcfg, rt.params, seed=5)}
+            brt = rt.with_bank(adapters, mcfg)
+            wl = [dict(req, adapter="t") for req in workload]
+            r = run_engine_timed(
+                lambda: ServeEngine(brt, max_batch=4, max_len=max_len,
+                                    eos_id=-1), wl, wl)
+            row["banked_tok_s"] = r["tok_s"]
+            emit(f"methods/{method}_banked",
+                 1e6 * r["dt"] / max(r["tokens"], 1),
+                 f"tok/s={r['tok_s']:.1f};decode_steps={r['decode_steps']}")
+        summary["methods"][method] = row
+
+    # heterogeneous bank: every bankable method serves side by side
+    mixed_cfgs = {f"t_{m}": _method_cfg(m)
+                  for m in methods_lib.registered()
+                  if methods_lib.get(m).bank_build is not None}
+    adapters = {name: _tuned_adapters(c, rt.params, seed=11 + i)
+                for i, (name, c) in enumerate(mixed_cfgs.items())}
+    brt = rt.with_bank(adapters, mixed_cfgs)
+    tenants = list(adapters) + [None]
+    wl = [dict(req, adapter=tenants[i % len(tenants)])
+          for i, req in enumerate(workload)]
+    r = run_engine_timed(
+        lambda: ServeEngine(brt, max_batch=4, max_len=max_len, eos_id=-1),
+        wl, wl)
+    summary["mixed_bank"] = {"methods": sorted(brt.bank.bank_methods),
+                             "tok_s": r["tok_s"]}
+    emit("methods/mixed_bank", 1e6 * r["dt"] / max(r["tokens"], 1),
+         f"tok/s={r['tok_s']:.1f};methods={'+'.join(summary['mixed_bank']['methods'])}")
+
+    if TINY:
+        out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_methods.json"
+        out.write_text(json.dumps(summary, indent=2, sort_keys=True))
+        print(f"# wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

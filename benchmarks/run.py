@@ -14,12 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-list of {table1,table2,table3,micro,kernels,"
-                         "serve,quant}")
+                         "serve,quant,methods}")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     from . import table1_glue, table2_subject, table3_lipconvnet
-    from . import kernels_bench, micro_gs, quant_bench, serve_bench
+    from . import kernels_bench, method_bench, micro_gs, quant_bench, \
+        serve_bench
 
     suites = [
         ("table1", table1_glue.run),
@@ -29,6 +30,7 @@ def main() -> None:
         ("kernels", kernels_bench.run),
         ("serve", serve_bench.run),
         ("quant", quant_bench.run),
+        ("methods", method_bench.run),
     ]
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -1,12 +1,17 @@
-"""Serving demo: continuous batching with a multi-adapter bank.
+"""Serving demo: continuous batching with a MIXED-METHOD multi-adapter bank.
 
-Three tenants share one deployed base model: two fine-tuned GSOFT adapters
-("alice", "bob") plus the raw base model. Requests stream in Poisson-style,
-are admitted into decode slots as others finish, and every slot rotates its
-activations with ITS OWN adapter (x Q_adapter, O(b*d)/token) — no offline
-merge, no per-request weight copies. Compare with the merged static path:
+Four tenants share one deployed base model: three fine-tuned adapters with
+three DIFFERENT orthogonal parametrizations — "alice" (GSOFT, the paper's
+GS rotation), "bob" (BOFT butterfly), "carol" (Householder product / HOFT)
+— plus the raw base model. Every parametrization is a ``core.methods``
+registry entry, so the engine neither knows nor cares which method a slot
+uses: requests stream in, are admitted into decode slots as others finish,
+and every slot rotates its activations with ITS OWN adapter (x Q_adapter,
+activation-side) — no offline merge, no per-request weight copies.
 
-    PYTHONPATH=src python examples/serve_demo.py [--arch qwen2-72b] [--static]
+    PYTHONPATH=src python examples/serve_demo.py [--arch qwen2-72b]
+        [--static]           # merged single-adapter reference (paper §6.1)
+        [--quantize int8]    # int8 base weights, bf16 rotations (QOFT)
 """
 import argparse
 import time
@@ -27,20 +32,29 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--static", action="store_true",
                     help="merged single-adapter static engine (paper §6.1)")
+    ap.add_argument("--quantize", choices=("none", "int8"), default="none",
+                    help="serve the bank over int8 base weights "
+                         "(rotations stay bf16)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0))
 
-    # pretend we fine-tuned twice: two random GSOFT adapters
-    pcfg = peft_lib.PEFTConfig(method="gsoft", block_size=8)
-    adapters = make_demo_adapters(["alice", "bob"], rt.params, pcfg)
+    # pretend we fine-tuned three times, each with a different method
+    cfgs = {
+        "alice": peft_lib.PEFTConfig(method="gsoft", block_size=8),
+        "bob": peft_lib.PEFTConfig(method="boft", block_size=8),
+        "carol": peft_lib.PEFTConfig(method="householder", reflections=4),
+    }
+    adapters = make_demo_adapters(list(cfgs), rt.params, cfgs)
 
     rng = np.random.default_rng(0)
     if args.static:
         # one adapter merged offline — every request gets "alice"
         merged = ModelRuntime(cfg, rt.params, adapters=adapters["alice"],
-                              peft_cfg=pcfg)
+                              peft_cfg=cfgs["alice"])
+        if args.quantize != "none":
+            merged = merged.quantized(args.quantize)
         eng = StaticServeEngine(merged, max_batch=4, max_len=64)
         for _ in range(args.requests):
             eng.add_request(
@@ -50,9 +64,14 @@ def main():
         results = eng.run()
         dt = time.perf_counter() - t0
     else:
-        eng = ServeEngine(rt.with_bank(adapters, pcfg), max_batch=4,
-                          max_len=64)
-        tenants = ["alice", "bob", None]          # None = base model slot 0
+        banked = rt.with_bank(adapters, cfgs)
+        if args.quantize != "none":
+            banked = banked.quantized(args.quantize)
+        print(f"bank methods: {list(banked.bank.bank_methods)}"
+              + (f", base weights {args.quantize}"
+                 if args.quantize != "none" else ""))
+        eng = ServeEngine(banked, max_batch=4, max_len=64)
+        tenants = ["alice", "bob", "carol", None]   # None = base, slot 0
         for i in range(args.requests):
             eng.add_request(
                 rng.integers(1, 200, size=rng.integers(4, 12)).tolist(),
@@ -66,9 +85,11 @@ def main():
     print(f"{len(results)} requests, {toks} tokens in {dt:.2f}s  "
           f"({toks / dt:.1f} tok/s, {eng.stats['decode_steps']} decode "
           f"steps, {eng.stats['prefills']} prefills)")
-    for req in eng.finished[:6]:
-        who = req.adapter if getattr(req, "adapter", None) else "base"
-        print(f"  req {req.rid} [{who:6s}]: {req.output}")
+    for req in eng.finished[:8]:
+        name = req.adapter if getattr(req, "adapter", None) else "base"
+        method = ("merged gsoft" if args.static else
+                  (cfgs[name].method if name in cfgs else "identity"))
+        print(f"  req {req.rid} [{name:6s}/{method:12s}]: {req.output}")
 
 
 if __name__ == "__main__":

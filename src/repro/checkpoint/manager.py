@@ -17,9 +17,11 @@ Fault-tolerance properties:
   * keep-last-k GC
 
 Adapter banks: ``save_adapters`` / ``restore_adapters`` persist NAMED
-GSOFT adapter pytrees plus their ``PEFTConfig`` as index metadata (the
-index records adapter names and weight paths — restore needs no
-tree_like). Serving code reaches these through the ``ModelRuntime`` facade
+adapter pytrees (any registered ``core.methods`` parametrization — mixed
+methods per bank are fine) plus per-name ``PEFTConfig`` records as index
+metadata (the index records adapter names, methods and weight paths —
+restore needs no tree_like). Serving code reaches these through the
+``ModelRuntime`` facade
 (``runtime.save_bank`` / ``ModelRuntime.load_named_adapters`` /
 ``runtime.with_bank``) — e.g. ``launch/serve.py --adapters name=dir``
 rebuilds a serving AdapterBank without the original python objects.
@@ -209,11 +211,23 @@ class CheckpointManager:
     def save_adapters(self, step: int,
                       adapters_by_name: Dict[str, Dict[str, Dict[str, Any]]],
                       peft_cfg, blocking: bool = True) -> None:
-        """Save named adapters {name: {weight_path: {param: arr}}} plus the
-        PEFTConfig (index metadata) — the serving bank format."""
+        """Save named adapters {name: {weight_path: {param: arr}}} plus
+        their PEFTConfig(s) as index metadata — the serving bank format.
+
+        ``peft_cfg`` is a single PEFTConfig or (mixed-method banks) a
+        {name: PEFTConfig} mapping; either way the index records the
+        method NAME + full spec per adapter (``peft_by_name``), so restore
+        can rebuild a heterogeneous bank without any python objects."""
+        from repro.core.peft import normalize_bank_cfgs
+        primary, cfg_by_name = normalize_bank_cfgs(adapters_by_name,
+                                                   peft_cfg)
         extra = {
             "kind": "adapter_bank",
-            "peft": dataclasses.asdict(peft_cfg),
+            "peft": dataclasses.asdict(primary),
+            "peft_by_name": {name: dataclasses.asdict(c)
+                             for name, c in cfg_by_name.items()},
+            "adapter_methods": {name: c.method
+                                for name, c in cfg_by_name.items()},
             "adapter_names": list(adapters_by_name),
             "weight_paths": sorted({p for ad in adapters_by_name.values()
                                     for p in ad}),
@@ -222,10 +236,20 @@ class CheckpointManager:
                   extra=extra)
 
     def restore_adapters(self, step: Optional[int] = None
-                         ) -> Tuple[Dict[str, Dict[str, Dict[str, Any]]], Any]:
-        """-> (adapters_by_name, PEFTConfig) from a ``save_adapters``
-        checkpoint. Self-describing: names/paths come from the index."""
+                         ) -> Tuple[Dict[str, Dict[str, Dict[str, Any]]],
+                                    Dict[str, Any]]:
+        """-> (adapters_by_name, {name: PEFTConfig}) from a
+        ``save_adapters`` checkpoint. Self-describing: names, weight paths
+        and each adapter's method + spec come from the index (pre-mixed-
+        method checkpoints carry one shared ``peft`` record — every name
+        maps to it)."""
         from repro.core.peft import PEFTConfig
+
+        def to_cfg(d_):
+            pd = dict(d_)
+            pd["target_patterns"] = tuple(pd.get("target_patterns", ()))
+            return PEFTConfig(**pd)
+
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
@@ -236,12 +260,13 @@ class CheckpointManager:
         if ex.get("kind") != "adapter_bank":
             raise ValueError(f"{d} is not an adapter-bank checkpoint "
                              f"(kind={ex.get('kind')!r})")
-        pd = dict(ex["peft"])
-        pd["target_patterns"] = tuple(pd.get("target_patterns", ()))
-        peft_cfg = PEFTConfig(**pd)
+        peft_cfg = to_cfg(ex["peft"])
+        by_name = {name: to_cfg(c)
+                   for name, c in ex.get("peft_by_name", {}).items()}
         flat = {k: np.load(os.path.join(d, k + ".npy"))
                 for k in index["leaves"]}
         out: Dict[str, Dict[str, Dict[str, Any]]] = {}
+        cfgs: Dict[str, Any] = {}
         for name in ex["adapter_names"]:
             tree: Dict[str, Dict[str, Any]] = {}
             for path in ex["weight_paths"]:
@@ -251,4 +276,5 @@ class CheckpointManager:
                 if entry:
                     tree[path] = entry
             out[name] = tree
-        return out, peft_cfg
+            cfgs[name] = by_name.get(name, peft_cfg)
+        return out, cfgs

@@ -16,6 +16,8 @@ from .projection import project_to_gs, gs_reconstruction_error
 from .adapters import (AdapterSpec, init_adapter, materialize, merge,
                        num_adapter_params, butterfly_sigma,
                        apply_activation_side, gs_rotate_banked)
+from .methods import MethodOps
+from . import methods
 from .peft import (PEFTConfig, init_peft, materialize_tree,
                    adapted_paths, count_params, flatten_paths,
                    trainable_and_frozen, DEFAULT_TARGETS, AdapterBank,

@@ -1,5 +1,6 @@
-"""PEFT adapters: GSOFT / Double GSOFT (the paper), plus the baselines it
-compares against — OFT (block-diagonal), BOFT (block butterfly), LoRA.
+"""PEFT adapters: GSOFT / Double GSOFT (the paper), plus the classes it
+unifies or compares against — OFT (block-diagonal), BOFT (block butterfly),
+Householder products (HOFT), and LoRA.
 
 All adapters are *functional*: an ``AdapterSpec`` (static dataclass) plus a
 params pytree.  The framework applies them **weight-side**:
@@ -12,6 +13,13 @@ W_eff = Q_U @ W @ Q_V, for LoRA W_eff = W + (alpha/r) A B.  Identity init
 guarantees W_eff == W at step 0.  ``merge`` bakes the adapter into the weight
 for inference (zero overhead — paper §6.1).
 
+Per-method behavior is defined by the implementation functions in this
+module, *wired* by the ``MethodOps`` records in ``core.methods`` — the
+public entry points below (``init_adapter`` / ``materialize`` / ``merge`` /
+``apply_activation_side`` / ``num_adapter_params``) dispatch exclusively
+through that registry; an unknown method raises a ``KeyError`` naming what
+is registered.
+
 Weights with leading batch dims (e.g. stacked MoE experts (E, d_in, d_out))
 get independent adapters per batch element, vmapped.
 
@@ -20,7 +28,6 @@ Weight convention: W has shape (d_in, d_out), used as y = x @ W.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -30,7 +37,7 @@ import numpy as np
 from repro.kernels import ops as kernel_ops
 
 from . import gs
-from .gs import BlockDiagSpec, GSLayout, block_diag_matmul, gsoft_layout, pick_block_size
+from .gs import gsoft_layout, pick_block_size
 from .orthogonal import cayley, skew
 from .permutations import PermSpec, apply_perm
 
@@ -45,7 +52,7 @@ Params = Dict[str, Array]
 @dataclasses.dataclass(frozen=True)
 class AdapterSpec:
     """Static description of one adapter attached to one weight."""
-    method: str                    # gsoft | double_gsoft | oft | boft | lora
+    method: str                    # any name registered in core.methods
     d_in: int
     d_out: int
     block_size: int = 32           # orthogonal methods (input side)
@@ -53,6 +60,7 @@ class AdapterSpec:
     rank: int = 8                  # lora
     alpha: float = 16.0            # lora scaling
     boft_factors: int = 2          # BOFT m
+    reflections: int = 4           # householder factor count (even)
     neumann_order: Optional[int] = None   # approximate Cayley (perf option)
     use_scale: bool = False        # learnable per-output magnitude
     use_pallas: bool = False       # GS rotations via the Pallas kernel path
@@ -102,58 +110,34 @@ def max_butterfly_levels(d: int, b: int) -> int:
     return max(1, lvl)
 
 
+def _boft_depth(spec: AdapterSpec, b: int) -> int:
+    return min(spec.boft_factors, max_butterfly_levels(spec.d_in, b))
+
+
 # ---------------------------------------------------------------------------
-# init
+# shared helpers
 # ---------------------------------------------------------------------------
 
 def _maybe_batch(shape: Tuple[int, ...], batch: Tuple[int, ...]) -> Tuple[int, ...]:
     return tuple(batch) + shape
 
 
-def init_adapter(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
-    """Initialize adapter params. Orthogonal methods start at Q = I (K = 0);
-    LoRA starts at A ~ N, B = 0. Either way W_eff(init) == W."""
-    p: Params = {}
-    if spec.method in ("gsoft", "double_gsoft"):
-        b_in = spec.resolved_block(spec.d_in, spec.block_size)
-        lay = gsoft_layout(spec.d_in, b_in)
-        p["L"] = jnp.zeros(_maybe_batch(lay.lspec.param_shape, spec.batch), dtype)
-        p["R"] = jnp.zeros(_maybe_batch(lay.rspec.param_shape, spec.batch), dtype)
-        if spec.method == "double_gsoft":
-            b_out = spec.resolved_block(spec.d_out,
-                                        spec.block_size_out or spec.block_size)
-            lay_v = gsoft_layout(spec.d_out, b_out)
-            p["L_v"] = jnp.zeros(_maybe_batch(lay_v.lspec.param_shape, spec.batch), dtype)
-            p["R_v"] = jnp.zeros(_maybe_batch(lay_v.rspec.param_shape, spec.batch), dtype)
-    elif spec.method == "oft":
-        b = spec.resolved_block(spec.d_in, spec.block_size)
-        r = spec.d_in // b
-        p["K"] = jnp.zeros(_maybe_batch((r, b, b), spec.batch), dtype)
-    elif spec.method == "boft":
-        b = spec.resolved_block(spec.d_in, spec.block_size)
-        m = min(spec.boft_factors, max_butterfly_levels(spec.d_in, b))
-        r = spec.d_in // b
-        p["K"] = jnp.zeros(_maybe_batch((m, r, b, b), spec.batch), dtype)
-    elif spec.method == "lora":
-        ka, _ = jax.random.split(key)
-        a = jax.random.normal(ka, _maybe_batch((spec.d_in, spec.rank), spec.batch),
-                              dtype) * (1.0 / math.sqrt(spec.d_in))
-        p["A"] = a
-        p["B"] = jnp.zeros(_maybe_batch((spec.rank, spec.d_out), spec.batch), dtype)
-    else:
-        raise ValueError(f"unknown adapter method {spec.method}")
-    if spec.use_scale:
-        p["scale"] = jnp.ones(_maybe_batch((spec.d_out,), spec.batch), dtype)
-    return p
-
-
-def num_adapter_params(spec: AdapterSpec) -> int:
-    p = init_adapter(spec, jax.random.PRNGKey(0))
-    return sum(int(np.prod(v.shape)) for v in p.values())
+def _stack_slots(spec: AdapterSpec, identity: Params, processed) -> Params:
+    """Stack [per-slot factors] along a new A axis placed after any
+    scan-stacked weight batch dims (so the model's layer scan slices the
+    bank alongside the weights). ``processed``: list of Params-or-None
+    (None -> this method's identity, i.e. the slot belongs to the base
+    model or to an adapter of a different method)."""
+    axis = len(spec.batch)
+    out: Params = {}
+    for key, ident in identity.items():
+        out[key] = jnp.stack([ident if p is None else p[key]
+                              for p in processed], axis=axis)
+    return out
 
 
 # ---------------------------------------------------------------------------
-# materialization (weight-side application)
+# GSOFT  (Q = P^T L P R — the paper's two-factor GS rotation)
 # ---------------------------------------------------------------------------
 
 def _gs_rotate(d: int, b: int, L_k: Array, R_k: Array, W: Array,
@@ -188,63 +172,387 @@ def _gs_rotate(d: int, b: int, L_k: Array, R_k: Array, W: Array,
     return gs.gs_matmul(lay, L, R, W)            # Q @ W
 
 
-def _oft_rotate(K: Array, W: Array, neumann: Optional[int]) -> Array:
+def gsoft_init(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    del key  # orthogonal methods start at Q = I (K = 0)
+    b_in = spec.resolved_block(spec.d_in, spec.block_size)
+    lay = gsoft_layout(spec.d_in, b_in)
+    return {"L": jnp.zeros(_maybe_batch(lay.lspec.param_shape, spec.batch), dtype),
+            "R": jnp.zeros(_maybe_batch(lay.rspec.param_shape, spec.batch), dtype)}
+
+
+def gsoft_materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    return _gs_rotate(spec.d_in, b, params["L"], params["R"], W,
+                      spec.neumann_order, transpose_side=False,
+                      use_pallas=spec.use_pallas)
+
+
+def gsoft_apply_T(spec: AdapterSpec, params: Params, x: Array) -> Array:
+    """x -> x Q = (Q^T x^T)^T: rotate the activations instead of the weight."""
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    lay = gsoft_layout(spec.d_in, b)
+    L = cayley(skew(params["L"]), neumann_order=spec.neumann_order)
+    R = cayley(skew(params["R"]), neumann_order=spec.neumann_order)
+    if spec.use_pallas:
+        return kernel_ops.gs_transform_T(L, R, x, use_pallas=True)
+    return gs.gs_apply_T(lay, L, R, x)
+
+
+def gsoft_param_count(spec: AdapterSpec) -> int:
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    return 2 * (spec.d_in // b) * b * b
+
+
+def gsoft_bank_build(spec: AdapterSpec, params_by_slot) -> Params:
+    """{"L": (..., A, r, b, b), "R": ...} of PRE-ORTHOGONALIZED blocks (the
+    Cayley map runs once at build time — adapters are frozen when serving)."""
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    lay = gsoft_layout(spec.d_in, b)
+    eye = jnp.broadcast_to(jnp.eye(b, dtype=jnp.float32),
+                           _maybe_batch(lay.lspec.param_shape, spec.batch))
+    processed = [None if p is None else
+                 {k: cayley(skew(p[k].astype(jnp.float32)),
+                            neumann_order=spec.neumann_order)
+                  for k in ("L", "R")}
+                 for p in params_by_slot]
+    return _stack_slots(spec, {"L": eye, "R": eye}, processed)
+
+
+def gs_rotate_banked(entry: Params, ids: Array, x: Array,
+                     use_pallas: bool = False) -> Array:
+    """Per-row-indexed activation-side GSOFT: row i of x gets x_i Q_{ids[i]}.
+
+    ``entry``: a ``gsoft_bank_build`` stack — {"L": (A, r, b, b), "R": ...}
+    pre-orthogonalized blocks over A bank slots; slot 0 is the identity.
+    Any scan-stacked layer dims have already been sliced off by the model's
+    layer scan. ids: (B,) int32 slot per batch row; x: (B, T, d).
+
+    Cost is O(B*T*b*d) — the same per-token scaling argument that makes GS
+    rotations serviceable per-request where a dense OFT rotation (O(d^2))
+    would not be.
+    """
+    L = jnp.take(entry["L"], ids, axis=0).astype(x.dtype)      # (B, r, b, b)
+    R = jnp.take(entry["R"], ids, axis=0).astype(x.dtype)
+    return kernel_ops.gs_banked_transform_T(L, R, x, use_pallas=use_pallas)
+
+
+def gsoft_quant_fuse(entry: Params, ids: Array, dtype) -> Tuple[Array, Array]:
+    """Per-row (L, R) blocks in ``dtype`` for the fused rotate + quantized
+    matmul kernel (``ops.gs_q_matmul_banked`` — rotations stay bf16 over
+    int8 base weights, QOFT rationale in DESIGN.md)."""
+    L = jnp.take(entry["L"], ids, axis=0).astype(dtype)
+    R = jnp.take(entry["R"], ids, axis=0).astype(dtype)
+    return L, R
+
+
+# ---------------------------------------------------------------------------
+# Double GSOFT  (W_eff = Q_U W Q_V)
+# ---------------------------------------------------------------------------
+
+def double_gsoft_init(spec: AdapterSpec, key: jax.Array,
+                      dtype=jnp.float32) -> Params:
+    p = gsoft_init(spec, key, dtype)
+    b_out = spec.resolved_block(spec.d_out,
+                                spec.block_size_out or spec.block_size)
+    lay_v = gsoft_layout(spec.d_out, b_out)
+    p["L_v"] = jnp.zeros(_maybe_batch(lay_v.lspec.param_shape, spec.batch), dtype)
+    p["R_v"] = jnp.zeros(_maybe_batch(lay_v.rspec.param_shape, spec.batch), dtype)
+    return p
+
+
+def double_gsoft_materialize(spec: AdapterSpec, params: Params,
+                             W: Array) -> Array:
+    b_in = spec.resolved_block(spec.d_in, spec.block_size)
+    Wf = _gs_rotate(spec.d_in, b_in, params["L"], params["R"], W,
+                    spec.neumann_order, transpose_side=False,
+                    use_pallas=spec.use_pallas)
+    b_out = spec.resolved_block(spec.d_out,
+                                spec.block_size_out or spec.block_size)
+    return _gs_rotate(spec.d_out, b_out, params["L_v"], params["R_v"], Wf,
+                      spec.neumann_order, transpose_side=True,
+                      use_pallas=spec.use_pallas)
+
+
+def double_gsoft_param_count(spec: AdapterSpec) -> int:
+    b_out = spec.resolved_block(spec.d_out,
+                                spec.block_size_out or spec.block_size)
+    return gsoft_param_count(spec) + 2 * (spec.d_out // b_out) * b_out * b_out
+
+
+# ---------------------------------------------------------------------------
+# OFT  (block-diagonal Q)
+# ---------------------------------------------------------------------------
+
+def oft_init(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    del key
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    r = spec.d_in // b
+    return {"K": jnp.zeros(_maybe_batch((r, b, b), spec.batch), dtype)}
+
+
+def oft_materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
     """Block-diagonal orthogonal Q @ W (OFT)."""
-    Q = cayley(skew(K), neumann_order=neumann)
+    Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)
     WT = jnp.swapaxes(W, -1, -2)                 # (d_out, d_in)
-    return jnp.swapaxes(block_diag_matmul(Q, WT), -1, -2)
+    return jnp.swapaxes(gs.block_diag_matmul(Q, WT), -1, -2)
 
 
-def _boft_rotate(K: Array, d: int, b: int, W: Array,
-                 neumann: Optional[int]) -> Array:
+def oft_apply_T(spec: AdapterSpec, params: Params, x: Array) -> Array:
+    Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)
+    return gs.block_diag_matmul(jnp.swapaxes(Q, -1, -2), x)
+
+
+def oft_param_count(spec: AdapterSpec) -> int:
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    return (spec.d_in // b) * b * b
+
+
+def oft_bank_build(spec: AdapterSpec, params_by_slot) -> Params:
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    r = spec.d_in // b
+    eye = jnp.broadcast_to(jnp.eye(b, dtype=jnp.float32),
+                           _maybe_batch((r, b, b), spec.batch))
+    processed = [None if p is None else
+                 {"Q": cayley(skew(p["K"].astype(jnp.float32)),
+                              neumann_order=spec.neumann_order)}
+                 for p in params_by_slot]
+    return _stack_slots(spec, {"Q": eye}, processed)
+
+
+def oft_rotate_banked(entry: Params, ids: Array, x: Array,
+                      use_pallas: bool = False) -> Array:
+    """Per-row x_i Q_{ids[i]} for block-diagonal Q: a banked bdmm with the
+    per-row blocks transposed (row-vector application). Pallas path =
+    the vmapped bdmm kernel (``dispatch.bdmm_key``)."""
+    Q = jnp.take(entry["Q"], ids, axis=0).astype(x.dtype)      # (B, r, b, b)
+    return kernel_ops.bdmm_banked(jnp.swapaxes(Q, -1, -2), x,
+                                  use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# BOFT  (butterfly product Q = B_m .. B_1)
+# ---------------------------------------------------------------------------
+
+def boft_init(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    del key
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    m = _boft_depth(spec, b)
+    r = spec.d_in // b
+    return {"K": jnp.zeros(_maybe_batch((m, r, b, b), spec.batch), dtype)}
+
+
+def boft_materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
     """Q = B_m .. B_1 with butterfly factors; returns Q @ W."""
-    m = K.shape[0]
-    Q = cayley(skew(K), neumann_order=neumann)   # (m, r, b, b)
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    d = spec.d_in
+    m = params["K"].shape[0]
+    Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)
     WT = jnp.swapaxes(W, -1, -2)                 # columns of W as vectors
     y = WT
     for lvl in range(m):
         sig = butterfly_sigma(d, b, lvl + 1)
         spec_p = PermSpec.from_sigma(sig)
         y = apply_perm(y, spec_p)                # group
-        y = block_diag_matmul(Q[lvl], y)         # rotate
+        y = gs.block_diag_matmul(Q[lvl], y)      # rotate
         y = apply_perm(y, spec_p.inverse())      # scatter back
     return jnp.swapaxes(y, -1, -2)
 
 
+def boft_apply_T(spec: AdapterSpec, params: Params, x: Array) -> Array:
+    """x -> x Q = (Q^T x^T)^T: levels in reverse order, blocks transposed."""
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    m = params["K"].shape[0]
+    Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)
+    y = x
+    for lvl in reversed(range(m)):
+        sig = butterfly_sigma(spec.d_in, b, lvl + 1)
+        spec_p = PermSpec.from_sigma(sig)
+        y = apply_perm(y, spec_p)
+        y = gs.block_diag_matmul(jnp.swapaxes(Q[lvl], -1, -2), y)
+        y = apply_perm(y, spec_p.inverse())
+    return y
+
+
+def boft_param_count(spec: AdapterSpec) -> int:
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    return _boft_depth(spec, b) * (spec.d_in // b) * b * b
+
+
+def boft_bank_build(spec: AdapterSpec, params_by_slot) -> Params:
+    b = spec.resolved_block(spec.d_in, spec.block_size)
+    m = _boft_depth(spec, b)
+    r = spec.d_in // b
+    eye = jnp.broadcast_to(jnp.eye(b, dtype=jnp.float32),
+                           _maybe_batch((m, r, b, b), spec.batch))
+    processed = [None if p is None else
+                 {"Q": cayley(skew(p["K"].astype(jnp.float32)),
+                              neumann_order=spec.neumann_order)}
+                 for p in params_by_slot]
+    return _stack_slots(spec, {"Q": eye}, processed)
+
+
+def boft_rotate_banked(entry: Params, ids: Array, x: Array,
+                       use_pallas: bool = False) -> Array:
+    """Per-row x_i Q_{ids[i]} for butterfly Q: per level, a static butterfly
+    permutation sandwiching a banked bdmm (levels reversed, blocks
+    transposed — the row-vector application). The block matmuls ride the
+    vmapped bdmm Pallas kernel; the permutations are free gathers."""
+    Q = jnp.take(entry["Q"], ids, axis=0).astype(x.dtype)  # (B, m, r, b, b)
+    m, b = Q.shape[1], Q.shape[-1]
+    d = x.shape[-1]
+    y = x
+    for lvl in reversed(range(m)):
+        sig = butterfly_sigma(d, b, lvl + 1)
+        spec_p = PermSpec.from_sigma(sig)
+        y = apply_perm(y, spec_p)
+        y = kernel_ops.bdmm_banked(jnp.swapaxes(Q[:, lvl], -1, -2), y,
+                                   use_pallas=use_pallas)
+        y = apply_perm(y, spec_p.inverse())
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Householder products  (HOFT: Q = H_1 .. H_k,  H_i = I - 2 v_i v_i^T)
+# ---------------------------------------------------------------------------
+
+def _hh_reflections(spec: AdapterSpec) -> int:
+    k = spec.reflections
+    if k <= 0 or k % 2:
+        raise ValueError(
+            f"householder needs a positive EVEN reflection count (identity "
+            f"init is a product of paired reflections); got {k}")
+    return k
+
+
+def _hh_identity(spec: AdapterSpec, k: int) -> Array:
+    """Reflection vectors whose product is exactly I: k (even) copies of
+    e_1 — H(e_1)^2 = I with no rounding (each application negates one
+    coordinate slab exactly)."""
+    v = jnp.zeros(_maybe_batch((k, spec.d_in), spec.batch), jnp.float32)
+    return v.at[..., 0].set(1.0)
+
+
+def _hh_unit(v: Array) -> Array:
+    """Safe fp32 unit vectors over the last axis. A (near-)zero vector
+    falls back to e_1 so H stays EXACTLY orthogonal for every parameter
+    value — the method never leaves the orthogonal group."""
+    v32 = v.astype(jnp.float32)
+    n2 = jnp.sum(v32 * v32, axis=-1, keepdims=True)
+    e0 = jnp.zeros_like(v32).at[..., :1].set(1.0)
+    v32 = jnp.where(n2 > 1e-12, v32, e0)
+    return v32 * jax.lax.rsqrt(jnp.sum(v32 * v32, axis=-1, keepdims=True))
+
+
+def householder_init(spec: AdapterSpec, key: jax.Array,
+                     dtype=jnp.float32) -> Params:
+    del key
+    k = _hh_reflections(spec)
+    return {"V": _hh_identity(spec, k).astype(dtype)}
+
+
+def householder_materialize(spec: AdapterSpec, params: Params,
+                            W: Array) -> Array:
+    """Q @ W applied reflection by reflection: H W = W - 2 v (v^T W), no
+    dense Q ever materializes — O(k d n) total, and d_in needs NO block
+    divisibility (Householder's selling point over blocked classes)."""
+    k = _hh_reflections(spec)
+    Vu = _hh_unit(params["V"]).astype(W.dtype)           # (k, d)
+    Wf = W
+    for i in reversed(range(k)):                         # Q W = H_1(..H_k W)
+        v = Vu[i]
+        Wf = Wf - 2.0 * jnp.outer(v, v @ Wf)
+    return Wf
+
+
+def householder_apply_T(spec: AdapterSpec, params: Params, x: Array) -> Array:
+    """x -> x Q = ((x H_1) H_2).. H_k;  x H = x - 2 (x.v) v."""
+    k = _hh_reflections(spec)
+    Vu = _hh_unit(params["V"])
+    y = x
+    for i in range(k):
+        v = Vu[i].astype(x.dtype)
+        y = y - 2.0 * (y @ v)[..., None] * v
+    return y
+
+
+def householder_param_count(spec: AdapterSpec) -> int:
+    return _hh_reflections(spec) * spec.d_in
+
+
+def householder_bank_build(spec: AdapterSpec, params_by_slot) -> Params:
+    """{"V": (..., A, k, d)} PRE-NORMALIZED unit reflection vectors; the
+    identity slot holds k copies of e_1 (product = I exactly)."""
+    k = _hh_reflections(spec)
+    ident = _hh_identity(spec, k)
+    processed = [None if p is None else {"V": _hh_unit(p["V"])}
+                 for p in params_by_slot]
+    return _stack_slots(spec, {"V": ident}, processed)
+
+
+def householder_rotate_banked(entry: Params, ids: Array, x: Array,
+                              use_pallas: bool = False) -> Array:
+    """Per-row x_i Q_{ids[i]} for Householder products. No dedicated Pallas
+    kernel exists (the op is O(k d) per token, bandwidth-trivial next to
+    the projection matmul) — ``ops.householder_banked`` is the reference
+    einsum fallback on every backend."""
+    V = jnp.take(entry["V"], ids, axis=0).astype(x.dtype)  # (B, k, d)
+    return kernel_ops.householder_banked(V, x, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# LoRA  (low-rank residual — the non-orthogonal baseline)
+# ---------------------------------------------------------------------------
+
+def lora_init(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    import math
+    ka, _ = jax.random.split(key)
+    a = jax.random.normal(ka, _maybe_batch((spec.d_in, spec.rank), spec.batch),
+                          dtype) * (1.0 / math.sqrt(spec.d_in))
+    return {"A": a,
+            "B": jnp.zeros(_maybe_batch((spec.rank, spec.d_out), spec.batch),
+                           dtype)}
+
+
+def lora_materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
+    scale = spec.alpha / spec.rank
+    return W + scale * (params["A"] @ params["B"]).astype(W.dtype)
+
+
+def lora_param_count(spec: AdapterSpec) -> int:
+    return spec.rank * (spec.d_in + spec.d_out)
+
+
+# ---------------------------------------------------------------------------
+# public entry points — registry dispatch only (no method conditionals)
+# ---------------------------------------------------------------------------
+
+def init_adapter(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    """Initialize adapter params. Orthogonal methods start at Q = I;
+    LoRA starts at A ~ N, B = 0. Either way W_eff(init) == W."""
+    from . import methods
+    p = methods.get(spec.method).init_params(spec, key, dtype)
+    if spec.use_scale:
+        p["scale"] = jnp.ones(_maybe_batch((spec.d_out,), spec.batch), dtype)
+    return p
+
+
+def num_adapter_params(spec: AdapterSpec) -> int:
+    from . import methods
+    n = methods.get(spec.method).param_count(spec)
+    if spec.use_scale:
+        n += spec.d_out
+    return n * int(np.prod(spec.batch)) if spec.batch else n
+
+
 def materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
     """W_eff from frozen W + adapter params. Differentiable w.r.t. params."""
+    from . import methods
     if spec.batch:
         inner = dataclasses.replace(spec, batch=tuple(spec.batch[1:]))
         fn = lambda p, w: materialize(inner, p, w)
         return jax.vmap(fn)(params, W)
-
     dtype = W.dtype
-    Wf = W
-    if spec.method == "gsoft":
-        b = spec.resolved_block(spec.d_in, spec.block_size)
-        Wf = _gs_rotate(spec.d_in, b, params["L"], params["R"], Wf,
-                        spec.neumann_order, transpose_side=False,
-                        use_pallas=spec.use_pallas)
-    elif spec.method == "double_gsoft":
-        b_in = spec.resolved_block(spec.d_in, spec.block_size)
-        Wf = _gs_rotate(spec.d_in, b_in, params["L"], params["R"], Wf,
-                        spec.neumann_order, transpose_side=False,
-                        use_pallas=spec.use_pallas)
-        b_out = spec.resolved_block(spec.d_out,
-                                    spec.block_size_out or spec.block_size)
-        Wf = _gs_rotate(spec.d_out, b_out, params["L_v"], params["R_v"], Wf,
-                        spec.neumann_order, transpose_side=True,
-                        use_pallas=spec.use_pallas)
-    elif spec.method == "oft":
-        Wf = _oft_rotate(params["K"], Wf, spec.neumann_order)
-    elif spec.method == "boft":
-        b = spec.resolved_block(spec.d_in, spec.block_size)
-        Wf = _boft_rotate(params["K"], spec.d_in, b, Wf, spec.neumann_order)
-    elif spec.method == "lora":
-        scale = spec.alpha / spec.rank
-        Wf = Wf + scale * (params["A"] @ params["B"]).astype(dtype)
-    else:
-        raise ValueError(spec.method)
+    Wf = methods.get(spec.method).materialize(spec, params, W)
     if spec.use_scale:
         Wf = Wf * params["scale"][None, :].astype(dtype)
     return Wf.astype(dtype)
@@ -255,42 +563,11 @@ def merge(spec: AdapterSpec, params: Params, W: Array) -> Array:
     return materialize(spec, params, W)
 
 
-# ---------------------------------------------------------------------------
-# activation-side application (config option; wins when tokens << d_out)
-# ---------------------------------------------------------------------------
-
 def apply_activation_side(spec: AdapterSpec, params: Params, x: Array) -> Array:
     """For input-rotation methods, y = x @ (Q W) == (x Q) @ W: rotate the
-    activations instead of the weight. Only valid for gsoft/oft/boft."""
-    if spec.method == "gsoft":
-        b = spec.resolved_block(spec.d_in, spec.block_size)
-        lay = gsoft_layout(spec.d_in, b)
-        L = cayley(skew(params["L"]), neumann_order=spec.neumann_order)
-        R = cayley(skew(params["R"]), neumann_order=spec.neumann_order)
-        # x Q = (Q^T x^T)^T -> per-vector transpose application
-        if spec.use_pallas:
-            return kernel_ops.gs_transform_T(L, R, x, use_pallas=True)
-        return gs.gs_apply_T(lay, L, R, x)
-    if spec.method == "oft":
-        Q = cayley(skew(params["K"]), neumann_order=spec.neumann_order)
-        return block_diag_matmul(jnp.swapaxes(Q, -1, -2), x)
-    raise ValueError(f"activation-side not defined for {spec.method}")
-
-
-def gs_rotate_banked(L_rot: Array, R_rot: Array, ids: Array, x: Array,
-                     use_pallas: bool = False) -> Array:
-    """Per-row-indexed activation-side GSOFT: row i of x gets x_i Q_{ids[i]}.
-
-    L_rot, R_rot: (A, r, b, b) PRE-ORTHOGONALIZED blocks (the Cayley map is
-    applied once at bank-build time — adapters are frozen when serving),
-    stacked over A bank slots; slot 0 is the identity. Any scan-stacked
-    layer dims have already been sliced off by the model's layer scan.
-    ids: (B,) int32 slot per batch row; x: (B, T, d).
-
-    Cost is O(B*T*b*d) — the same per-token scaling argument that makes GS
-    rotations serviceable per-request where a dense OFT rotation (O(d^2))
-    would not be.
-    """
-    L = jnp.take(L_rot, ids, axis=0).astype(x.dtype)      # (B, r, b, b)
-    R = jnp.take(R_rot, ids, axis=0).astype(x.dtype)
-    return kernel_ops.gs_banked_transform_T(L, R, x, use_pallas=use_pallas)
+    activations instead of the weight (wins when tokens << d_out)."""
+    from . import methods
+    ops = methods.get(spec.method)
+    if ops.apply_activation_side is None:
+        raise ValueError(f"activation-side not defined for {spec.method}")
+    return ops.apply_activation_side(spec, params, x)

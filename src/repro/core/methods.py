@@ -1,0 +1,192 @@
+"""MethodOps registry — every orthogonal parametrization (and LoRA) is one
+explicit record, mirroring ``models/registry.py``.
+
+The paper's core claim is that GS matrices *unify* prior structured
+orthogonal classes — block-diagonal OFT, butterfly BOFT (Liu et al. 2023),
+Householder products (HOFT, Moreno Arcas et al. 2025). This module makes
+that unification an API: ``repro.core.adapters`` / ``repro.core.peft``
+dispatch exclusively through ``methods.get(name)``, so a new
+parametrization is ONE registry entry (init + materialize + optional
+activation-side / bank hooks), never a cross-codebase surgery.
+
+This is also THE one module allowed to compare method strings — a CI grep
+guard rejects ``method ==`` dispatch anywhere else under ``src/repro``
+(mirrored by ``tests/test_methods.py``).
+
+Per-record capability surface:
+
+* ``init_params(spec, key, dtype)``      — identity-init adapter params
+* ``materialize(spec, params, W)``       — W_eff (weight-side, unbatched)
+* ``merge``                              — alias of materialize by default
+                                           (inference: bake into weights)
+* ``apply_activation_side(spec, params, x)`` — x -> x Q, or None when the
+  method has no input-rotation form (LoRA, Double GSOFT's output factor)
+* ``param_count(spec)``                  — analytic count (unbatched,
+                                           without the ``use_scale`` vector)
+* ``bank_build(spec, params_by_slot)``   — stack per-request factors for
+  the serving ``AdapterBank`` (``None`` slot -> that method's identity), or
+  None when the method cannot be banked (``bank_unsupported`` says why)
+* ``bank_rotator(entry, slots, x, use_pallas)`` — per-row activation-side
+  application of a built bank entry (geometry derived from factor shapes;
+  Pallas path where a kernel exists, reference einsum fallback otherwise)
+* ``banked_kernel``                      — which ``kernels.dispatch``
+  key family the banked transform rides ("gs" / "bdmm"; "" = einsum-only)
+* ``quant_fuse(entry, slots, dtype)``    — per-row factors for the fused
+  rotate+quantized-matmul kernel (only GSOFT has one today)
+* ``orthogonal`` / ``quant_compatible``  — capability flags (README table)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from . import adapters as _ad
+
+# methods that mean "no adapters at all" — they select a training regime,
+# not a parametrization, and are never registered
+NON_ADAPTER_METHODS = ("full", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodOps:
+    """The per-method call surface (see module docstring)."""
+    method: str
+    structure: str                    # one-liner for docs/benchmarks
+    orthogonal: bool
+    init_params: Callable
+    materialize: Callable
+    param_count: Callable
+    merge: Optional[Callable] = None              # default: materialize
+    apply_activation_side: Optional[Callable] = None
+    bank_build: Optional[Callable] = None
+    bank_rotator: Optional[Callable] = None
+    quant_fuse: Optional[Callable] = None
+    quant_compatible: bool = False
+    bank_unsupported: str = ""        # why bank_build is None (error text)
+    banked_kernel: str = ""           # kernels.dispatch.BANKED_KEYS family
+
+    def __post_init__(self):
+        if self.merge is None:
+            object.__setattr__(self, "merge", self.materialize)
+
+
+_METHODS: Dict[str, MethodOps] = {}
+
+
+def register(ops: MethodOps) -> MethodOps:
+    _METHODS[ops.method] = ops
+    return ops
+
+
+def get(method: str) -> MethodOps:
+    if method not in _METHODS:
+        raise KeyError(f"unknown adapter method {method!r}; registered "
+                       f"methods: {sorted(_METHODS)}")
+    return _METHODS[method]
+
+
+def registered() -> List[str]:
+    return sorted(_METHODS)
+
+
+def is_adapter_method(method: str) -> bool:
+    """True when ``method`` names an adapter parametrization (as opposed to
+    the ``full``/``none`` training regimes)."""
+    return method not in NON_ADAPTER_METHODS
+
+
+def trainable_split(method: str, params: Any, adapters: Any):
+    """(trainable, frozen) for the optimizer — the ONE place the
+    ``full``/``none`` pseudo-methods are interpreted."""
+    if method == "full":
+        return params, adapters      # adapters empty; everything trains
+    if method == "none":
+        return {}, params
+    get(method)                      # fail fast on unknown methods
+    return adapters, params
+
+
+# ---------------------------------------------------------------------------
+# records — implementations live in core.adapters; this module only wires
+# ---------------------------------------------------------------------------
+
+register(MethodOps(
+    method="gsoft",
+    structure="Q = P^T L P R (two-factor GS, paper eq. 1)",
+    orthogonal=True,
+    init_params=_ad.gsoft_init,
+    materialize=_ad.gsoft_materialize,
+    param_count=_ad.gsoft_param_count,
+    apply_activation_side=_ad.gsoft_apply_T,
+    bank_build=_ad.gsoft_bank_build,
+    bank_rotator=_ad.gs_rotate_banked,
+    quant_fuse=_ad.gsoft_quant_fuse,
+    quant_compatible=True,
+    banked_kernel="gs",
+))
+
+register(MethodOps(
+    method="double_gsoft",
+    structure="W_eff = Q_U W Q_V (two-sided GS, paper §4)",
+    orthogonal=True,
+    init_params=_ad.double_gsoft_init,
+    materialize=_ad.double_gsoft_materialize,
+    param_count=_ad.double_gsoft_param_count,
+    bank_unsupported=("its output-side factor Q_V rotates AFTER the base "
+                      "matmul, which the per-request serving hook does not "
+                      "carry yet — merge it offline instead"),
+))
+
+register(MethodOps(
+    method="oft",
+    structure="Q = diag(Q_1..Q_r) (block-diagonal, OFT)",
+    orthogonal=True,
+    init_params=_ad.oft_init,
+    materialize=_ad.oft_materialize,
+    param_count=_ad.oft_param_count,
+    apply_activation_side=_ad.oft_apply_T,
+    bank_build=_ad.oft_bank_build,
+    bank_rotator=_ad.oft_rotate_banked,
+    quant_compatible=True,
+    banked_kernel="bdmm",
+))
+
+register(MethodOps(
+    method="boft",
+    structure="Q = B_m..B_1 (block butterfly, BOFT)",
+    orthogonal=True,
+    init_params=_ad.boft_init,
+    materialize=_ad.boft_materialize,
+    param_count=_ad.boft_param_count,
+    apply_activation_side=_ad.boft_apply_T,
+    bank_build=_ad.boft_bank_build,
+    bank_rotator=_ad.boft_rotate_banked,
+    quant_compatible=True,
+    banked_kernel="bdmm",
+))
+
+register(MethodOps(
+    method="householder",
+    structure="Q = H_1..H_k, H_i = I - 2 v_i v_i^T (HOFT)",
+    orthogonal=True,
+    init_params=_ad.householder_init,
+    materialize=_ad.householder_materialize,
+    param_count=_ad.householder_param_count,
+    apply_activation_side=_ad.householder_apply_T,
+    bank_build=_ad.householder_bank_build,
+    bank_rotator=_ad.householder_rotate_banked,
+    quant_compatible=True,
+))
+
+register(MethodOps(
+    method="lora",
+    structure="W + (alpha/r) A B (low-rank residual)",
+    orthogonal=False,
+    init_params=_ad.lora_init,
+    materialize=_ad.lora_materialize,
+    param_count=_ad.lora_param_count,
+    bank_unsupported=("it is weight-side only — the low-rank residual "
+                      "W + (alpha/r) A B is not an orthogonal rotation of "
+                      "the inputs, so there is no activation-side form to "
+                      "bank; merge it offline instead"),
+))

@@ -18,15 +18,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import re
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from .adapters import (AdapterSpec, gs_rotate_banked, init_adapter,
-                       materialize, num_adapter_params)
-from .gs import gsoft_layout
-from .orthogonal import cayley, skew
+from . import methods as methods_lib
+from .adapters import AdapterSpec, init_adapter, materialize
 
 Array = jnp.ndarray
 Tree = Any
@@ -42,12 +40,13 @@ DEFAULT_TARGETS: Tuple[str, ...] = (
 
 @dataclasses.dataclass(frozen=True)
 class PEFTConfig:
-    method: str = "gsoft"          # gsoft|double_gsoft|oft|boft|lora|full|none
+    method: str = "gsoft"          # any core.methods entry, or full|none
     block_size: int = 32
     block_size_out: int = 0
     rank: int = 8
     alpha: float = 16.0
     boft_factors: int = 2
+    reflections: int = 4           # householder factor count (even)
     neumann_order: Optional[int] = None
     use_scale: bool = False
     use_pallas: bool = False       # GS rotations via the Pallas kernel path
@@ -55,7 +54,7 @@ class PEFTConfig:
 
     @property
     def is_peft(self) -> bool:
-        return self.method not in ("full", "none")
+        return methods_lib.is_adapter_method(self.method)
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +113,7 @@ def spec_for(cfg: PEFTConfig, shape: Tuple[int, ...]) -> AdapterSpec:
         rank=cfg.rank,
         alpha=cfg.alpha,
         boft_factors=cfg.boft_factors,
+        reflections=cfg.reflections,
         neumann_order=cfg.neumann_order,
         use_scale=cfg.use_scale,
         use_pallas=cfg.use_pallas,
@@ -180,21 +180,30 @@ def materialize_tree(cfg: PEFTConfig, params: Tree,
 
 
 # ---------------------------------------------------------------------------
-# adapter bank: N named GSOFT adapters + identity slot, per-request serving
+# adapter bank: N named adapters + identity slot, per-request serving.
+# Heterogeneous: each named adapter declares its own (registered, bankable)
+# method; the identity slot stays universal.
 # ---------------------------------------------------------------------------
 
 BASE_ADAPTER = "__base__"
 
+PEFTConfigs = Union[PEFTConfig, Mapping[str, PEFTConfig]]
+
 
 @dataclasses.dataclass
 class AdapterBank:
-    """Stacked per-request GSOFT rotations for multi-adapter serving.
+    """Stacked per-request orthogonal rotations for multi-adapter serving.
 
     ``tree`` mirrors the params nesting: each adapted weight path maps to
-    ``{"L": (..., A, r, b, b), "R": ...}`` of PRE-ORTHOGONALIZED blocks
-    (the Cayley map runs once at build time — adapters are frozen when
-    serving). Slot 0 is the identity (serves the unmodified base model);
-    slots 1..N are the named adapters in ``names`` order. Scan-stacked
+    ``{method: factors}`` where ``factors`` are that method's PRE-PROCESSED
+    per-slot stacks (Cayley-orthogonalized GS/OFT/BOFT blocks, normalized
+    Householder vectors — ``MethodOps.bank_build``; adapters are frozen
+    when serving). Slot 0 is the identity (serves the unmodified base
+    model); slots 1..N are the named adapters in ``names`` order. In a
+    MIXED-method bank every method stack spans all A slots, holding that
+    method's identity wherever the slot's adapter uses a different method —
+    so slot ids stay universal and the per-row composition of all method
+    stacks equals exactly the one non-identity rotation. Scan-stacked
     layer dims stay LEADING (before the A axis) so the model's layer scan
     slices the bank alongside the weights.
 
@@ -204,13 +213,24 @@ class AdapterBank:
     that asymmetry is what makes per-request orthogonal adapters viable at
     continuous-batching granularity.
     """
-    cfg: PEFTConfig
+    cfg: PEFTConfig                  # primary/default config (bank knobs)
     names: Tuple[str, ...]           # names[0] == BASE_ADAPTER
     tree: Dict[str, Any]
+    # per-adapter configs (adapter names only; absent names use ``cfg``)
+    cfgs: Dict[str, PEFTConfig] = dataclasses.field(default_factory=dict)
 
     @property
     def num_slots(self) -> int:
         return len(self.names)
+
+    @property
+    def bank_methods(self) -> Tuple[str, ...]:
+        """Methods actually present in this bank (sorted)."""
+        return tuple(sorted({c.method for c in self.cfgs.values()}))
+
+    def cfg_for(self, name: str) -> PEFTConfig:
+        """The PEFTConfig a named adapter was built with."""
+        return self.cfgs.get(name, self.cfg)
 
     def slot(self, name: Optional[str]) -> int:
         """Bank slot for an adapter name (None / BASE_ADAPTER -> identity)."""
@@ -238,23 +258,83 @@ def _nest_insert(root: Dict[str, Any], path: str, value: Any) -> None:
     node[parts[-1]] = value
 
 
-def build_adapter_bank(cfg: PEFTConfig, params: Tree,
-                       adapters_by_name: Dict[str, Dict[str, Dict[str, Array]]]
-                       ) -> AdapterBank:
-    """Build an AdapterBank from named adapter trees (as from ``init_peft``).
+def normalize_bank_cfgs(adapters_by_name: Mapping[str, Any],
+                        peft_cfg: PEFTConfigs
+                        ) -> Tuple[PEFTConfig, Dict[str, PEFTConfig]]:
+    """(primary, {name: cfg}) from either a single PEFTConfig (homogeneous
+    bank) or a {name: PEFTConfig} mapping (mixed-method bank)."""
+    if isinstance(peft_cfg, PEFTConfig):
+        return peft_cfg, {name: peft_cfg for name in adapters_by_name}
+    cfgs = dict(peft_cfg)
+    missing = sorted(set(adapters_by_name) - set(cfgs))
+    if missing:
+        raise ValueError(f"no PEFTConfig for adapters {missing} — a mixed-"
+                         "method bank needs one config per adapter name")
+    if not cfgs:
+        raise ValueError("empty PEFTConfig mapping — pass a single "
+                         "PEFTConfig for an adapterless (identity-only) "
+                         "bank")
+    primary = next(iter(cfgs.values()))
+    return primary, {name: cfgs[name] for name in adapters_by_name}
 
-    Orthogonalizes every block up front and stacks [identity] + adapters
-    along a new A axis placed after any scan-stacked weight batch dims.
-    """
-    if cfg.method != "gsoft":
-        raise ValueError("adapter bank supports method='gsoft' only "
-                         f"(got {cfg.method!r}); double_gsoft needs an "
-                         "output-side hook and LoRA is not orthogonal")
+
+def _bank_capability_check(name: Optional[str], cfg: PEFTConfig) -> None:
+    """Registry-driven: the method must be registered AND provide
+    ``bank_build`` (``MethodOps.bank_unsupported`` explains why not)."""
+    ops = methods_lib.get(cfg.method)   # KeyError lists registered methods
+    if ops.bank_build is None:
+        who = f"adapter '{name}'" if name else "the bank config"
+        raise ValueError(f"adapter bank cannot serve {who}: method "
+                         f"{cfg.method!r} has no bank path — "
+                         f"{ops.bank_unsupported}")
     if cfg.use_scale:
         raise ValueError("adapter bank does not support use_scale "
                          "(the per-output magnitude acts on the weight "
                          "output, not the rotated input)")
-    specs = adapted_paths(cfg, params)
+
+
+def build_adapter_bank(cfg: PEFTConfigs, params: Tree,
+                       adapters_by_name: Dict[str, Dict[str, Dict[str, Array]]]
+                       ) -> AdapterBank:
+    """Build an AdapterBank from named adapter trees (as from ``init_peft``).
+
+    ``cfg`` is a single PEFTConfig (every adapter uses it) or a
+    {name: PEFTConfig} mapping for MIXED-method banks. Capability checks
+    come from the ``core.methods`` registry: any method providing
+    ``bank_build`` can be banked; per path, each method's factors are
+    pre-processed up front and stacked over [identity] + adapters along a
+    new A axis placed after any scan-stacked weight batch dims (slots of a
+    different method hold that method's identity).
+
+    Constraints: all configs must share ``target_patterns`` / ``use_pallas``
+    (they define the bank-wide adapted set and kernel path), and adapters
+    sharing a method must share its full config (one stack per method).
+    """
+    primary, cfg_by_name = normalize_bank_cfgs(adapters_by_name, cfg)
+    _bank_capability_check(None, primary)
+    for name, c in cfg_by_name.items():
+        _bank_capability_check(name, c)
+        if c.target_patterns != primary.target_patterns:
+            raise ValueError(
+                f"adapter '{name}': target_patterns differ from the bank's "
+                "— all adapters in one bank must adapt the same weights")
+        if c.use_pallas != primary.use_pallas:
+            raise ValueError(
+                f"adapter '{name}': use_pallas differs from the bank's — "
+                "the kernel path is a bank-wide choice")
+    # one stack per method -> same-method adapters must share their config
+    cfg_of_method: Dict[str, PEFTConfig] = {}
+    names_of_method: Dict[str, set] = {}
+    for name, c in cfg_by_name.items():
+        prev = cfg_of_method.setdefault(c.method, c)
+        if prev != c:
+            raise ValueError(
+                f"adapters {sorted(names_of_method[c.method])} and "
+                f"'{name}' share method {c.method!r} but differ in config "
+                "— one bank holds one stack (hence one config) per method")
+        names_of_method.setdefault(c.method, set()).add(name)
+
+    specs = adapted_paths(primary, params)
     names = (BASE_ADAPTER,) + tuple(adapters_by_name)
     tree: Dict[str, Any] = {}
     for path, spec in sorted(specs.items()):
@@ -263,23 +343,25 @@ def build_adapter_bank(cfg: PEFTConfig, params: Tree,
                 f"adapter bank cannot serve {path}: weights with batch dims "
                 f"{spec.batch} (MoE experts / hybrid blocks) need "
                 "routing-aware rotation")
-        b = spec.resolved_block(spec.d_in, spec.block_size)
-        lay = gsoft_layout(spec.d_in, b)
-        eye = jnp.broadcast_to(
-            jnp.eye(b, dtype=jnp.float32),
-            tuple(spec.batch) + lay.lspec.param_shape)
-        stacks: Dict[str, list] = {"L": [eye], "R": [eye]}
-        for name, adapters in adapters_by_name.items():
-            if path not in adapters:
-                raise KeyError(f"adapter '{name}' has no params for {path}")
-            for pkey in ("L", "R"):
-                k = adapters[path][pkey].astype(jnp.float32)
-                stacks[pkey].append(
-                    cayley(skew(k), neumann_order=cfg.neumann_order))
-        entry = {k: jnp.stack(v, axis=len(spec.batch))
-                 for k, v in stacks.items()}
+        shape = tuple(spec.batch) + (spec.d_in, spec.d_out)
+        entry: Dict[str, Any] = {}
+        for m in sorted(cfg_of_method):
+            mcfg = cfg_of_method[m]
+            mspec = spec_for(mcfg, shape)
+            members = names_of_method[m]
+            params_by_slot: List[Optional[Dict[str, Array]]] = [None]
+            for name in names[1:]:
+                if name not in members:
+                    params_by_slot.append(None)     # other method: identity
+                    continue
+                if path not in adapters_by_name[name]:
+                    raise KeyError(
+                        f"adapter '{name}' has no params for {path}")
+                params_by_slot.append(adapters_by_name[name][path])
+            entry[m] = methods_lib.get(m).bank_build(mspec, params_by_slot)
         _nest_insert(tree, path, entry)
-    return AdapterBank(cfg=cfg, names=names, tree=tree)
+    return AdapterBank(cfg=primary, names=names, tree=tree,
+                       cfgs=cfg_by_name)
 
 
 # ---------------------------------------------------------------------------
@@ -332,15 +414,20 @@ class AdapterContext:
 
 
 class BankRotator:
-    """Per-request GS rotation hook: ``rot(name, x)`` rotates row i of x
-    with its own adapter (slot 0 = identity) before projection ``name``.
+    """Per-request rotation hook: ``rot(name, x)`` rotates row i of x with
+    its own adapter (slot 0 = identity) before projection ``name``.
 
-    Besides being callable, it exposes ``banked_factors`` — the per-row
-    pre-orthogonalized (L, R) stacks — so the ``qlinear`` hook can fuse
-    rotation + quantized base matmul into one ``gs_q_matmul_banked`` call
-    instead of round-tripping the rotated slab through HBM. The factors
-    are gathered/cast to the ACTIVATION dtype: rotations stay bf16 even
-    when the base weights are int8 (QOFT rationale, DESIGN.md)."""
+    Method-generic: a bank entry is ``{method: factors}`` and each method's
+    ``MethodOps.bank_rotator`` applies its stack in turn. In a mixed bank
+    at most one stack is non-identity for any given row, so the composition
+    order is immaterial — it is fixed (sorted) only for trace stability.
+
+    Besides being callable, it exposes ``quant_rotation`` so the
+    ``qlinear`` hook can fuse the GS rotation + quantized base matmul into
+    one ``gs_q_matmul_banked`` call instead of round-tripping the rotated
+    slab through HBM. All factors are gathered/cast to the ACTIVATION
+    dtype: rotations stay bf16 for EVERY method even when the base weights
+    are int8 (QOFT rationale, DESIGN.md)."""
 
     __slots__ = ("_group", "slots", "_peft")
 
@@ -358,19 +445,32 @@ class BankRotator:
         entry = self._group.get(name)
         if entry is None:
             return x
-        return gs_rotate_banked(entry["L"], entry["R"], self.slots, x,
-                                use_pallas=self.use_pallas)
+        for m in sorted(entry):
+            x = methods_lib.get(m).bank_rotator(entry[m], self.slots, x,
+                                                self.use_pallas)
+        return x
 
-    def banked_factors(self, name: str, dtype
-                       ) -> Optional[Tuple[Array, Array]]:
-        """Per-row (L, R) blocks for projection ``name`` in ``dtype``
-        ((B, r, b, b) each), or None when ``name`` has no bank entry."""
+    def quant_rotation(self, name: str, x: Array, dtype
+                       ) -> Tuple[Array, Optional[Tuple[Array, ...]]]:
+        """Split the rotation for a QUANTIZED base matmul: apply every
+        method stack that cannot fuse with the quantized kernel, and
+        return the per-row factors of the (at most one) method that can
+        (``MethodOps.quant_fuse`` — GSOFT's (L, R) today).
+
+        -> (x with unfusible rotations applied, fusible factors or None).
+        """
         entry = self._group.get(name)
         if entry is None:
-            return None
-        L = jnp.take(entry["L"], self.slots, axis=0).astype(dtype)
-        R = jnp.take(entry["R"], self.slots, axis=0).astype(dtype)
-        return L, R
+            return x, None
+        fused = None
+        for m in sorted(entry):
+            ops = methods_lib.get(m)
+            if fused is None and ops.quant_fuse is not None:
+                fused = ops.quant_fuse(entry[m], self.slots, dtype)
+            else:
+                x = ops.bank_rotator(entry[m], self.slots, x,
+                                     self.use_pallas)
+        return x, fused
 
 
 @jax.tree_util.register_pytree_node_class
@@ -399,9 +499,7 @@ def count_params(tree: Tree) -> int:
 
 
 def trainable_and_frozen(cfg: PEFTConfig, params: Tree, adapters: Tree):
-    """(trainable, frozen) split for the optimizer/train step."""
-    if cfg.method == "full":
-        return params, adapters  # adapters empty; everything trains
-    if cfg.method == "none":
-        return {}, params
-    return adapters, params
+    """(trainable, frozen) split for the optimizer/train step (the
+    ``full``/``none`` pseudo-methods are interpreted by the registry
+    module — the one place method strings are compared)."""
+    return methods_lib.trainable_split(cfg.method, params, adapters)

@@ -26,6 +26,20 @@ from repro.models import api
 Tree = Any
 
 
+def _check_bank_quant_compatible(bank: peft_lib.AdapterBank) -> None:
+    """Registry-driven capability gate: every method in the bank must be
+    flagged ``quant_compatible`` (its rotations apply activation-side in
+    bf16 BEFORE the int8 base matmul) to serve over quantized weights."""
+    from repro.core import methods as methods_lib
+    bad = [m for m in bank.bank_methods
+           if not methods_lib.get(m).quant_compatible]
+    if bad:
+        raise ValueError(
+            f"bank methods {bad} are not quantization-compatible — they "
+            "cannot serve over quantized base weights (see the "
+            "quant_compatible flag on their core.methods records)")
+
+
 class ModelRuntime:
     """``ModelRuntime(cfg)`` initializes params; pass ``params=`` to reuse
     a tree. ``adapters``+``peft_cfg`` merge ONE adapter into the weights
@@ -111,9 +125,14 @@ class ModelRuntime:
         return self.bank.context(slot_ids)
 
     def with_bank(self, adapters_by_name: Dict[str, Tree],
-                  peft_cfg: peft_lib.PEFTConfig) -> "ModelRuntime":
+                  peft_cfg: "peft_lib.PEFTConfigs") -> "ModelRuntime":
         """New runtime over the same params serving these named adapters
-        per-request (slot 0 stays the identity/base model)."""
+        per-request (slot 0 stays the identity/base model).
+
+        ``peft_cfg`` is a single PEFTConfig (every adapter uses it) or a
+        {name: PEFTConfig} mapping — a MIXED-method bank where each named
+        adapter declares its own registered method (gsoft / oft / boft /
+        householder today)."""
         if self._merged:
             raise ValueError(
                 "this runtime's params already contain a merged adapter; "
@@ -121,6 +140,8 @@ class ModelRuntime:
                 "build the bank from the unmerged base runtime")
         bank = peft_lib.build_adapter_bank(peft_cfg, self.params,
                                            adapters_by_name)
+        if self.is_quantized:
+            _check_bank_quant_compatible(bank)
         rt = ModelRuntime(self.cfg, self.params, mesh=self.mesh, bank=bank)
         rt.quant_cfg = self.quant_cfg   # quantize-then-bank commutes
         return rt
@@ -150,6 +171,8 @@ class ModelRuntime:
             raise ValueError(
                 f"quantized(mode={mode!r}) conflicts with qcfg.mode="
                 f"{qcfg.mode!r} — pass one or the other")
+        if self.bank is not None:
+            _check_bank_quant_compatible(self.bank)
         rt = ModelRuntime(self.cfg, quant.quantize_params(self.params, qcfg),
                           mesh=self.mesh, bank=self.bank)
         rt._merged = self._merged
@@ -179,11 +202,13 @@ class ModelRuntime:
     # -- checkpoint integration ----------------------------------------------
     @staticmethod
     def save_bank(directory: str, adapters_by_name: Dict[str, Tree],
-                  peft_cfg: peft_lib.PEFTConfig, step: int = 0) -> None:
-        """Persist named RAW adapter trees + PEFTConfig as an adapter-bank
-        checkpoint (the format ``load_named_adapters`` reads back). Static:
-        a built ``AdapterBank`` holds Cayley-processed stacks, so the
-        original adapter trees must be supplied, not a runtime's bank."""
+                  peft_cfg: "peft_lib.PEFTConfigs", step: int = 0) -> None:
+        """Persist named RAW adapter trees + their PEFTConfig(s) as an
+        adapter-bank checkpoint (the format ``load_named_adapters`` reads
+        back; mixed-method banks record one method + spec per adapter name
+        in the index). Static: a built ``AdapterBank`` holds pre-processed
+        stacks, so the original adapter trees must be supplied, not a
+        runtime's bank."""
         from repro.checkpoint.manager import CheckpointManager
         CheckpointManager(directory).save_adapters(step, adapters_by_name,
                                                    peft_cfg)
@@ -191,17 +216,19 @@ class ModelRuntime:
     @staticmethod
     def load_named_adapters(entries: List[str]
                             ) -> Tuple[Dict[str, Tree],
-                                       peft_lib.PEFTConfig]:
+                                       "peft_lib.PEFTConfigs"]:
         """``entries``: ["name=ckpt_dir" | "ckpt_dir"] -> (adapters_by_name,
-        PEFTConfig). A bare dir loads every adapter in that bank;
+        cfg) where ``cfg`` is a single PEFTConfig (homogeneous bank) or a
+        {name: PEFTConfig} mapping (mixed-method bank) — exactly what
+        ``with_bank`` accepts. A bare dir loads every adapter in that bank;
         ``name=dir`` picks one. An entry that IS an existing directory is
         always treated as bare, so checkpoint paths containing ``=`` are
-        not misparsed. Feed the result to ``with_bank``."""
+        not misparsed."""
         import os
 
         from repro.checkpoint.manager import CheckpointManager
         adapters_by_name: Dict[str, Tree] = {}
-        peft_cfg = None
+        cfg_by_name: Dict[str, peft_lib.PEFTConfig] = {}
         for entry in entries:
             if os.path.isdir(entry) or "=" not in entry:
                 name, path = "", entry
@@ -209,21 +236,24 @@ class ModelRuntime:
                 # split at the FIRST '=': adapter names never contain '=',
                 # checkpoint paths may
                 name, _, path = entry.partition("=")
-            loaded, cfg = CheckpointManager(path).restore_adapters()
-            if peft_cfg is not None and cfg != peft_cfg:
-                raise ValueError(f"adapter {entry}: PEFTConfig mismatch "
-                                 f"({cfg} != {peft_cfg})")
-            peft_cfg = cfg
+            loaded, cfgs = CheckpointManager(path).restore_adapters()
             if name:      # name=dir form: pick one adapter out of the bank
                 if name not in loaded:
                     raise KeyError(f"{path} has adapters {list(loaded)}, "
                                    f"not {name!r}")
-                adapters_by_name[name] = loaded[name]
-            else:         # bare dir: load every adapter it holds
-                adapters_by_name.update(loaded)
-        if peft_cfg is None:
+                loaded = {name: loaded[name]}
+            for n in loaded:
+                prev = cfg_by_name.get(n)
+                if prev is not None and prev != cfgs[n]:
+                    raise ValueError(f"adapter {n!r} ({entry}): PEFTConfig "
+                                     f"mismatch ({cfgs[n]} != {prev})")
+                cfg_by_name[n] = cfgs[n]
+            adapters_by_name.update(loaded)
+        if not cfg_by_name:
             raise ValueError("no adapter checkpoints given")
-        return adapters_by_name, peft_cfg
+        if len(set(cfg_by_name.values())) == 1:   # frozen -> hashable
+            return adapters_by_name, next(iter(cfg_by_name.values()))
+        return adapters_by_name, cfg_by_name
 
     # -- family ops / state ---------------------------------------------------
     def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0):

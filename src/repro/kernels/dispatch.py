@@ -33,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -96,6 +96,28 @@ def gs_qmm_key(r: int, b: int, n: int, dtype,
                backend: Optional[str] = None) -> Key:
     """Fused rotate+quantized-matmul: GS factors (r, b, b), W_q (r*b, n)."""
     return ("gs_qmm", r, b, n, jnp.dtype(dtype).name, backend or _backend())
+
+
+# Banked (per-request, multi-adapter) activation-side transforms resolve
+# their launch geometry through these key families — keyed by KERNEL name
+# (this module's vocabulary); WHICH family an adapter method rides is that
+# method's ``MethodOps.banked_kernel`` field in core.methods (single
+# source of per-method truth). Today: the gsoft bank rides the vmapped
+# gs_T kernel ("gs"), oft/boft banks ride the vmapped bdmm kernel ("bdmm",
+# one bdmm per butterfly level for boft), and householder declares no
+# kernel — its banked transform is an O(k*d)-per-token reference einsum
+# (kernels/ref.py), so there is nothing to tune.
+BANKED_KEYS: Dict[str, Callable] = {
+    "gs": gs_key,
+    "bdmm": bdmm_key,
+}
+
+
+def banked_key_fn(kernel: str) -> Optional[Callable]:
+    """Key builder for a banked-transform kernel family (""/unknown ->
+    einsum-only, nothing to tune — a new method starts on the reference
+    fallback until a kernel lands)."""
+    return BANKED_KEYS.get(kernel)
 
 
 def _wildcard(key: Key) -> Key:

@@ -122,6 +122,20 @@ def gs_banked_transform_T(L: Array, R: Array, x: Array,
     return ref.gs_banked_T_ref(L, R, x)
 
 
+def householder_banked(V: Array, x: Array, use_pallas: bool = False) -> Array:
+    """Per-row Householder-product rotation y[i] = x[i] Q_{i} (HOFT bank).
+
+    V: (B, k, d) pre-normalized unit reflection vectors; x: (B, T, d).
+    There is NO dedicated Pallas kernel for this transform: it is O(k*d)
+    per token — bandwidth-trivial next to the projection matmul it
+    precedes — so the reference einsum is the implementation on every
+    backend (``use_pallas`` is accepted for hook uniformity and ignored;
+    the method registers ``banked_kernel=""`` — see
+    ``dispatch.BANKED_KEYS``)."""
+    del use_pallas
+    return ref.householder_banked_ref(V, x)
+
+
 def q_matmul(x: Array, q: Array, scale: Array, use_pallas: bool = False,
              tuning: Optional[Tuning] = None) -> Array:
     """Quantized-weight matmul y = x @ dequant(q, scale) with the dequant

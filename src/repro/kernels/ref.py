@@ -86,6 +86,25 @@ def gs_fused_T_ref(L: Array, R: Array, x: Array) -> Array:
     return y
 
 
+def householder_banked_ref(V: Array, x: Array) -> Array:
+    """Per-row Householder product rotation y[i] = x[i] Q_{i} with
+    Q_i = H(v_{i,1}) .. H(v_{i,k}),  H(v) = I - 2 v v^T.
+
+    V: (B, k, d) PRE-NORMALIZED unit reflection vectors (rows of all-e_1
+    with k even encode the identity slot exactly); x: (B, T, d).
+    Applied reflection by reflection in fp32 — x H = x - 2 (x.v) v — so no
+    dense Q ever materializes; O(B*T*k*d) total.
+    """
+    k = V.shape[1]
+    y = x.astype(jnp.float32)
+    v32 = V.astype(jnp.float32)
+    for i in range(k):
+        v = v32[:, i]                                   # (B, d)
+        coef = jnp.einsum("btd,bd->bt", y, v)
+        y = y - 2.0 * coef[..., None] * v[:, None, :]
+    return y.astype(x.dtype)
+
+
 def q_matmul_ref(x: Array, q: Array, scale: Array) -> Array:
     """Quantized-weight matmul oracle.
 

@@ -36,14 +36,17 @@ from repro.serve.engine import (ServeEngine, StaticServeEngine,
 
 
 def make_demo_adapters(names, params, peft_cfg, seed=1, scale=0.1):
-    """Random (non-identity) GSOFT adapters, one per name; an int n means
-    names a0..a{n-1}. Stands in for real fine-tunes in demos/benchmarks."""
+    """Random (non-identity) adapters, one per name; an int n means names
+    a0..a{n-1}. ``peft_cfg`` is a single PEFTConfig or a {name: PEFTConfig}
+    mapping (mixed-method demo banks). Stands in for real fine-tunes in
+    demos/benchmarks."""
     if isinstance(names, int):
         names = [f"a{i}" for i in range(names)]
     out = {}
     for i, name in enumerate(names):
+        cfg = peft_cfg[name] if isinstance(peft_cfg, dict) else peft_cfg
         key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
-        ad = peft_lib.init_peft(peft_cfg, params, key)
+        ad = peft_lib.init_peft(cfg, params, key)
         out[name] = jax.tree.map(
             lambda a, k=key: a + scale * jax.random.normal(
                 jax.random.fold_in(k, 7), a.shape), ad)
@@ -100,6 +103,10 @@ def main():
                          "(continuous engine only)")
     ap.add_argument("--demo-adapters", type=int, default=0,
                     help="fabricate N random adapters as a demo bank")
+    ap.add_argument("--demo-methods", default="gsoft",
+                    help="comma-list of registered methods assigned round-"
+                         "robin to the demo adapters (mixed-method bank), "
+                         "e.g. gsoft,boft,householder")
     ap.add_argument("--save-adapters", default=None,
                     help="save the (demo) bank to this checkpoint dir and "
                          "reload it through the round-trip path")
@@ -136,11 +143,21 @@ def main():
                          "combining it with a per-request bank would rotate "
                          "already-rotated activations — pick one")
     if args.adapters or args.demo_adapters:
-        bank_peft = peft_lib.PEFTConfig(method="gsoft", block_size=8,
-                                        use_pallas=cfg.use_pallas)
         if args.demo_adapters:
-            adapters_by_name = make_demo_adapters(args.demo_adapters,
-                                                  rt.params, bank_peft)
+            # mixed-method demo bank: methods round-robin over the names
+            meths = [m.strip() for m in args.demo_methods.split(",")
+                     if m.strip()]
+            if not meths:
+                raise SystemExit("--demo-methods needs at least one "
+                                 "registered method (e.g. "
+                                 "gsoft,boft,householder)")
+            names = [f"a{i}" for i in range(args.demo_adapters)]
+            bank_peft = {name: peft_lib.PEFTConfig(
+                             method=meths[i % len(meths)], block_size=8,
+                             use_pallas=cfg.use_pallas)
+                         for i, name in enumerate(names)}
+            adapters_by_name = make_demo_adapters(names, rt.params,
+                                                  bank_peft)
         else:
             adapters_by_name, bank_peft = ModelRuntime.load_named_adapters(
                 args.adapters)
@@ -152,7 +169,7 @@ def main():
                   f"{args.save_adapters}")
         rt = rt.with_bank(adapters_by_name, bank_peft)
         print(f"adapter bank: {rt.bank.num_slots} slots "
-              f"{list(rt.bank.names)}")
+              f"{list(rt.bank.names)}, methods {list(rt.bank.bank_methods)}")
 
     # ---- merged single-adapter demo (static story) -------------------------
     if args.peft_demo:

@@ -17,6 +17,7 @@ import jax
 
 from repro import optim
 from repro.config import get_config, get_smoke_config, parse_overrides
+from repro.core import methods as methods_lib
 from repro.core import peft as peft_lib
 from repro.data import DataConfig
 from repro.launch.mesh import make_mesh
@@ -31,8 +32,7 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--peft", default="gsoft",
-                    choices=["gsoft", "double_gsoft", "oft", "boft", "lora",
-                             "full"])
+                    choices=methods_lib.registered() + ["full"])
     ap.add_argument("--block-size", type=int, default=32)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)

@@ -34,25 +34,30 @@ def qlinear(x: Array, w, rot: Optional[Callable[[str, Array], Array]] = None,
     ``w`` is either a plain weight array (y = x @ w, unchanged numerics)
     or a ``QuantTensor`` (int8/fp8 codes + scales), in which case the
     matmul dispatches through ``kernels.ops.q_matmul`` with the dequant in
-    the epilogue. ``rot(name, x)`` is the optional per-request GS rotation
-    (bf16, never quantized); when the rotator exposes its banked factors
-    AND the weight is quantized, rotation + base matmul fuse into one
-    ``gs_q_matmul_banked`` kernel call — the rotated slab never leaves
-    VMEM on the Pallas path.
+    the epilogue. ``rot(name, x)`` is the optional per-request adapter
+    rotation — method-generic (any banked ``core.methods`` entry), bf16,
+    never quantized. When the weight is quantized, the rotator's
+    ``quant_rotation`` hook splits the work: methods with a fused kernel
+    (GSOFT) hand back per-row factors so rotation + base matmul collapse
+    into one ``gs_q_matmul_banked`` call — the rotated slab never leaves
+    VMEM on the Pallas path — while the other method stacks (OFT / BOFT /
+    Householder) apply to the activations first.
 
     ``cast=True`` pre-casts a PLAIN weight to the activation dtype (the
     lm_head/patch_proj call sites, whose weights may be wider than the
     activations); quantized matmuls already return ``x.dtype``.
     """
     if isinstance(w, QuantTensor):
-        factors = (rot.banked_factors(name, x.dtype)
-                   if hasattr(rot, "banked_factors") else None)
+        factors = None
+        if rot is not None:
+            if hasattr(rot, "quant_rotation"):
+                x, factors = rot.quant_rotation(name, x, x.dtype)
+            else:
+                x = rot(name, x)
         if factors is not None:
             return kernel_ops.gs_q_matmul_banked(
                 factors[0], factors[1], x, w.q, w.scale,
                 use_pallas=w.meta.use_pallas)
-        if rot is not None:
-            x = rot(name, x)
         return kernel_ops.q_matmul(x, w.q, w.scale,
                                    use_pallas=w.meta.use_pallas)
     if rot is not None:

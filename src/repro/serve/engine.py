@@ -16,9 +16,13 @@ decode slots:
     row into the slot (``train.steps.build_slot_prefill_step``);
   * when the runtime carries an ``AdapterBank``, each slot's id flows
     through an ``AdapterContext`` pytree: row i rotates its activations
-    with its own GSOFT rotation x Q_i before every adapted matmul —
+    with its own orthogonal adapter x Q_i before every adapted matmul —
     O(b*d) per token, versus O(d^2) to re-merge a dense rotation per
-    request. Slot 0 of the bank is the identity (serves the base model).
+    request. The bank is method-generic (any bankable ``core.methods``
+    entry: GSOFT, OFT, BOFT, Householder) and may be HETEROGENEOUS —
+    each named adapter declares its own method, so one deployment serves
+    gsoft and boft and householder tenants side by side. Slot 0 of the
+    bank is the universal identity (serves the base model).
 
 ``StaticServeEngine`` is the drain-queue -> pad -> prefill -> lockstep
 decode reference (the paper's merged-weight serving story, §6.1): one
