@@ -93,7 +93,7 @@ def run():
         # banked serving throughput (single-tenant bank per method)
         if ops.bank_build is not None:
             adapters = {"t": _tuned_adapters(mcfg, rt.params, seed=5)}
-            brt = rt.with_bank(adapters, mcfg)
+            brt = rt.attach(adapters, mcfg)
             wl = [dict(req, adapter="t") for req in workload]
             r = run_engine_timed(
                 lambda: ServeEngine(brt, max_batch=4, max_len=max_len,
@@ -110,7 +110,7 @@ def run():
                   if methods_lib.get(m).bank_build is not None}
     adapters = {name: _tuned_adapters(c, rt.params, seed=11 + i)
                 for i, (name, c) in enumerate(mixed_cfgs.items())}
-    brt = rt.with_bank(adapters, mixed_cfgs)
+    brt = rt.attach(adapters, mixed_cfgs)
     tenants = list(adapters) + [None]
     wl = [dict(req, adapter=tenants[i % len(tenants)])
           for i, req in enumerate(workload)]

@@ -112,7 +112,7 @@ def run():
     ad = {f"a{i}": peft_lib.init_peft(pcfg, rt.params,
                                       jax.random.PRNGKey(i + 1))
           for i in range(2)}
-    qrt_bank = rt.with_bank(ad, pcfg).quantized("int8")
+    qrt_bank = rt.attach(ad, pcfg).quantized("int8")
     bank_workload = mixed_workload(n_req, prompt_hi, max_new_hi,
                                    adapters=list(ad) + [None])
     tok_bank = _tok_s(qrt_bank, bank_workload, max_batch, max_len)

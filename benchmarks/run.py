@@ -14,13 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-list of {table1,table2,table3,micro,kernels,"
-                         "serve,quant,methods}")
+                         "serve,quant,methods,store}")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     from . import table1_glue, table2_subject, table3_lipconvnet
     from . import kernels_bench, method_bench, micro_gs, quant_bench, \
-        serve_bench
+        serve_bench, store_bench
 
     suites = [
         ("table1", table1_glue.run),
@@ -31,6 +31,7 @@ def main() -> None:
         ("serve", serve_bench.run),
         ("quant", quant_bench.run),
         ("methods", method_bench.run),
+        ("store", store_bench.run),
     ]
     print("name,us_per_call,derived")
     t0 = time.time()

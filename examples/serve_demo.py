@@ -64,7 +64,7 @@ def main():
         results = eng.run()
         dt = time.perf_counter() - t0
     else:
-        banked = rt.with_bank(adapters, cfgs)
+        banked = rt.attach(adapters, cfgs)
         if args.quantize != "none":
             banked = banked.quantized(args.quantize)
         print(f"bank methods: {list(banked.bank.bank_methods)}"

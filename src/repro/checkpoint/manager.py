@@ -20,11 +20,12 @@ Adapter banks: ``save_adapters`` / ``restore_adapters`` persist NAMED
 adapter pytrees (any registered ``core.methods`` parametrization — mixed
 methods per bank are fine) plus per-name ``PEFTConfig`` records as index
 metadata (the index records adapter names, methods and weight paths —
-restore needs no tree_like). Serving code reaches these through the
-``ModelRuntime`` facade
-(``runtime.save_bank`` / ``ModelRuntime.load_named_adapters`` /
-``runtime.with_bank``) — e.g. ``launch/serve.py --adapters name=dir``
-rebuilds a serving AdapterBank without the original python objects.
+restore needs no tree_like). ``adapter_index`` / ``load_adapter`` read
+that index WITHOUT touching the leaves, so ``repro.store.AdapterStore
+.open`` can back thousands of adapters by disk and pull each one's params
+only when it first pages into HBM. Serving code reaches all of this
+through ``ModelRuntime.attach`` / ``repro.store`` — e.g.
+``launch/serve.py --store-dir`` serves a checkpoint directory directly.
 """
 from __future__ import annotations
 
@@ -250,6 +251,21 @@ class CheckpointManager:
             pd["target_patterns"] = tuple(pd.get("target_patterns", ()))
             return PEFTConfig(**pd)
 
+        d, index, ex = self._adapter_ckpt(step)
+        peft_cfg = to_cfg(ex["peft"])
+        by_name = {name: to_cfg(c)
+                   for name, c in ex.get("peft_by_name", {}).items()}
+        flat = {k: np.load(os.path.join(d, k + ".npy"))
+                for k in index["leaves"]}
+        out: Dict[str, Dict[str, Dict[str, Any]]] = {}
+        cfgs: Dict[str, Any] = {}
+        for name in ex["adapter_names"]:
+            out[name] = self._adapter_tree(name, ex["weight_paths"], flat)
+            cfgs[name] = by_name.get(name, peft_cfg)
+        return out, cfgs
+
+    def _adapter_ckpt(self, step: Optional[int]):
+        """-> (ckpt dir, index, extra) of an adapter-bank checkpoint."""
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
@@ -260,21 +276,50 @@ class CheckpointManager:
         if ex.get("kind") != "adapter_bank":
             raise ValueError(f"{d} is not an adapter-bank checkpoint "
                              f"(kind={ex.get('kind')!r})")
+        return d, index, ex
+
+    @staticmethod
+    def _adapter_tree(name: str, weight_paths, flat) -> Dict[str, Any]:
+        tree: Dict[str, Dict[str, Any]] = {}
+        for path in weight_paths:
+            prefix = f"{name}{_SEP}{path.replace('/', _SEP)}{_SEP}"
+            entry = {k[len(prefix):]: jax.numpy.asarray(v)
+                     for k, v in flat.items() if k.startswith(prefix)}
+            if entry:
+                tree[path] = entry
+        return tree
+
+    def adapter_index(self, step: Optional[int] = None
+                      ) -> Tuple[Tuple[str, ...], Dict[str, Any],
+                                 Tuple[str, ...]]:
+        """-> (names, {name: PEFTConfig}, weight_paths) from the index
+        ALONE — no adapter leaves are read. The host-store fast path: a
+        disk-backed ``AdapterStore`` opens a thousand-tenant checkpoint in
+        one index read and defers each tenant's arrays to first page-in."""
+        from repro.core.peft import PEFTConfig
+
+        def to_cfg(d_):
+            pd = dict(d_)
+            pd["target_patterns"] = tuple(pd.get("target_patterns", ()))
+            return PEFTConfig(**pd)
+
+        _, _, ex = self._adapter_ckpt(step)
         peft_cfg = to_cfg(ex["peft"])
         by_name = {name: to_cfg(c)
                    for name, c in ex.get("peft_by_name", {}).items()}
+        names = tuple(ex["adapter_names"])
+        return (names, {n: by_name.get(n, peft_cfg) for n in names},
+                tuple(ex["weight_paths"]))
+
+    def load_adapter(self, name: str, step: Optional[int] = None
+                     ) -> Dict[str, Dict[str, Any]]:
+        """Load ONE named adapter's param tree, reading only its own
+        ``.npy`` leaves (lazy page-in for disk-backed stores)."""
+        d, index, ex = self._adapter_ckpt(step)
+        if name not in ex["adapter_names"]:
+            raise KeyError(f"{d} has adapters {ex['adapter_names']}, "
+                           f"not {name!r}")
+        mine = f"{name}{_SEP}"
         flat = {k: np.load(os.path.join(d, k + ".npy"))
-                for k in index["leaves"]}
-        out: Dict[str, Dict[str, Dict[str, Any]]] = {}
-        cfgs: Dict[str, Any] = {}
-        for name in ex["adapter_names"]:
-            tree: Dict[str, Dict[str, Any]] = {}
-            for path in ex["weight_paths"]:
-                prefix = f"{name}{_SEP}{path.replace('/', _SEP)}{_SEP}"
-                entry = {k[len(prefix):]: jax.numpy.asarray(v)
-                         for k, v in flat.items() if k.startswith(prefix)}
-                if entry:
-                    tree[path] = entry
-            out[name] = tree
-            cfgs[name] = by_name.get(name, peft_cfg)
-        return out, cfgs
+                for k in index["leaves"] if k.startswith(mine)}
+        return self._adapter_tree(name, ex["weight_paths"], flat)

@@ -249,6 +249,20 @@ class AdapterBank:
                               slots=jnp.asarray(slot_ids, jnp.int32),
                               peft=self.cfg)
 
+    # -- residency surface (trivial here; real on the paged store bank) ------
+    def validate(self, name: Optional[str]) -> None:
+        """Raise KeyError on an unknown adapter name (None = identity)."""
+        self.slot(name)
+
+    def acquire(self, name: Optional[str]) -> Optional[int]:
+        """Admission-time slot claim. An eager bank is always fully
+        resident, so this is just the slot lookup; the paged store bank
+        overrides it with page-in + pinning (may return None = stall)."""
+        return self.slot(name)
+
+    def release(self, name: Optional[str]) -> None:
+        """Request-finished unpin (no-op for a fully-resident bank)."""
+
 
 def _nest_insert(root: Dict[str, Any], path: str, value: Any) -> None:
     parts = path.split("/")
@@ -278,9 +292,11 @@ def normalize_bank_cfgs(adapters_by_name: Mapping[str, Any],
     return primary, {name: cfgs[name] for name in adapters_by_name}
 
 
-def _bank_capability_check(name: Optional[str], cfg: PEFTConfig) -> None:
+def bank_capability_check(name: Optional[str], cfg: PEFTConfig) -> None:
     """Registry-driven: the method must be registered AND provide
-    ``bank_build`` (``MethodOps.bank_unsupported`` explains why not)."""
+    ``bank_build`` (``MethodOps.bank_unsupported`` explains why not).
+    Shared by eager bank builds AND ``AdapterStore.add`` — a host store
+    fails at INSERT time, never at first admission mid-traffic."""
     ops = methods_lib.get(cfg.method)   # KeyError lists registered methods
     if ops.bank_build is None:
         who = f"adapter '{name}'" if name else "the bank config"
@@ -291,6 +307,46 @@ def _bank_capability_check(name: Optional[str], cfg: PEFTConfig) -> None:
         raise ValueError("adapter bank does not support use_scale "
                          "(the per-output magnitude acts on the weight "
                          "output, not the rotated input)")
+
+
+def check_bank_member(name: str, cfg: PEFTConfig, primary: PEFTConfig,
+                      cfg_of_method: Dict[str, PEFTConfig]) -> None:
+    """One adapter's admissibility against a bank/store under ``primary``:
+    bankable method, bank-wide knobs, one config per method.
+
+    Mutates ``cfg_of_method`` (method -> canonical config). THE shared
+    membership rule — ``build_adapter_bank`` applies it when stacking
+    up-front, ``repro.store.AdapterStore.add`` applies it at host-insert
+    time so a bad adapter is rejected before it can break an admission."""
+    bank_capability_check(name, cfg)
+    if cfg.target_patterns != primary.target_patterns:
+        raise ValueError(
+            f"adapter '{name}': target_patterns differ from the bank's "
+            "— all adapters in one bank must adapt the same weights")
+    if cfg.use_pallas != primary.use_pallas:
+        raise ValueError(
+            f"adapter '{name}': use_pallas differs from the bank's — "
+            "the kernel path is a bank-wide choice")
+    prev = cfg_of_method.setdefault(cfg.method, cfg)
+    if prev != cfg:
+        raise ValueError(
+            f"adapter '{name}' shares method {cfg.method!r} with other "
+            "adapters but differs in config — one bank holds one stack "
+            "(hence one config) per method")
+
+
+def bank_specs(cfg: PEFTConfig, params: Tree) -> Dict[str, AdapterSpec]:
+    """Adapted-path specs a serving bank can actually hold (rejects MoE /
+    hybrid multi-batch-dim weights) — shared by the eager ``AdapterBank``
+    build and the paged ``repro.store`` bank, so both fail identically."""
+    specs = adapted_paths(cfg, params)
+    for path, spec in specs.items():
+        if len(spec.batch) > 1:
+            raise ValueError(
+                f"adapter bank cannot serve {path}: weights with batch dims "
+                f"{spec.batch} (MoE experts / hybrid blocks) need "
+                "routing-aware rotation")
+    return specs
 
 
 def build_adapter_bank(cfg: PEFTConfigs, params: Tree,
@@ -311,38 +367,18 @@ def build_adapter_bank(cfg: PEFTConfigs, params: Tree,
     sharing a method must share its full config (one stack per method).
     """
     primary, cfg_by_name = normalize_bank_cfgs(adapters_by_name, cfg)
-    _bank_capability_check(None, primary)
-    for name, c in cfg_by_name.items():
-        _bank_capability_check(name, c)
-        if c.target_patterns != primary.target_patterns:
-            raise ValueError(
-                f"adapter '{name}': target_patterns differ from the bank's "
-                "— all adapters in one bank must adapt the same weights")
-        if c.use_pallas != primary.use_pallas:
-            raise ValueError(
-                f"adapter '{name}': use_pallas differs from the bank's — "
-                "the kernel path is a bank-wide choice")
+    bank_capability_check(None, primary)
     # one stack per method -> same-method adapters must share their config
     cfg_of_method: Dict[str, PEFTConfig] = {}
     names_of_method: Dict[str, set] = {}
     for name, c in cfg_by_name.items():
-        prev = cfg_of_method.setdefault(c.method, c)
-        if prev != c:
-            raise ValueError(
-                f"adapters {sorted(names_of_method[c.method])} and "
-                f"'{name}' share method {c.method!r} but differ in config "
-                "— one bank holds one stack (hence one config) per method")
+        check_bank_member(name, c, primary, cfg_of_method)
         names_of_method.setdefault(c.method, set()).add(name)
 
-    specs = adapted_paths(primary, params)
+    specs = bank_specs(primary, params)
     names = (BASE_ADAPTER,) + tuple(adapters_by_name)
     tree: Dict[str, Any] = {}
     for path, spec in sorted(specs.items()):
-        if len(spec.batch) > 1:
-            raise ValueError(
-                f"adapter bank cannot serve {path}: weights with batch dims "
-                f"{spec.batch} (MoE experts / hybrid blocks) need "
-                "routing-aware rotation")
         shape = tuple(spec.batch) + (spec.d_in, spec.d_out)
         entry: Dict[str, Any] = {}
         for m in sorted(cfg_of_method):
@@ -378,9 +414,18 @@ class AdapterContext:
     loose ``bank``/``adapter_ids``/``bank_cfg`` kwarg triple. ``bank`` and
     ``slots`` are pytree children (they trace through jit/scan); ``peft`` is
     static aux data (hashable frozen dataclass, part of the jit cache key).
+
+    ``slots`` is either ONE (B,) int32 array indexing every method stack
+    (the eager padded ``AdapterBank``, where slot ids are universal because
+    each stack holds identities at other methods' slots) or a
+    ``{method: (B,) int32}`` dict of per-method COMPACT ids (the paged
+    ``repro.store`` bank, whose stacks hold no identity padding — the
+    host-side indirection table resolves universal slot -> compact slot
+    per method before the context is built, so the device graph is
+    identical either way: one gather per method stack).
     """
     bank: Tree                       # nested {path: {"L": ..., "R": ...}}
-    slots: Array                     # (B,) int32 bank-slot ids
+    slots: Array                     # (B,) int32 ids, or {method: (B,) ids}
     peft: Optional[PEFTConfig] = None
 
     def tree_flatten(self):
@@ -441,12 +486,20 @@ class BankRotator:
     def use_pallas(self) -> bool:
         return self._peft.use_pallas if self._peft else False
 
+    def _ids(self, method: str) -> Array:
+        """Per-row ids into ``method``'s stack: universal slot ids index
+        every stack of a padded bank; a slot-compacted store bank carries
+        per-method compact ids (``AdapterContext.slots`` as a dict)."""
+        if isinstance(self.slots, dict):
+            return self.slots[method]
+        return self.slots
+
     def __call__(self, name: str, x: Array) -> Array:
         entry = self._group.get(name)
         if entry is None:
             return x
         for m in sorted(entry):
-            x = methods_lib.get(m).bank_rotator(entry[m], self.slots, x,
+            x = methods_lib.get(m).bank_rotator(entry[m], self._ids(m), x,
                                                 self.use_pallas)
         return x
 
@@ -466,9 +519,9 @@ class BankRotator:
         for m in sorted(entry):
             ops = methods_lib.get(m)
             if fused is None and ops.quant_fuse is not None:
-                fused = ops.quant_fuse(entry[m], self.slots, dtype)
+                fused = ops.quant_fuse(entry[m], self._ids(m), dtype)
             else:
-                x = ops.bank_rotator(entry[m], self.slots, x,
+                x = ops.bank_rotator(entry[m], self._ids(m), x,
                                      self.use_pallas)
         return x, fused
 

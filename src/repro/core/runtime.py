@@ -7,14 +7,18 @@ closures, so engines, launchers, examples and benchmarks stop re-plumbing
 call. Per-request adapter state flows exclusively through
 ``AdapterContext`` pytrees built by ``runtime.context(slot_ids)``.
 
-Adapter banks round-trip through the checkpoint manager via
-``runtime.save_bank`` / ``ModelRuntime.load_named_adapters`` +
-``runtime.with_bank`` — the serving side never touches raw checkpoint
-layout.
+Adapters attach through ONE surface — ``runtime.attach(source)`` — which
+accepts an ``AdapterStore`` (host-offloaded, LRU-paged under an HBM
+budget), a pre-built eager ``AdapterBank``, named adapter trees + their
+PEFTConfig(s), a checkpoint directory, or ``name=dir`` entry lists; the
+serving side never touches raw checkpoint layout. The PR-5 trio
+(``with_bank`` / ``save_bank`` / ``load_named_adapters``) survives as
+warn-once deprecation shims over ``attach`` / ``repro.store``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +28,18 @@ from repro.core import peft as peft_lib
 from repro.models import api
 
 Tree = Any
+
+_deprecation_warned: set = set()
+
+
+def _warn_once(old: str, new: str) -> None:
+    """One DeprecationWarning per process per retired name (mirrors the
+    PR-3 api-shim pattern; the names themselves go away next cycle)."""
+    if old in _deprecation_warned:
+        return
+    _deprecation_warned.add(old)
+    warnings.warn(f"{old} is deprecated; use {new}", DeprecationWarning,
+                  stacklevel=3)
 
 
 def _check_bank_quant_compatible(bank: peft_lib.AdapterBank) -> None:
@@ -112,8 +128,8 @@ class ModelRuntime:
         if self.bank is None:
             if name is not None:
                 raise KeyError(f"runtime has no adapter bank; cannot serve "
-                               f"adapter {name!r} — build one with "
-                               "ModelRuntime.with_bank")
+                               f"adapter {name!r} — attach one with "
+                               "ModelRuntime.attach")
             return 0
         return self.bank.slot(name)
 
@@ -124,27 +140,114 @@ class ModelRuntime:
             return None
         return self.bank.context(slot_ids)
 
-    def with_bank(self, adapters_by_name: Dict[str, Tree],
-                  peft_cfg: "peft_lib.PEFTConfigs") -> "ModelRuntime":
-        """New runtime over the same params serving these named adapters
-        per-request (slot 0 stays the identity/base model).
+    # -- residency surface (engines call these; trivial on eager banks) -------
+    def validate_adapter(self, name: Optional[str]) -> None:
+        """Submission-time check: the name must be servable (resident OR
+        host-side). Unknown names raise listing both tiers; naming any
+        adapter on a bankless runtime raises — silently serving the base
+        model instead of the requested fine-tune is the failure mode this
+        API exists to prevent."""
+        if self.bank is None:
+            if name is not None:
+                raise KeyError(f"runtime has no adapter bank; cannot serve "
+                               f"adapter {name!r} — attach one with "
+                               "ModelRuntime.attach")
+            return
+        self.bank.validate(name)
 
-        ``peft_cfg`` is a single PEFTConfig (every adapter uses it) or a
-        {name: PEFTConfig} mapping — a MIXED-method bank where each named
-        adapter declares its own registered method (gsoft / oft / boft /
-        householder today)."""
+    def acquire_adapter(self, name: Optional[str]) -> Optional[int]:
+        """Admission-time slot claim (pins; may page in on a store-backed
+        bank). None = admission stall: every slot of the adapter's method
+        is pinned by in-flight requests — keep decoding and retry."""
+        if self.bank is None:
+            self.validate_adapter(name)
+            return 0
+        return self.bank.acquire(name)
+
+    def release_adapter(self, name: Optional[str]) -> None:
+        """Request-finished unpin (no-op on eager/bankless runtimes)."""
+        if self.bank is not None:
+            self.bank.release(name)
+
+    def attach(self, source, peft_cfg: Optional["peft_lib.PEFTConfigs"] = None,
+               *, hbm_budget: Optional[int] = None) -> "ModelRuntime":
+        """New runtime over the same params serving per-request adapters
+        (universal slot 0 stays the identity/base model). THE one adapter
+        attachment surface; ``source`` may be:
+
+          * an ``repro.store.AdapterStore`` — host-offloaded adapters,
+            LRU-paged into a slot-compacted HBM bank sized by
+            ``hbm_budget`` (default: everything resident, still compact);
+          * a pre-built eager ``AdapterBank``;
+          * ``{name: adapter_tree}`` + ``peft_cfg`` (a single PEFTConfig
+            or a {name: PEFTConfig} mapping for mixed-method serving) —
+            eager bank, unless ``hbm_budget`` is given (then store-paged);
+          * a checkpoint directory (str) — opened as a DISK-backED store:
+            only the index loads up front, adapters page in on admission;
+          * a list of ``"name=ckpt_dir"`` / ``"ckpt_dir"`` entries (the
+            launcher's ``--adapters`` form).
+        """
+        from repro import store as store_lib
         if self._merged:
             raise ValueError(
                 "this runtime's params already contain a merged adapter; "
                 "banking on top would rotate already-rotated activations — "
-                "build the bank from the unmerged base runtime")
-        bank = peft_lib.build_adapter_bank(peft_cfg, self.params,
-                                           adapters_by_name)
+                "attach to the unmerged base runtime")
+        if isinstance(source, (list, tuple)):
+            if peft_cfg is not None:
+                raise ValueError("checkpoint entries carry their own "
+                                 "PEFTConfigs — do not pass peft_cfg")
+            source, peft_cfg = store_lib.load_adapter_checkpoints(source)
+        if isinstance(source, str):
+            if peft_cfg is not None:
+                raise ValueError("a checkpoint directory carries its own "
+                                 "PEFTConfigs — do not pass peft_cfg")
+            source = store_lib.AdapterStore.open(source)
+        if isinstance(source, peft_lib.AdapterBank):
+            if peft_cfg is not None or hbm_budget is not None:
+                raise ValueError("a pre-built AdapterBank is attached "
+                                 "as-is — peft_cfg/hbm_budget do not apply")
+            bank = source
+        elif isinstance(source, store_lib.AdapterStore):
+            if peft_cfg is not None:
+                raise ValueError("an AdapterStore carries its own "
+                                 "PEFTConfigs — do not pass peft_cfg")
+            bank = store_lib.PagedAdapterBank(source, self.params,
+                                              hbm_budget=hbm_budget)
+        elif isinstance(source, Mapping):
+            if peft_cfg is None:
+                raise ValueError(
+                    "attach({name: adapters}) needs peft_cfg — a single "
+                    "PEFTConfig or a {name: PEFTConfig} mapping")
+            if hbm_budget is not None:
+                bank = store_lib.PagedAdapterBank(
+                    store_lib.AdapterStore.from_adapters(source, peft_cfg),
+                    self.params, hbm_budget=hbm_budget)
+            else:
+                bank = peft_lib.build_adapter_bank(peft_cfg, self.params,
+                                                   source)
+        else:
+            raise TypeError(f"cannot attach {type(source).__name__}: expected "
+                            "AdapterStore, AdapterBank, {name: adapters}, a "
+                            "checkpoint dir, or checkpoint entries")
         if self.is_quantized:
             _check_bank_quant_compatible(bank)
         rt = ModelRuntime(self.cfg, self.params, mesh=self.mesh, bank=bank)
         rt.quant_cfg = self.quant_cfg   # quantize-then-bank commutes
         return rt
+
+    def detach(self) -> "ModelRuntime":
+        """New runtime over the same params with no adapter bank."""
+        rt = ModelRuntime(self.cfg, self.params, mesh=self.mesh)
+        rt.quant_cfg = self.quant_cfg
+        rt._merged = self._merged
+        return rt
+
+    def with_bank(self, adapters_by_name: Dict[str, Tree],
+                  peft_cfg: "peft_lib.PEFTConfigs") -> "ModelRuntime":
+        """Deprecated: use ``attach(adapters_by_name, peft_cfg)``."""
+        _warn_once("ModelRuntime.with_bank", "ModelRuntime.attach")
+        return self.attach(adapters_by_name, peft_cfg)
 
     # -- quantized serving ----------------------------------------------------
     @property
@@ -199,61 +302,29 @@ class ModelRuntime:
         rt.quant_cfg = used_cfg
         return rt
 
-    # -- checkpoint integration ----------------------------------------------
+    # -- checkpoint integration (deprecated shims over repro.store) -----------
     @staticmethod
     def save_bank(directory: str, adapters_by_name: Dict[str, Tree],
                   peft_cfg: "peft_lib.PEFTConfigs", step: int = 0) -> None:
-        """Persist named RAW adapter trees + their PEFTConfig(s) as an
-        adapter-bank checkpoint (the format ``load_named_adapters`` reads
-        back; mixed-method banks record one method + spec per adapter name
-        in the index). Static: a built ``AdapterBank`` holds pre-processed
-        stacks, so the original adapter trees must be supplied, not a
-        runtime's bank."""
-        from repro.checkpoint.manager import CheckpointManager
-        CheckpointManager(directory).save_adapters(step, adapters_by_name,
-                                                   peft_cfg)
+        """Deprecated: use ``repro.store.AdapterStore.from_adapters(...)
+        .save(directory)`` (same on-disk format)."""
+        _warn_once("ModelRuntime.save_bank",
+                   "repro.store.AdapterStore.from_adapters(...).save(dir)")
+        from repro.store import AdapterStore
+        AdapterStore.from_adapters(adapters_by_name,
+                                   peft_cfg).save(directory, step)
 
     @staticmethod
     def load_named_adapters(entries: List[str]
                             ) -> Tuple[Dict[str, Tree],
                                        "peft_lib.PEFTConfigs"]:
-        """``entries``: ["name=ckpt_dir" | "ckpt_dir"] -> (adapters_by_name,
-        cfg) where ``cfg`` is a single PEFTConfig (homogeneous bank) or a
-        {name: PEFTConfig} mapping (mixed-method bank) — exactly what
-        ``with_bank`` accepts. A bare dir loads every adapter in that bank;
-        ``name=dir`` picks one. An entry that IS an existing directory is
-        always treated as bare, so checkpoint paths containing ``=`` are
-        not misparsed."""
-        import os
-
-        from repro.checkpoint.manager import CheckpointManager
-        adapters_by_name: Dict[str, Tree] = {}
-        cfg_by_name: Dict[str, peft_lib.PEFTConfig] = {}
-        for entry in entries:
-            if os.path.isdir(entry) or "=" not in entry:
-                name, path = "", entry
-            else:
-                # split at the FIRST '=': adapter names never contain '=',
-                # checkpoint paths may
-                name, _, path = entry.partition("=")
-            loaded, cfgs = CheckpointManager(path).restore_adapters()
-            if name:      # name=dir form: pick one adapter out of the bank
-                if name not in loaded:
-                    raise KeyError(f"{path} has adapters {list(loaded)}, "
-                                   f"not {name!r}")
-                loaded = {name: loaded[name]}
-            for n in loaded:
-                prev = cfg_by_name.get(n)
-                if prev is not None and prev != cfgs[n]:
-                    raise ValueError(f"adapter {n!r} ({entry}): PEFTConfig "
-                                     f"mismatch ({cfgs[n]} != {prev})")
-                cfg_by_name[n] = cfgs[n]
-            adapters_by_name.update(loaded)
-        if not cfg_by_name:
-            raise ValueError("no adapter checkpoints given")
-        if len(set(cfg_by_name.values())) == 1:   # frozen -> hashable
-            return adapters_by_name, next(iter(cfg_by_name.values()))
-        return adapters_by_name, cfg_by_name
+        """Deprecated: ``ModelRuntime.attach`` takes the entry list
+        directly (or use ``repro.store.load_adapter_checkpoints``)."""
+        _warn_once("ModelRuntime.load_named_adapters",
+                   "ModelRuntime.attach(entries) / "
+                   "repro.store.load_adapter_checkpoints")
+        from repro.store import load_adapter_checkpoints
+        return load_adapter_checkpoints(entries)
 
     # -- family ops / state ---------------------------------------------------
     def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0):

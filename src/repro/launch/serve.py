@@ -10,14 +10,19 @@ adapter bank.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
         --requests 16 --arrival-rate 4
 
-    # multi-adapter serving from saved banks (see ModelRuntime.save_bank /
-    # load_named_adapters); requests round-robin over the loaded adapters
+    # multi-adapter serving from saved checkpoints (ModelRuntime.attach);
+    # requests round-robin over the loaded adapters
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
         --adapters alice=/ckpts/alice bob=/ckpts/bob
 
     # fabricate a demo bank, save it, and round-trip through the loader
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
         --demo-adapters 3 --save-adapters /tmp/bank
+
+    # thousand-tenant mode: serve a whole adapter checkpoint as a DISK-
+    # backed store, paged into HBM under a fixed budget (LRU eviction)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+        --store-dir /ckpts/tenants --hbm-adapter-budget 64
 """
 from __future__ import annotations
 
@@ -101,6 +106,13 @@ def main():
                     metavar="NAME=CKPT_DIR",
                     help="load named adapters into a per-request bank "
                          "(continuous engine only)")
+    ap.add_argument("--store-dir", default=None,
+                    help="serve an adapter checkpoint dir as a DISK-backed "
+                         "AdapterStore: only the index loads up front; "
+                         "adapters page into HBM on admission")
+    ap.add_argument("--hbm-adapter-budget", type=int, default=0,
+                    help="max adapters resident in HBM at once (slot-"
+                         "compacted, LRU-paged); 0 = everything resident")
     ap.add_argument("--demo-adapters", type=int, default=0,
                     help="fabricate N random adapters as a demo bank")
     ap.add_argument("--demo-methods", default="gsoft",
@@ -130,19 +142,31 @@ def main():
     rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0), mesh=mesh)
     max_len = cfg.frontend_tokens + args.prompt_len + args.max_new + 8
 
-    # ---- adapter bank ------------------------------------------------------
-    adapters_by_name = {}
-    if args.adapters and args.demo_adapters:
-        raise SystemExit("--adapters and --demo-adapters are exclusive: "
-                         "load a saved bank OR fabricate one")
+    # ---- adapter bank / store ----------------------------------------------
+    from repro.store import AdapterStore, load_adapter_checkpoints
+    budget = args.hbm_adapter_budget or None
+    adapter_names = []
+    if sum(map(bool, (args.adapters, args.demo_adapters,
+                      args.store_dir))) > 1:
+        raise SystemExit("--adapters / --demo-adapters / --store-dir are "
+                         "exclusive: load a saved bank, fabricate one, OR "
+                         "serve a checkpoint dir as a paged store")
     if args.save_adapters and not (args.adapters or args.demo_adapters):
         raise SystemExit("--save-adapters needs a bank to save: pass "
                          "--demo-adapters N or --adapters name=dir")
-    if args.peft_demo and (args.adapters or args.demo_adapters):
+    if args.peft_demo and (args.adapters or args.demo_adapters or
+                           args.store_dir):
         raise SystemExit("--peft-demo merges an adapter INTO the weights; "
                          "combining it with a per-request bank would rotate "
                          "already-rotated activations — pick one")
-    if args.adapters or args.demo_adapters:
+    if args.store_dir:
+        store = AdapterStore.open(args.store_dir)
+        rt = rt.attach(store, hbm_budget=budget)
+        adapter_names = list(store.names)
+        print(f"adapter store: {len(store)} adapters on disk/host, "
+              f"HBM capacity {rt.bank.capacity} "
+              f"(per-method {rt.bank.caps})")
+    elif args.adapters or args.demo_adapters:
         if args.demo_adapters:
             # mixed-method demo bank: methods round-robin over the names
             meths = [m.strip() for m in args.demo_methods.split(",")
@@ -159,15 +183,17 @@ def main():
             adapters_by_name = make_demo_adapters(names, rt.params,
                                                   bank_peft)
         else:
-            adapters_by_name, bank_peft = ModelRuntime.load_named_adapters(
+            adapters_by_name, bank_peft = load_adapter_checkpoints(
                 args.adapters)
         if args.save_adapters:
-            rt.save_bank(args.save_adapters, adapters_by_name, bank_peft)
-            adapters_by_name, bank_peft = ModelRuntime.load_named_adapters(
+            AdapterStore.from_adapters(adapters_by_name,
+                                       bank_peft).save(args.save_adapters)
+            adapters_by_name, bank_peft = load_adapter_checkpoints(
                 [args.save_adapters])
             print(f"round-tripped {list(adapters_by_name)} through "
                   f"{args.save_adapters}")
-        rt = rt.with_bank(adapters_by_name, bank_peft)
+        rt = rt.attach(adapters_by_name, bank_peft, hbm_budget=budget)
+        adapter_names = list(adapters_by_name)
         print(f"adapter bank: {rt.bank.num_slots} slots "
               f"{list(rt.bank.names)}, methods {list(rt.bank.bank_methods)}")
 
@@ -200,7 +226,7 @@ def main():
 
     # ---- synthetic traffic -------------------------------------------------
     rng = np.random.default_rng(0)
-    names = list(adapters_by_name) if rt.banked else [None]
+    names = adapter_names if rt.banked and adapter_names else [None]
     requests = []
     for i in range(args.requests):
         plen = (int(rng.integers(4, args.prompt_len + 1))
@@ -229,6 +255,14 @@ def main():
     dt = time.perf_counter() - t0
 
     describe(eng, results, args.engine, dt)
+    residency = getattr(eng, "adapter_stats", lambda: None)()
+    if residency is not None:
+        print(f"store residency: hit_rate={residency['hit_rate']:.2f} "
+              f"evictions={residency['evictions']} "
+              f"page_in_p95={residency['page_in_ms_p95']:.1f}ms "
+              f"max_resident={residency['max_resident']}"
+              f"/{residency['capacity']} "
+              f"compaction={residency['compaction_ratio']:.2f}x")
     sample = results[min(results)]
     print("sample output tokens:", sample[:16])
     return 0

@@ -3,21 +3,20 @@
 Dispatch is keyed on ``ModelConfig.family`` via ``repro.models.registry``
 (every family registers a ``FamilyOps`` record; there is no hardcoded
 family boolean here). Serving entry points live on
-``repro.core.runtime.ModelRuntime``; the module-level ``prefill`` /
-``decode_step`` wrappers below are DEPRECATED shims that accept the old
-``bank``/``adapter_ids``/``bank_cfg`` kwarg triple and forward to the
-registry ops through an ``AdapterContext``.
+``repro.core.runtime.ModelRuntime``; per-request adapter state travels
+only as ``AdapterContext``/``PrefillRequest`` pytrees. The PR-3 era
+module-level ``prefill``/``decode_step`` shims (and their loose
+``bank``/``adapter_ids``/``bank_cfg`` kwargs) are GONE — CI greps them
+out so they cannot return.
 """
 from __future__ import annotations
 
 import math
-import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core.peft import AdapterContext, PrefillRequest
 from . import encdec, transformer  # noqa: F401  (register their FamilyOps)
 from . import registry
 from .layers import no_shard
@@ -65,62 +64,3 @@ def param_count(cfg: ModelConfig) -> int:
 
 def active_param_count(cfg: ModelConfig) -> int:
     return family_ops(cfg).active_param_count(cfg)
-
-
-# ---------------------------------------------------------------------------
-# DEPRECATED call surface — the old kwarg-threading prefill/decode_step.
-# Kept one release as shims: they accept the retired loose kwargs, bundle
-# them into an AdapterContext/PrefillRequest, and forward to the registry.
-# ---------------------------------------------------------------------------
-
-_LEGACY_KWARGS = ("bank", "adapter_ids", "bank_cfg")
-_legacy_warned = False
-
-
-def _warn_legacy(name: str) -> None:
-    global _legacy_warned
-    if not _legacy_warned:
-        warnings.warn(
-            f"repro.models.api.{name} is deprecated: use "
-            "repro.core.runtime.ModelRuntime (or the family registry ops) "
-            "with AdapterContext/PrefillRequest instead of the "
-            "bank/adapter_ids/bank_cfg kwargs",
-            DeprecationWarning, stacklevel=3)
-        _legacy_warned = True
-
-
-def _legacy_context(name: str, legacy: dict):
-    unknown = set(legacy) - set(_LEGACY_KWARGS)
-    if unknown:
-        raise TypeError(f"{name}() got unexpected keyword arguments "
-                        f"{sorted(unknown)}")
-    tree, ids, cfg = (legacy.get(k) for k in _LEGACY_KWARGS)
-    if (tree is None) != (ids is None):
-        raise ValueError(
-            f"{name}(): per-request rotation needs both the stacked adapter "
-            "tree and the slot ids — got half the legacy triple, which "
-            "would silently serve the un-adapted base model; migrate to "
-            "AdapterContext")
-    if tree is None:
-        return None
-    return AdapterContext(tree, jnp.asarray(ids, jnp.int32), cfg)
-
-
-def prefill(cfg: ModelConfig, params, batch, state, shard=no_shard,
-            last_idx=None, **legacy):
-    """DEPRECATED — build a PrefillRequest and call the registry prefill
-    (or use ModelRuntime). Old kwargs are forwarded once with a warning."""
-    _warn_legacy("prefill")
-    req = PrefillRequest(batch=batch, last_idx=last_idx,
-                         ctx=_legacy_context("prefill", legacy))
-    return family_ops(cfg).prefill(cfg, params, req, state, shard)
-
-
-def decode_step(cfg: ModelConfig, params, tokens, state, pos, shard=no_shard,
-                **legacy):
-    """DEPRECATED — call the registry decode_step with an AdapterContext
-    (or use ModelRuntime). Old kwargs are forwarded once with a warning."""
-    _warn_legacy("decode_step")
-    return family_ops(cfg).decode_step(
-        cfg, params, tokens, state, pos, shard,
-        ctx=_legacy_context("decode_step", legacy))

@@ -70,7 +70,8 @@ class Request:
 
 def _new_stats() -> Dict[str, Any]:
     return {"requests": 0, "tokens_generated": 0, "decode_steps": 0,
-            "prefills": 0, "wall_s": 0.0, "admission_log": []}
+            "prefills": 0, "wall_s": 0.0, "admission_log": [],
+            "admission_stalls": 0}
 
 
 def _stream_prefix(cfg: ModelConfig) -> int:
@@ -147,8 +148,9 @@ class ServeEngine:
     # -- submission -----------------------------------------------------------
     def add_request(self, prompt: List[int], max_new_tokens: int = 16,
                     adapter: Optional[str] = None) -> int:
-        self.rt.slot(adapter)   # validate eagerly (raises on unknown name
-        # or on naming an adapter when the runtime has no bank)
+        # validate eagerly: raises on a name neither resident nor in the
+        # host store, or on naming an adapter when the runtime has no bank
+        self.rt.validate_adapter(adapter)
         _check_capacity(self.cfg, prompt, max_new_tokens, self.max_len)
         rid = self._next_id
         self._next_id += 1
@@ -189,17 +191,27 @@ class ServeEngine:
         self.stats["requests"] += 1
         self.stats["tokens_generated"] += len(req.output)
         self._slot_req[slot] = None
+        self._slot_ids[slot] = 0            # identity until re-admitted
+        self.rt.release_adapter(req.adapter)   # unpin (store-backed banks)
 
     def _admit(self) -> None:
         """Fill free slots from the queue: single-request prefill, scatter
-        the fresh state into the slot, sample the first token."""
+        the fresh state into the slot, sample the first token. On a
+        store-backed runtime admission may page the adapter into HBM;
+        when every page of its method is pinned by in-flight requests the
+        acquire STALLS (FIFO head-of-line) — we stop admitting and keep
+        decoding resident slots, which is what eventually unpins pages."""
         for slot in range(self.max_batch):
             if not self._queue:
                 return
             if self._slot_req[slot] is not None:
                 continue
-            req = self._queue.popleft()
-            aid = self.rt.slot(req.adapter)
+            req = self._queue[0]
+            aid = self.rt.acquire_adapter(req.adapter)
+            if aid is None:                  # admission stall, not an error
+                self.stats["admission_stalls"] += 1
+                return
+            self._queue.popleft()
             last_idx = self._prefix + len(req.prompt) - 1
             feed = PrefillRequest(batch=self._feed(req.prompt),
                                   last_idx=jnp.asarray(last_idx, jnp.int32),
@@ -259,6 +271,12 @@ class ServeEngine:
         for r in out:
             self._results.pop(r.rid, None)
         return out
+
+    def adapter_stats(self) -> Optional[Dict[str, Any]]:
+        """Residency counters of a store-backed bank — hit rate, page-in
+        latency, evictions, resident/padded bytes (None on eager banks)."""
+        stats = getattr(self.rt.bank, "stats", None)
+        return stats() if callable(stats) else None
 
     def run(self) -> Dict[int, List[int]]:
         """Drain the queue to completion; returns {rid: tokens}."""

@@ -1,0 +1,12 @@
+"""Adapter store: host-offloaded named adapters + LRU-paged HBM banks.
+
+``AdapterStore`` is the host/disk residency tier ("one adapter per
+customer"); ``PagedAdapterBank`` is its fixed-budget HBM view with
+slot-compacted per-method stacks. ``ModelRuntime.attach`` accepts either
+a store (paged) or pre-built ``AdapterBank`` (eager) behind one API.
+"""
+from .paging import PagedAdapterBank, split_budget
+from .store import AdapterStore, load_adapter_checkpoints
+
+__all__ = ["AdapterStore", "PagedAdapterBank", "load_adapter_checkpoints",
+           "split_budget"]

@@ -21,6 +21,7 @@ from repro.core import peft as peft_lib
 from repro.core.orthogonal import orthogonality_error
 from repro.core.runtime import ModelRuntime
 from repro.serve.engine import ServeEngine, StaticServeEngine
+from repro.store import AdapterStore, load_adapter_checkpoints
 
 CFG = get_smoke_config("qwen2-72b")
 RT = ModelRuntime(CFG, key=jax.random.PRNGKey(0))
@@ -186,7 +187,7 @@ def test_mixed_method_bank_matches_solo_merged_runs():
     tokens equal its adapter's solo offline-merged run; the identity slot
     serves the base model."""
     adapters = _mixed_adapters()
-    rt = RT.with_bank(adapters, MIXED_CFGS)
+    rt = RT.attach(adapters, MIXED_CFGS)
     assert rt.bank.bank_methods == ("boft", "gsoft", "householder")
     prompt = [3, 4, 5, 6]
     eng = ServeEngine(rt, max_batch=4, max_len=48, eos_id=-1)
@@ -205,7 +206,7 @@ def test_mixed_method_bank_quantized_int8():
     tokens still equal each adapter's solo merged (then quantized) run —
     rotations stay bf16 for every method (QOFT recipe)."""
     adapters = _mixed_adapters()
-    qrt = RT.with_bank(adapters, MIXED_CFGS).quantized("int8")
+    qrt = RT.attach(adapters, MIXED_CFGS).quantized("int8")
     prompt = [3, 4, 5, 6]
     eng = ServeEngine(qrt, max_batch=4, max_len=48, eos_id=-1)
     rids = {n: eng.add_request(prompt, max_new_tokens=5, adapter=n)
@@ -226,10 +227,10 @@ def test_bank_rejects_weight_side_only_methods():
     capability comes from the registry, and the refusal names the method
     and the reason (lora: weight-side only)."""
     with pytest.raises(ValueError, match=r"'lora'.*weight-side"):
-        RT.with_bank({"t": _tuned_adapters(3, MIXED_CFGS["alice"])},
+        RT.attach({"t": _tuned_adapters(3, MIXED_CFGS["alice"])},
                      {"t": peft_lib.PEFTConfig(method="lora")})
     with pytest.raises(ValueError, match="double_gsoft.*output-side"):
-        RT.with_bank({}, peft_lib.PEFTConfig(method="double_gsoft"))
+        RT.attach({}, peft_lib.PEFTConfig(method="double_gsoft"))
     # bankable non-gsoft methods are now ACCEPTED (the old error path
     # rejected everything but gsoft)
     bank = peft_lib.build_adapter_bank(
@@ -258,11 +259,12 @@ def test_bank_config_consistency_errors():
 
 
 def test_checkpoint_roundtrip_preserves_method_metadata(tmp_path):
-    """save_bank -> load_named_adapters keeps each adapter's method + spec
-    (mixed-method bank), and the restored bank serves identical tokens."""
+    """AdapterStore.save -> load_adapter_checkpoints keeps each adapter's
+    method + spec (mixed-method bank), and the restored bank serves
+    identical tokens."""
     adapters = _mixed_adapters()
-    ModelRuntime.save_bank(str(tmp_path), adapters, MIXED_CFGS)
-    restored, cfgs = ModelRuntime.load_named_adapters([str(tmp_path)])
+    AdapterStore.from_adapters(adapters, MIXED_CFGS).save(str(tmp_path))
+    restored, cfgs = load_adapter_checkpoints([str(tmp_path)])
     assert isinstance(cfgs, dict)
     assert {n: c.method for n, c in cfgs.items()} == {
         "alice": "gsoft", "bob": "boft", "carol": "householder"}
@@ -270,7 +272,7 @@ def test_checkpoint_roundtrip_preserves_method_metadata(tmp_path):
     prompt = [4, 5, 6]
     outs = []
     for adp, cfg in ((adapters, MIXED_CFGS), (restored, cfgs)):
-        eng = ServeEngine(RT.with_bank(adp, cfg), max_batch=1, max_len=32,
+        eng = ServeEngine(RT.attach(adp, cfg), max_batch=1, max_len=32,
                           eos_id=-1)
         rids = [eng.add_request(prompt, max_new_tokens=3, adapter=n)
                 for n in ("bob", "carol")]
@@ -279,9 +281,9 @@ def test_checkpoint_roundtrip_preserves_method_metadata(tmp_path):
     assert outs[0] == outs[1]
     # homogeneous saves still load as ONE config (back-compat surface)
     single = peft_lib.PEFTConfig(method="gsoft", block_size=8)
-    ModelRuntime.save_bank(str(tmp_path / "homo"),
-                           {"x": _tuned_adapters(9, single)}, single)
-    _, cfg2 = ModelRuntime.load_named_adapters([str(tmp_path / "homo")])
+    AdapterStore.from_adapters(
+        {"x": _tuned_adapters(9, single)}, single).save(str(tmp_path / "homo"))
+    _, cfg2 = load_adapter_checkpoints([str(tmp_path / "homo")])
     assert cfg2 == single
 
 
@@ -304,12 +306,12 @@ def test_new_method_is_one_registry_entry_and_quant_gate():
         np.testing.assert_allclose(np.asarray(ad.materialize(spec, p, W)),
                                    np.asarray(W), atol=1e-6)
         adapters = {"t": _tuned_adapters(5, cfg)}
-        bank_rt = RT.with_bank(adapters, cfg)       # banks fine
+        bank_rt = RT.attach(adapters, cfg)       # banks fine
         assert bank_rt.bank.bank_methods == ("probe_hoft",)
         with pytest.raises(ValueError, match="probe_hoft"):
             bank_rt.quantized("int8")               # ...but not over int8
         with pytest.raises(ValueError, match="probe_hoft"):
-            RT.quantized("int8").with_bank(adapters, cfg)
+            RT.quantized("int8").attach(adapters, cfg)
     finally:
         del methods_lib._METHODS["probe_hoft"]
         peft_lib.spec_for.cache_clear()

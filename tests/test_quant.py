@@ -243,7 +243,7 @@ def test_quantized_runtime_guards():
 def test_with_bank_preserves_quantized_state():
     """Regression: quantize-then-bank must keep quant_cfg — a banked
     quantized runtime re-quantizing or checkpointing without it breaks."""
-    qrt = RT.quantized("int8").with_bank({"a": _tuned_adapters(3)}, PCFG)
+    qrt = RT.quantized("int8").attach({"a": _tuned_adapters(3)}, PCFG)
     assert qrt.is_quantized and qrt.quant_cfg.mode == "int8"
     with pytest.raises(ValueError, match="already quantized"):
         qrt.quantized("int8")
@@ -257,7 +257,7 @@ def test_adapter_bank_rotations_are_not_quantized():
     """Regression: quantization must never touch the GS rotations — the
     bank carries bf16/fp32 orthogonal blocks however the runtime's base
     weights are stored (QOFT rationale, DESIGN.md)."""
-    qrt = RT.with_bank({"a": _tuned_adapters(3)}, PCFG).quantized("int8")
+    qrt = RT.attach({"a": _tuned_adapters(3)}, PCFG).quantized("int8")
     assert quant.is_quantized_tree(qrt.params)
     bank_leaves = jax.tree_util.tree_leaves(
         qrt.bank.tree, is_leaf=quant.is_quant_tensor)
@@ -273,7 +273,7 @@ def test_bank_vs_merged_equality_in_quantized_mode():
     (both sides carry independent int8 rounding of W vs QW — measured
     max diff ~0.05 on logits with std ~1.0)."""
     adapters = {"a": _tuned_adapters(3)}
-    qrt_bank = RT.with_bank(adapters, PCFG).quantized("int8")
+    qrt_bank = RT.attach(adapters, PCFG).quantized("int8")
     merged = ModelRuntime(CFG, RT.params, adapters=adapters["a"],
                           peft_cfg=PCFG).quantized("int8")
     tokens = jnp.asarray([[5], [9]], jnp.int32)
@@ -293,7 +293,7 @@ def test_quantized_multi_adapter_serving_end_to_end():
     produce distinct outputs; identity slot == bare quantized model; the
     bank built before or after quantization serves identically."""
     adapters = {"alice": _tuned_adapters(7), "bob": _tuned_adapters(11)}
-    qrt = RT.with_bank(adapters, PCFG).quantized("int8")
+    qrt = RT.attach(adapters, PCFG).quantized("int8")
     prompt = [3, 4, 5, 6]
     eng = ServeEngine(qrt, max_batch=3, max_len=48, eos_id=-1)
     rids = {name: eng.add_request(prompt, max_new_tokens=5, adapter=name)
@@ -305,7 +305,7 @@ def test_quantized_multi_adapter_serving_end_to_end():
     rid = plain.add_request(prompt, max_new_tokens=5)
     assert results[rids[None]] == plain.run()[rid]
     # quantize-then-bank == bank-then-quantize
-    qrt2 = RT.quantized("int8").with_bank(adapters, PCFG)
+    qrt2 = RT.quantized("int8").attach(adapters, PCFG)
     eng2 = ServeEngine(qrt2, max_batch=1, max_len=48, eos_id=-1)
     rid2 = eng2.add_request(prompt, max_new_tokens=5, adapter="alice")
     assert eng2.run()[rid2] == results[rids["alice"]]
@@ -318,8 +318,8 @@ def test_quantized_banked_pallas_fused_matches_ref_path():
     pcfg_k = peft_lib.PEFTConfig(method="gsoft", block_size=8,
                                  use_pallas=True)
     qcfg_k = quant.QuantConfig(mode="int8", use_pallas=True)
-    qrt_k = RT.with_bank(adapters, pcfg_k).quantized(qcfg=qcfg_k)
-    qrt_ref = RT.with_bank(adapters, PCFG).quantized("int8")
+    qrt_k = RT.attach(adapters, pcfg_k).quantized(qcfg=qcfg_k)
+    qrt_ref = RT.attach(adapters, PCFG).quantized("int8")
     outs = []
     for rt in (qrt_k, qrt_ref):
         eng = ServeEngine(rt, max_batch=2, max_len=48, eos_id=-1)

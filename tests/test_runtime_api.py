@@ -1,8 +1,8 @@
 """Registry / AdapterContext / ModelRuntime API-surface tests: unknown
 families fail loud, the context pytrees survive jit, the bank error paths
-stay exercised through the new API, the deprecation shims warn exactly
-once, and the retired kwarg triple cannot creep back into model/serve
-signatures."""
+stay exercised through the attach API, the attach-era deprecation shims
+warn exactly once, the PR-3 api shims stay DELETED, and the retired kwarg
+triple cannot creep back into model/serve signatures."""
 import dataclasses
 import pathlib
 import re
@@ -15,6 +15,7 @@ import pytest
 
 from repro.config import ModelConfig, get_smoke_config
 from repro.core import peft as peft_lib
+from repro.core import runtime as runtime_lib
 from repro.core.runtime import ModelRuntime
 from repro.models import api, registry
 
@@ -117,10 +118,10 @@ def test_context_group_and_rotator():
 
 def test_bank_build_rejects_double_gsoft_and_use_scale():
     with pytest.raises(ValueError, match="double_gsoft|gsoft"):
-        ModelRuntime(CFG, PARAMS).with_bank(
+        ModelRuntime(CFG, PARAMS).attach(
             {}, peft_lib.PEFTConfig(method="double_gsoft"))
     with pytest.raises(ValueError, match="use_scale"):
-        ModelRuntime(CFG, PARAMS).with_bank(
+        ModelRuntime(CFG, PARAMS).attach(
             {}, peft_lib.PEFTConfig(method="gsoft", use_scale=True))
 
 
@@ -128,11 +129,11 @@ def test_bank_build_rejects_moe_batch_dims():
     moe_cfg = get_smoke_config("qwen3-moe-30b-a3b")
     rt = ModelRuntime(moe_cfg, key=jax.random.PRNGKey(0))
     with pytest.raises(ValueError, match="batch dims|routing-aware"):
-        rt.with_bank({}, PCFG)
+        rt.attach({}, PCFG)
 
 
 def test_runtime_slot_validation():
-    rt = ModelRuntime(CFG, PARAMS).with_bank({}, PCFG)
+    rt = ModelRuntime(CFG, PARAMS).attach({}, PCFG)
     assert rt.slot(None) == 0
     with pytest.raises(KeyError, match="nope"):
         rt.slot("nope")
@@ -144,17 +145,21 @@ def test_runtime_slot_validation():
         ModelRuntime(CFG, PARAMS).slot("alice")
 
 
-def test_load_named_adapters_handles_dir_with_equals(tmp_path):
+def test_load_adapter_checkpoints_handles_dir_with_equals(tmp_path):
     """A bare checkpoint dir whose PATH contains '=' must not be misparsed
     as a name=dir entry (the --save-adapters round-trip path)."""
+    from repro.store import AdapterStore, load_adapter_checkpoints
     adapters = {"a0": peft_lib.init_peft(PCFG, PARAMS, jax.random.PRNGKey(2))}
     ckpt = tmp_path / "run=3"
-    ModelRuntime.save_bank(str(ckpt), adapters, PCFG)
-    loaded, cfg = ModelRuntime.load_named_adapters([str(ckpt)])
+    AdapterStore.from_adapters(adapters, PCFG).save(str(ckpt))
+    loaded, cfg = load_adapter_checkpoints([str(ckpt)])
     assert sorted(loaded) == ["a0"] and cfg == PCFG
     # explicit name=dir still works against the same checkpoint
-    picked, _ = ModelRuntime.load_named_adapters([f"a0={ckpt}"])
+    picked, _ = load_adapter_checkpoints([f"a0={ckpt}"])
     assert sorted(picked) == ["a0"]
+    # attach() takes the entry list directly — one surface end to end
+    rt = ModelRuntime(CFG, PARAMS).attach([f"a0={ckpt}"])
+    assert rt.bank.names == (peft_lib.BASE_ADAPTER, "a0")
 
 
 def test_runtime_rejects_merge_plus_bank():
@@ -166,7 +171,7 @@ def test_runtime_rejects_merge_plus_bank():
     # banking on top of already-merged params would double-apply adapters
     merged = ModelRuntime(CFG, PARAMS, adapters=adapters, peft_cfg=PCFG)
     with pytest.raises(ValueError, match="already-rotated|merged"):
-        merged.with_bank({}, PCFG)
+        merged.attach({}, PCFG)
     # half-passed merge args would silently serve the base model
     with pytest.raises(ValueError, match="BOTH"):
         ModelRuntime(CFG, PARAMS, adapters=adapters)
@@ -219,55 +224,52 @@ def test_runtime_abstract_params_for_dryrun():
 # deprecation shims
 # ---------------------------------------------------------------------------
 
-def test_legacy_api_warns_exactly_once_per_process():
-    api._legacy_warned = False          # isolate from other tests
-    state = api.init_decode_state(CFG, 1, 8)
-    tokens = jnp.ones((1, 1), jnp.int32)
+def test_retired_api_shims_are_gone():
+    """The PR-3 module-level prefill/decode_step shims on the api module
+    had one release of backward compatibility and are now deleted —
+    serving goes through ModelRuntime and the family registry only."""
+    assert not hasattr(api, "prefill")
+    assert not hasattr(api, "decode_step")
+    assert not hasattr(api, "_legacy_warned")
+    # the per-family ops are still the real surface
+    assert callable(api.family_ops(CFG).prefill)
+    assert callable(api.family_ops(CFG).decode_step)
+
+
+def test_attach_shims_warn_once_and_forward(tmp_path):
+    """with_bank/save_bank/load_named_adapters each DeprecationWarn exactly
+    once per process and forward to the attach/store surface."""
+    from repro.store import AdapterStore
+    runtime_lib._deprecation_warned.clear()     # isolate from other tests
+    adapters = {"a0": peft_lib.init_peft(PCFG, PARAMS, jax.random.PRNGKey(3))}
+    rt = ModelRuntime(CFG, PARAMS)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        l1, _ = api.decode_step(CFG, PARAMS, tokens, state,
-                                jnp.asarray(0, jnp.int32))
-        state2 = api.init_decode_state(CFG, 1, 8)
-        api.prefill(CFG, PARAMS, {"tokens": jnp.ones((1, 4), jnp.int32)},
-                    state2)
+        banked = rt.with_bank(adapters, PCFG)
+        rt.with_bank(adapters, PCFG)            # second call: silent
+        ModelRuntime.save_bank(str(tmp_path / "ck"), adapters, PCFG)
+        loaded, cfg = ModelRuntime.load_named_adapters(
+            [f"a0={tmp_path / 'ck'}"])
     dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1, [str(w.message) for w in caught]
-    assert "ModelRuntime" in str(dep[0].message)
-    # the shim forwards to the registry path — same numbers
-    state3 = api.init_decode_state(CFG, 1, 8)
-    l2, _ = api.family_ops(CFG).decode_step(CFG, PARAMS, tokens, state3,
-                                            jnp.asarray(0, jnp.int32))
-    np.testing.assert_allclose(np.asarray(l1, np.float32),
-                               np.asarray(l2, np.float32))
+    assert len(dep) == 3, [str(w.message) for w in caught]
+    for w in dep:
+        assert "attach" in str(w.message) or "AdapterStore" in str(w.message)
+    # ...and they forward: with_bank produced a working bank, save_bank a
+    # loadable store, load_named_adapters the adapters themselves
+    assert banked.bank.names == (peft_lib.BASE_ADAPTER, "a0")
+    assert AdapterStore.open(str(tmp_path / "ck")).names == ("a0",)
+    assert sorted(loaded) == ["a0"] and cfg == PCFG
 
 
-def test_legacy_kwarg_triple_still_forwards():
-    """Old-style bank/adapter_ids/bank_cfg kwargs reach the new context
-    path (one release of backward compatibility)."""
-    api._legacy_warned = False
+def test_attach_rejects_bad_sources():
+    rt = ModelRuntime(CFG, PARAMS)
+    with pytest.raises(TypeError, match="attach"):
+        rt.attach(42)
+    # peft_cfg only makes sense for raw adapter mappings
     bank = peft_lib.build_adapter_bank(PCFG, PARAMS, {})
-    tokens = jnp.asarray([[5]], jnp.int32)
-    state = api.init_decode_state(CFG, 1, 8)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy, _ = api.decode_step(
-            CFG, PARAMS, tokens, state, jnp.asarray(0, jnp.int32),
-            **{"bank": bank.tree, "adapter_ids": jnp.zeros((1,), jnp.int32),
-               "bank_cfg": PCFG})
-    state = api.init_decode_state(CFG, 1, 8)
-    new, _ = api.family_ops(CFG).decode_step(
-        CFG, PARAMS, tokens, state, jnp.asarray(0, jnp.int32),
-        ctx=bank.context([0]))
-    np.testing.assert_allclose(np.asarray(legacy, np.float32),
-                               np.asarray(new, np.float32), atol=1e-6)
-    with pytest.raises(TypeError, match="unexpected"):
-        api.decode_step(CFG, PARAMS, tokens, state,
-                        jnp.asarray(0, jnp.int32), bogus=1)
-    # half the triple must raise, not silently serve the base model
-    with pytest.raises(ValueError, match="half the legacy triple"):
-        api.decode_step(CFG, PARAMS, tokens, state,
-                        jnp.asarray(0, jnp.int32),
-                        **{"bank": bank.tree, "bank_cfg": PCFG})
+    with pytest.raises(ValueError, match="peft_cfg"):
+        rt.attach(bank, PCFG)
+    assert rt.attach(bank).detach().bank is None
 
 
 # ---------------------------------------------------------------------------
@@ -293,3 +295,30 @@ def test_no_retired_adapter_kwargs_in_model_or_serve_signatures():
                     offenders.append(f"{path.relative_to(SRC)}:{i}: {line.strip()}")
     assert scanned > 5, "guard expected to scan the model/serve/train stack"
     assert not offenders, "\n".join(offenders)
+
+
+def test_no_retired_api_or_bank_calls_outside_runtime():
+    """Mirror of the CI 'retired api-shim' and 'one-attach-surface' greps:
+    the api-module prefill/decode_step names are gone everywhere, and the
+    deprecated with_bank/save_bank/load_named_adapters shims are called
+    only from their definitions in core/runtime.py (and the shim tests)."""
+    root = SRC.parents[1]
+    api_pat = re.compile(
+        r"\bapi\.(prefill|decode_step)\b"
+        r"|from repro\.models\.api import[^#]*\b(prefill|decode_step)\b")
+    shim_pat = re.compile(r"\.(with_bank|load_named_adapters|save_bank)\(")
+    api_offenders, shim_offenders = [], []
+    scanned = 0
+    for sub in ("src/repro", "benchmarks", "examples", "tests"):
+        for path in sorted((root / sub).rglob("*.py")):
+            scanned += 1
+            rel = str(path.relative_to(root))
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if api_pat.search(line):
+                    api_offenders.append(f"{rel}:{i}: {line.strip()}")
+                if (shim_pat.search(line) and sub != "tests"
+                        and rel != "src/repro/core/runtime.py"):
+                    shim_offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert scanned > 20, "guard expected to scan the whole python surface"
+    assert not api_offenders, "\n".join(api_offenders)
+    assert not shim_offenders, "\n".join(shim_offenders)

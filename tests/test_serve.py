@@ -9,6 +9,7 @@ from repro.config import get_smoke_config
 from repro.core import peft as peft_lib
 from repro.core.runtime import ModelRuntime
 from repro.serve.engine import ServeEngine, StaticServeEngine
+from repro.store import AdapterStore, load_adapter_checkpoints
 
 CFG = get_smoke_config("qwen2-72b")
 RT = ModelRuntime(CFG, key=jax.random.PRNGKey(0))
@@ -86,7 +87,7 @@ def test_multi_adapter_slots_match_merged_references():
     """Per-request adapters served from one bank == each adapter merged
     offline into its own dedicated engine; the identity slot == no-PEFT."""
     adapters = {"alice": _tuned_adapters(7), "bob": _tuned_adapters(11)}
-    rt = RT.with_bank(adapters, PCFG)
+    rt = RT.attach(adapters, PCFG)
     assert rt.bank.names == (peft_lib.BASE_ADAPTER, "alice", "bob")
     prompt = [3, 4, 5, 6]
     eng = ServeEngine(rt, max_batch=3, max_len=48, eos_id=-1)
@@ -125,7 +126,7 @@ def test_banked_serving_kernel_path_matches_merged():
     pcfg_k = peft_lib.PEFTConfig(method="gsoft", block_size=8,
                                  use_pallas=True)
     adapters = {"a": _tuned_adapters(3)}
-    eng = ServeEngine(RT.with_bank(adapters, pcfg_k), max_batch=2,
+    eng = ServeEngine(RT.attach(adapters, pcfg_k), max_batch=2,
                       max_len=48, eos_id=-1)
     rid = eng.add_request([3, 4, 5, 6], max_new_tokens=4, adapter="a")
     assert eng.run()[rid] == _solo([3, 4, 5, 6], 4, adapters["a"])
@@ -152,7 +153,7 @@ def test_eos_frees_slot_and_admits_queued_request():
 
 def test_identity_bank_matches_no_peft_engine():
     """A bank with only the identity slot serves exactly the base model."""
-    banked = ServeEngine(RT.with_bank({}, PCFG), max_batch=2, max_len=32,
+    banked = ServeEngine(RT.attach({}, PCFG), max_batch=2, max_len=32,
                          eos_id=-1)
     plain = ServeEngine(RT, max_batch=2, max_len=32, eos_id=-1)
     for eng in (banked, plain):
@@ -184,11 +185,12 @@ def test_adapter_bank_build_validation():
 
 
 def test_adapter_bank_checkpoint_roundtrip(tmp_path):
-    """save_bank -> load_named_adapters preserves trees + PEFTConfig, and
-    the restored bank serves identically (launch --adapters path)."""
+    """AdapterStore.save -> load_adapter_checkpoints preserves trees +
+    PEFTConfig, and the restored bank serves identically (the launcher's
+    --adapters path)."""
     adapters = {"alice": _tuned_adapters(7), "bob": _tuned_adapters(11)}
-    RT.save_bank(str(tmp_path), adapters, PCFG)
-    restored, cfg2 = ModelRuntime.load_named_adapters([str(tmp_path)])
+    AdapterStore.from_adapters(adapters, PCFG).save(str(tmp_path))
+    restored, cfg2 = load_adapter_checkpoints([str(tmp_path)])
     assert cfg2 == PCFG
     assert sorted(restored) == ["alice", "bob"]
     for name in adapters:
@@ -200,7 +202,7 @@ def test_adapter_bank_checkpoint_roundtrip(tmp_path):
     # restored bank produces the same tokens
     outs = []
     for ad, pc in ((adapters, PCFG), (restored, cfg2)):
-        eng = ServeEngine(RT.with_bank(ad, pc), max_batch=1, max_len=32,
+        eng = ServeEngine(RT.attach(ad, pc), max_batch=1, max_len=32,
                           eos_id=-1)
         eng.add_request([4, 5, 6], max_new_tokens=3, adapter="bob")
         outs.append(eng.run()[0])
