@@ -77,9 +77,9 @@ def run():
         1, 200, size=(2, 16)), jnp.int32)
     req = PrefillRequest(batch={"tokens": toks},
                          last_idx=jnp.asarray([15, 15], jnp.int32))
-    st = rt.init_decode_state(2, 32)
+    st = rt.decode_state(2, 32)
     logits, _ = rt.prefill(req, st)
-    st = qrt.init_decode_state(2, 32)
+    st = qrt.decode_state(2, 32)
     qlogits, _ = qrt.prefill(req, st)
     l32 = np.asarray(logits, np.float32)
     err = float(np.max(np.abs(l32 - np.asarray(qlogits, np.float32))))

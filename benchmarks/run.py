@@ -14,13 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-list of {table1,table2,table3,micro,kernels,"
-                         "serve,quant,methods,store}")
+                         "serve,quant,methods,store,kv}")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     from . import table1_glue, table2_subject, table3_lipconvnet
-    from . import kernels_bench, method_bench, micro_gs, quant_bench, \
-        serve_bench, store_bench
+    from . import kernels_bench, kv_bench, method_bench, micro_gs, \
+        quant_bench, serve_bench, store_bench
 
     suites = [
         ("table1", table1_glue.run),
@@ -32,6 +32,7 @@ def main() -> None:
         ("quant", quant_bench.run),
         ("methods", method_bench.run),
         ("store", store_bench.run),
+        ("kv", kv_bench.run),
     ]
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -109,6 +109,8 @@ class ModelRuntime:
         self._prefill = None
         self._loss = None
         self._slot_prefill: Dict[Tuple[int, int], Any] = {}
+        self._paged_decode = None
+        self._chunk_prefill = None
 
     @classmethod
     def abstract(cls, cfg: ModelConfig, mesh=None) -> "ModelRuntime":
@@ -330,6 +332,25 @@ class ModelRuntime:
     def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0):
         return self._ops.init_decode_state(self.cfg, batch, max_len, enc_len)
 
+    def decode_state(self, batch: int, max_len: int, enc_len: int = 0):
+        """Contiguous decode state (one max_len KV region per slot). THE
+        engine/bench-facing constructor — a grep guard keeps raw
+        ``init_decode_state(`` calls confined to this module so every
+        contiguous allocation is auditable against the paged path."""
+        return self.init_decode_state(batch, max_len, enc_len)
+
+    def paged_state(self, batch: int, num_pages: int, page_size: int,
+                    max_pages: int):
+        """Paged decode state: per-layer (num_pages, page_size, K, D) pools
+        shared by all slots + a (batch, max_pages + 1) int32 page table per
+        slot (sentinel garbage column last). Raises for families without a
+        paged serve path."""
+        if self._ops.init_paged_state is None:
+            raise ValueError(f"family {self.cfg.family!r} has no paged "
+                             "KV serve path")
+        return self._ops.init_paged_state(self.cfg, batch, num_pages,
+                                          page_size, max_pages)
+
     def active_param_count(self) -> int:
         return self._ops.active_param_count(self.cfg)
 
@@ -355,6 +376,26 @@ class ModelRuntime:
         if self._decode is None:
             self._decode = jax.jit(self.build_decode(), donate_argnums=(3,))
         return self._decode
+
+    def paged_decode_fn(self):
+        """jitted (params, ctx, tokens, state, pos) ->
+        (next_tok, logits, state) through page tables; state donated."""
+        if self._paged_decode is None:
+            from repro.train.steps import build_paged_decode_step
+            self._paged_decode = jax.jit(
+                build_paged_decode_step(self.cfg, self.mesh),
+                donate_argnums=(3,))
+        return self._paged_decode
+
+    def chunk_prefill_fn(self):
+        """jitted (params, req, state, slot, start) -> (first, state);
+        state donated. One trace per chunk width (req token shape)."""
+        if self._chunk_prefill is None:
+            from repro.train.steps import build_chunk_prefill_step
+            self._chunk_prefill = jax.jit(
+                build_chunk_prefill_step(self.cfg, self.mesh),
+                donate_argnums=(2,))
+        return self._chunk_prefill
 
     def slot_prefill_fn(self, max_len: int, enc_len: int = 0):
         """jitted (params, PrefillRequest, state, slot) -> (first, state);

@@ -32,6 +32,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import os
 import time
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
@@ -96,6 +98,17 @@ def gs_qmm_key(r: int, b: int, n: int, dtype,
                backend: Optional[str] = None) -> Key:
     """Fused rotate+quantized-matmul: GS factors (r, b, b), W_q (r*b, n)."""
     return ("gs_qmm", r, b, n, jnp.dtype(dtype).name, backend or _backend())
+
+
+def paged_attn_key(h: int, kh: int, d: int, page: int, dtype,
+                   backend: Optional[str] = None) -> Key:
+    """Paged decode attention (kernels/flash_attention.py): one query token
+    per row gathered through a page table over the shared KV page pool.
+    The launch geometry is fixed by (heads, page) — the key exists so the
+    serving path resolves through the same registry (and the persisted
+    tuning cache) as every other kernel."""
+    return ("paged_attn", h, kh, d, page, jnp.dtype(dtype).name,
+            backend or _backend())
 
 
 # Banked (per-request, multi-adapter) activation-side transforms resolve
@@ -170,6 +183,7 @@ def install_tunings(entries: Iterable[Tuple]) -> None:
 def get_tuning(key: Key) -> Tuning:
     """Resolve launch geometry: override > wildcard override > autotuned >
     heuristic default."""
+    _ensure_cache_loaded()
     if key in _OVERRIDES:
         return _OVERRIDES[key]
     wc = _wildcard(key)
@@ -191,6 +205,69 @@ def clear_tunings() -> None:
     _OVERRIDES.clear()
     _TUNED.clear()
     _CONFIG_KEYS.clear()
+
+
+# ---------------------------------------------------------------------------
+# tuning-cache persistence: autotuned results survive the process
+# ---------------------------------------------------------------------------
+# Autotuning times real kernel launches, so re-deriving the same geometry
+# every process is pure waste. ``save_tuning_cache`` serializes _TUNED to
+# JSON keyed exactly like the in-memory registry ((op, *shape_sig, dtype,
+# backend) tuples); ``load_tuning_cache`` restores entries WITHOUT clobbering
+# results timed in this process, and config overrides still outrank both.
+# Set ``REPRO_TUNING_CACHE=/path/cache.json`` to make the round trip
+# automatic: lazily loaded on the first resolution, written through after
+# every autotune_* call.
+
+TUNING_CACHE_ENV = "REPRO_TUNING_CACHE"
+_cache_loaded = False
+
+
+def save_tuning_cache(path: Optional[str] = None) -> Optional[str]:
+    """Write every autotuned entry to ``path`` (default: $REPRO_TUNING_CACHE;
+    no-op returning None when neither names a file)."""
+    path = path or os.environ.get(TUNING_CACHE_ENV)
+    if not path:
+        return None
+    entries = [{"key": list(k), "token_tile": t.token_tile,
+                "group_tile": t.group_tile}
+               for k, t in sorted(_TUNED.items(),
+                                  key=lambda kv: tuple(map(str, kv[0])))]
+    with open(path, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=2)
+    return path
+
+
+def load_tuning_cache(path: Optional[str] = None) -> int:
+    """Merge a saved cache into the autotuned tier (results timed in THIS
+    process win ties; explicit overrides always outrank). Returns the number
+    of entries loaded; missing/unset path -> 0."""
+    path = path or os.environ.get(TUNING_CACHE_ENV)
+    if not path or not os.path.exists(path):
+        return 0
+    with open(path) as f:
+        data = json.load(f)
+    n = 0
+    for e in data.get("entries", ()):
+        key = tuple(e["key"])
+        if key not in _TUNED:
+            _TUNED[key] = Tuning(token_tile=int(e["token_tile"]),
+                                 group_tile=int(e.get("group_tile", 0)))
+            n += 1
+    return n
+
+
+def _ensure_cache_loaded() -> None:
+    global _cache_loaded
+    if not _cache_loaded:
+        _cache_loaded = True
+        if os.environ.get(TUNING_CACHE_ENV):
+            load_tuning_cache()
+
+
+def _write_through() -> None:
+    if os.environ.get(TUNING_CACHE_ENV):
+        save_tuning_cache()
 
 
 def pick_chunk(t: int, chunk: int) -> int:
@@ -223,6 +300,7 @@ def autotune_bdmm(r: int, bo: int, bi: int, t: int, dtype=jnp.float32, *,
                   iters: int = 5) -> Tuning:
     """Search (token_tile, group_tile) by timing real launches; cache best."""
     key = bdmm_key(r, bo, bi, dtype)
+    _ensure_cache_loaded()
     if key in _TUNED:
         return _TUNED[key]
     if group_tiles is None:
@@ -241,6 +319,7 @@ def autotune_bdmm(r: int, bo: int, bi: int, t: int, dtype=jnp.float32, *,
             if us < best_us:
                 best, best_us = Tuning(token_tile=tt, group_tile=gt), us
     _TUNED[key] = best
+    _write_through()
     return best
 
 
@@ -248,6 +327,7 @@ def autotune_gs(r: int, b: int, t: int, dtype=jnp.float32, *,
                 token_tiles: Sequence[int] = DEFAULT_TOKEN_TILES,
                 iters: int = 5) -> Tuning:
     key = gs_key(r, b, dtype)
+    _ensure_cache_loaded()
     if key in _TUNED:
         return _TUNED[key]
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -263,6 +343,7 @@ def autotune_gs(r: int, b: int, t: int, dtype=jnp.float32, *,
         if us < best_us:
             best, best_us = Tuning(token_tile=tt), us
     _TUNED[key] = best
+    _write_through()
     return best
 
 
@@ -273,6 +354,7 @@ def autotune_qmm(k: int, n: int, t: int, dtype=jnp.bfloat16, *,
     """Search (token_tile, n_tile) for the quantized matmul; cache best.
     ``dtype`` is the activation dtype — codes are int8."""
     key = qmm_key(k, n, dtype)
+    _ensure_cache_loaded()
     if key in _TUNED:
         return _TUNED[key]
     if n_tiles is None:
@@ -292,6 +374,7 @@ def autotune_qmm(k: int, n: int, t: int, dtype=jnp.bfloat16, *,
             if us < best_us:
                 best, best_us = Tuning(token_tile=tt, group_tile=nt), us
     _TUNED[key] = best
+    _write_through()
     return best
 
 

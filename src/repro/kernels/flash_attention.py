@@ -121,3 +121,94 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         interpret=interpret,
     )(q, k, v)
     return out[:, :sq] if pq else out
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (PagedAttention-style KV page pool + page tables)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(tbl_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, page: int, kh: int,
+                         g: int, scale: float, nw: int):
+    """Grid (B, W): one query token per batch row, KV pages innermost.
+
+    The page table rides the scalar-prefetch channel so each (b, j) step's
+    K/V BlockSpec index_map gathers physical page ``tbl[b, j]`` straight
+    from the pool — the kernel body never sees an indirection. Running
+    (m, l, acc) stats live in VMEM scratch across the page dimension, so a
+    row's whole history is one pass over its resident pages."""
+    b, j = pl.program_id(0), pl.program_id(1)
+    del tbl_ref  # consumed by the BlockSpec index_maps
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kvlen = kvl_ref[b]
+
+    @pl.when(j * page < kvlen)           # skip pages past the filled prefix
+    def _():
+        d = q_ref.shape[-1]
+        q = (q_ref[0] * scale).reshape(kh, g, d)         # (K, G, D)
+        k = jnp.swapaxes(k_ref[0], 0, 1)                 # (K, page, D)
+        v = jnp.swapaxes(v_ref[0], 0, 1)
+        s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (kh, g, page), 2)
+        s = jnp.where(kpos < kvlen, s, NEG_INF)          # (K, G, page)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nw - 1)
+    def _():
+        d = q_ref.shape[-1]
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[..., None]).reshape(kh * g, d).astype(
+            o_ref.dtype)
+
+
+def paged_flash_decode(q: Array, k_pages: Array, v_pages: Array,
+                       table: Array, kv_len: Array, *, scale: float = 0.0,
+                       interpret: bool = False) -> Array:
+    """q: (B, H, D); k_pages/v_pages: (P, page, K, D); table: (B, W) int32;
+    kv_len: (B,) -> (B, H, D). Semantics: kernels/ref.py::paged_attn_ref."""
+    b, h, d = q.shape
+    _, page, kh, _ = k_pages.shape
+    g = h // kh
+    w = table.shape[1]
+    scale = scale or 1.0 / math.sqrt(d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # table + kv_len
+        grid=(b, w),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, j, tbl, kvl: (bi, 0, 0)),
+            pl.BlockSpec((1, page, kh, d),
+                         lambda bi, j, tbl, kvl: (tbl[bi, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, kh, d),
+                         lambda bi, j, tbl, kvl: (tbl[bi, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, j, tbl, kvl: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kh, g), jnp.float32),
+            pltpu.VMEM((kh, g), jnp.float32),
+            pltpu.VMEM((kh, g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, page=page, kh=kh, g=g,
+                          scale=scale, nw=w),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), kv_len.astype(jnp.int32), q, k_pages, v_pages)

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from . import dispatch, ref
 from .dispatch import Tuning
-from .flash_attention import flash_attention
+from .flash_attention import flash_attention, paged_flash_decode
 from .ssd import ssd_pallas
 
 Array = jnp.ndarray
@@ -198,6 +198,26 @@ def gs_q_matmul_banked(L: Array, R: Array, x: Array, q: Array, scale: Array,
     bsz, t, d = xr.shape
     y = ref.q_matmul_ref(xr.reshape(bsz * t, d), q, scale)
     return y.reshape(bsz, t, y.shape[-1])
+
+
+def paged_attention(q: Array, k_pages: Array, v_pages: Array, table: Array,
+                    kv_len: Array, *, scale: float = 0.0,
+                    use_pallas: bool = False) -> Array:
+    """Single-token decode attention through a KV page table.
+
+    q: (B, H, D) one query per row; k_pages / v_pages: (P, page, K, D)
+    shared page pools; table: (B, W) int32 page ids (unused entries point
+    at the garbage page 0); kv_len: (B,) valid prefix length per row.
+    The serving engine's paged decode hot path (ISSUE 7 / vLLM-style)."""
+    if use_pallas:
+        b, h, d = q.shape
+        _, page, kh, _ = k_pages.shape
+        # fixed launch geometry today, but resolve through the registry so
+        # the persisted tuning cache covers this call site too
+        dispatch.get_tuning(dispatch.paged_attn_key(h, kh, d, page, q.dtype))
+        return paged_flash_decode(q, k_pages, v_pages, table, kv_len,
+                                  scale=scale, interpret=_interpret())
+    return ref.paged_attn_ref(q, k_pages, v_pages, table, kv_len, scale=scale)
 
 
 def ssd(x: Array, loga: Array, B: Array, C: Array, chunk: int = 64,

@@ -222,3 +222,30 @@ def ssd_chunked_ref(x: Array, loga: Array, B: Array, C: Array,
     S0 = jnp.zeros((H, N, P), f32)
     _, y = jax.lax.scan(per_chunk, S0, (xc, lac, Bc, Cc))
     return y.reshape(T, H, P).astype(x.dtype)
+
+
+def paged_attn_ref(q: Array, k_pages: Array, v_pages: Array, table: Array,
+                   kv_len: Array, scale: float = 0.0) -> Array:
+    """Paged decode-attention oracle: one query token per row attends over
+    the KV pages its page table maps to.
+
+    q: (B, H, D); k_pages, v_pages: (P, page, K, D) — the shared page pool;
+    table: (B, W) int32 page table (stream page j of row b lives in physical
+    page table[b, j]); kv_len: (B,) valid-key counts. GQA: H = K * G.
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    _, page, kh, _ = k_pages.shape
+    g = h // kh
+    scale = scale or 1.0 / (d ** 0.5)
+    # gather stream-ordered KV: (B, W*page, K, D)
+    k = k_pages[table].reshape(b, -1, kh, d)
+    v = v_pages[table].reshape(b, -1, kh, d)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, kh, g, d)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(k.shape[1])
+    s = jnp.where(kpos[None, None, None, :] < kv_len[:, None, None, None],
+                  s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

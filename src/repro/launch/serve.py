@@ -36,8 +36,8 @@ from repro.config import get_config, get_smoke_config, parse_overrides
 from repro.core import peft as peft_lib
 from repro.core.runtime import ModelRuntime
 from repro.launch.mesh import make_mesh
-from repro.serve.engine import (ServeEngine, StaticServeEngine,
-                                latency_percentiles)
+from repro.serve.engine import (PagedServeEngine, ServeEngine,
+                                StaticServeEngine, latency_percentiles)
 
 
 def make_demo_adapters(names, params, peft_cfg, seed=1, scale=0.1):
@@ -90,8 +90,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--engine", choices=("continuous", "static"),
-                    default="continuous")
+    ap.add_argument("--engine", choices=("continuous", "static", "paged"),
+                    default="continuous",
+                    help="'paged': fixed-size KV pages + per-slot page "
+                         "tables, chunked prefill, shared-prefix caching")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
@@ -129,6 +131,16 @@ def main():
                     default="none",
                     help="serve with quantized base weights (per-channel "
                          "int8 / fp8 stub); GS adapter rotations stay bf16")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="KV page size in tokens (paged engine)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens fed per scheduler tick (paged "
+                         "engine): decode latency is bounded by one chunk, "
+                         "not one prompt")
+    ap.add_argument("--hbm-kv-budget", type=int, default=0,
+                    help="KV pool HBM budget in BYTES (paged engine); the "
+                         "page count is static — exhaustion stalls "
+                         "admission. 0 = stall-free worst-case pool")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -221,6 +233,11 @@ def main():
                              "(static serving merges ONE adapter offline)")
         eng = StaticServeEngine(rt, max_batch=args.max_batch,
                                 max_len=max_len)
+    elif args.engine == "paged":
+        eng = PagedServeEngine(rt, max_batch=args.max_batch, max_len=max_len,
+                               page_size=args.page_size,
+                               prefill_chunk=args.prefill_chunk,
+                               hbm_kv_budget=args.hbm_kv_budget or None)
     else:
         eng = ServeEngine(rt, max_batch=args.max_batch, max_len=max_len)
 
@@ -263,6 +280,17 @@ def main():
               f"max_resident={residency['max_resident']}"
               f"/{residency['capacity']} "
               f"compaction={residency['compaction_ratio']:.2f}x")
+    kv = getattr(eng, "kv_stats", lambda: None)()
+    if kv is not None:
+        from repro.serve.kv import kv_page_bytes
+        used_pk = kv["num_pages"] - 1
+        print(f"kv residency: pool={kv['num_pages']} pages x "
+              f"{kv['page_size']} tok "
+              f"({used_pk * kv_page_bytes(cfg, kv['page_size']) / 1e6:.2f} "
+              f"MB) alloc={kv['alloc']} prefix_hits={kv['prefix_hits']} "
+              f"kv_stalls={kv['kv_stalls']} "
+              f"cache_evictions={kv['cache_evictions']} "
+              f"cached={kv['cached']}")
     sample = results[min(results)]
     print("sample output tokens:", sample[:16])
     return 0

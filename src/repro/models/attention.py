@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.kernels.ops import paged_attention
 from .layers import (Shard, apply_rope, dense_init, no_shard, qlinear,
                      stacked_dense_init)
 
@@ -246,3 +247,115 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     K, hd = cfg.num_kv_heads, cfg.d_head
     return {"k": jnp.zeros((batch, max_len, K, hd), dtype),
             "v": jnp.zeros((batch, max_len, K, hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (ISSUE 7): fixed-size pages + per-slot page tables
+# ---------------------------------------------------------------------------
+
+def init_paged_kv(cfg: ModelConfig, num_pages: int, page_size: int,
+                  dtype=None) -> Dict[str, Array]:
+    """One layer's shared page pools. Page 0 is the GARBAGE page: parked /
+    out-of-range table entries resolve there, so full-batch decode can write
+    through every row's table unconditionally."""
+    dtype = dtype or cfg.act_dtype
+    K, hd = cfg.num_kv_heads, cfg.d_head
+    return {"k": jnp.zeros((num_pages, page_size, K, hd), dtype),
+            "v": jnp.zeros((num_pages, page_size, K, hd), dtype)}
+
+
+def paged_attention_block(p: Dict[str, Array], x: Array, cfg: ModelConfig, *,
+                          pages: Dict[str, Array], table: Array, pos: Array,
+                          shard: Shard = no_shard,
+                          rot: Optional[Callable] = None,
+                          ) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step through the paged KV cache.
+
+    x: (B, 1, D); pages: this layer's {"k","v"} (P, page, K, D) pools;
+    table: (B, max_pages + 1) int32 — the LAST column is a sentinel that is
+    always the garbage page, so a parked row (pos == max_pages * page) routes
+    its write there and full-batch decode never needs masking; pos: (B,)
+    int32 write positions. Returns (out, new_pages).
+    """
+    b, sq, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    q = _proj(x, p["wq"], p.get("bq"), rot, "wq").reshape(b, sq, H, hd)
+    k = _proj(x, p["wk"], p.get("bk"), rot, "wk").reshape(b, sq, K, hd)
+    v = _proj(x, p["wv"], p.get("bv"), rot, "wv").reshape(b, sq, K, hd)
+    q = shard(q, "act_heads")
+    k = shard(k, "act_kv_heads")
+    v = shard(v, "act_kv_heads")
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    page = pages["k"].shape[1]
+    pid = jnp.take_along_axis(table, (pos // page)[:, None], axis=1)[:, 0]
+    off = pos % page
+    kd = pages["k"].dtype
+    new_pages = {"k": pages["k"].at[pid, off].set(k[:, 0].astype(kd)),
+                 "v": pages["v"].at[pid, off].set(v[:, 0].astype(kd))}
+
+    scale = 1.0 / math.sqrt(hd)
+    attend_table = table[:, :-1]                    # drop the sentinel column
+    if cfg.use_pallas:
+        out = paged_attention(q[:, 0], new_pages["k"], new_pages["v"],
+                              attend_table, pos + 1, scale=scale,
+                              use_pallas=True)[:, None]
+    else:
+        # reference path: gather through the table, then the SAME chunked
+        # online-softmax core as the contiguous cache (numerics parity)
+        kt = new_pages["k"][attend_table].reshape(b, -1, K, hd)
+        vt = new_pages["v"][attend_table].reshape(b, -1, K, hd)
+        out = online_attention(q, kt, vt, positions, 0, pos + 1,
+                               causal=False, chunk=cfg.attn_chunk,
+                               scale=scale)
+    out = out.reshape(b, sq, H * hd)
+    return shard(qlinear(out, p["wo"], rot, "wo"), "act_d"), new_pages
+
+
+def paged_prefill_chunk_block(p: Dict[str, Array], x: Array,
+                              cfg: ModelConfig, *, pages: Dict[str, Array],
+                              table_row: Array, start: Array,
+                              shard: Shard = no_shard,
+                              rot: Optional[Callable] = None,
+                              ) -> Tuple[Array, Dict[str, Array]]:
+    """One prompt CHUNK for one slot (batch of 1) through the paged cache.
+
+    x: (1, C, D) chunk activations; table_row: (max_pages + 1,) int32 this
+    slot's page table; start: int32 absolute position of the chunk's first
+    token (previous chunks — and any shared-prefix pages claimed from the
+    KV cache — already occupy [0, start)). Writes the chunk's K/V through
+    the table and attends causally over [0, start + C).
+    """
+    b, c, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    q = _proj(x, p["wq"], p.get("bq"), rot, "wq").reshape(b, c, H, hd)
+    k = _proj(x, p["wk"], p.get("bk"), rot, "wk").reshape(b, c, K, hd)
+    v = _proj(x, p["wv"], p.get("bv"), rot, "wv").reshape(b, c, K, hd)
+    q = shard(q, "act_heads")
+    k = shard(k, "act_kv_heads")
+    v = shard(v, "act_kv_heads")
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + _positions(b, c)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    page = pages["k"].shape[1]
+    idx = start + jnp.arange(c)
+    pid = table_row[idx // page]
+    off = idx % page
+    kd = pages["k"].dtype
+    new_pages = {"k": pages["k"].at[pid, off].set(k[0].astype(kd)),
+                 "v": pages["v"].at[pid, off].set(v[0].astype(kd))}
+
+    # batch-1 chunk: gathering the whole row is cheap and reuses the chunked
+    # online-softmax core (shared-prefix pages are read, never rewritten)
+    kt = new_pages["k"][table_row[:-1]].reshape(1, -1, K, hd)
+    vt = new_pages["v"][table_row[:-1]].reshape(1, -1, K, hd)
+    out = online_attention(q, kt, vt, positions, 0, start + c,
+                           causal=True, chunk=cfg.attn_chunk,
+                           scale=1.0 / math.sqrt(hd))
+    out = out.reshape(b, c, H * hd)
+    return shard(qlinear(out, p["wo"], rot, "wo"), "act_d"), new_pages

@@ -12,7 +12,7 @@ call-site signature.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +28,17 @@ class FamilyOps:
     * ``decode_step(cfg, params, tokens, state, pos, shard=no_shard,
       ctx: AdapterContext | None = None) -> (logits, state)``
     * ``active_param_count(cfg) -> int``
+
+    Optional paged-KV surface (None -> the family has no paged serve path
+    and ``PagedServeEngine`` refuses it up front):
+
+    * ``init_paged_state(cfg, batch, num_pages, page_size, max_pages)
+      -> state`` — pytree {"pages", "table"}; table width is max_pages + 1
+      (sentinel garbage column)
+    * ``paged_chunk_prefill(cfg, params, req, state, slot, start,
+      shard=no_shard) -> (logits, state)`` — one prompt chunk, one slot
+    * ``paged_decode_step(cfg, params, tokens, state, pos, shard=no_shard,
+      ctx=None) -> (logits, state)`` — full-batch decode through tables
     """
     family: str
     init_params: Callable
@@ -37,6 +48,9 @@ class FamilyOps:
     prefill: Callable
     decode_step: Callable
     active_param_count: Callable
+    init_paged_state: Optional[Callable] = None
+    paged_chunk_prefill: Optional[Callable] = None
+    paged_decode_step: Optional[Callable] = None
 
 
 _FAMILIES: Dict[str, FamilyOps] = {}

@@ -22,7 +22,9 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core.peft import AdapterContext, PrefillRequest
 from . import registry
-from .attention import attention_block, init_attention, init_cache
+from .attention import (attention_block, init_attention, init_cache,
+                        init_paged_kv, paged_attention_block,
+                        paged_prefill_chunk_block)
 from .layers import (Shard, apply_mlp, cross_entropy, embed_init, init_mlp,
                      init_stacked_mlp, no_shard, qlinear, rms_norm, softcap,
                      stacked_dense_init)
@@ -135,6 +137,22 @@ def _decoder_layer(cfg: ModelConfig, lp, h: Array, shard: Shard,
         m, aux = apply_mlp(lp["mlp"], hin, cfg.mlp_type, shard,
                            rot=rot_mlp), jnp.zeros((), jnp.float32)
     return h + m, aux, new_cache
+
+
+def _paged_decoder_layer(cfg: ModelConfig, lp, h: Array, shard: Shard,
+                         pages, table, pos, rot_attn=None, rot_mlp=None):
+    """Decoder layer body with the KV write/read routed through a page
+    table (decode step: full batch, one token per row)."""
+    a, new_pages = paged_attention_block(
+        lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps), cfg,
+        pages=pages, table=table, pos=pos, shard=shard, rot=rot_attn)
+    h = h + a
+    hin = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    if "moe" in lp:
+        m, _ = moe_layer(lp["moe"], hin, cfg, shard, segment=cfg.moe_segment)
+    else:
+        m = apply_mlp(lp["mlp"], hin, cfg.mlp_type, shard, rot=rot_mlp)
+    return h + m, new_pages
 
 
 def _shared_attn_layer(cfg: ModelConfig, sp, h: Array, shard: Shard,
@@ -408,6 +426,116 @@ def prefill(cfg: ModelConfig, params, req: PrefillRequest, state,
 
 
 # ---------------------------------------------------------------------------
+# serving: paged KV cache + chunked prefill (decoder family; ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def init_paged_state(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_pages: int):
+    """Decode-state pytree for the paged engine: per-layer page pools plus
+    one int32 page table per slot. The table has ``max_pages + 1`` columns —
+    the extra SENTINEL column always holds the garbage page 0, so a parked
+    row (pos == max_pages * page_size) writes into garbage and jitted
+    full-batch decode never retraces or masks on slot liveness."""
+    if cfg.family != "decoder":
+        raise ValueError(f"paged KV serving is decoder-only for now "
+                         f"(family {cfg.family!r})")
+    L = cfg.num_layers
+    pools = init_paged_kv(cfg, num_pages, page_size)
+    pages = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (L,) + v.shape).copy(), pools)
+    table = jnp.zeros((batch, max_pages + 1), jnp.int32)
+    return {"pages": pages, "table": table}
+
+
+def paged_decode_step(cfg: ModelConfig, params, tokens: Array, state,
+                      pos, shard: Shard = no_shard,
+                      ctx: Optional[AdapterContext] = None):
+    """One token for the whole batch through per-slot page tables.
+
+    tokens: (B, 1); pos: int32 (B,) per-slot write positions (parked rows
+    carry max_pages * page_size); state: {"pages", "table"} from
+    ``init_paged_state``. Returns (logits, new_state) — the table passes
+    through unchanged (host code owns table edits at admission/finish)."""
+    if cfg.family != "decoder":
+        raise ValueError(f"paged decode is decoder-only (family "
+                         f"{cfg.family!r})")
+    h = _embed(cfg, params, tokens, shard)
+    table = state["table"]
+    bl_tree = ctx.group("layers") if ctx is not None else None
+    if bl_tree is not None:
+        def body(hc, xs):
+            lp, pages, bl = xs
+            hc, new_pages = _paged_decoder_layer(
+                cfg, lp, hc, shard, pages, table, pos,
+                rot_attn=ctx.rotator(bl.get("attn")),
+                rot_mlp=ctx.rotator(bl.get("mlp")))
+            return hc, new_pages
+        h, new_pages = jax.lax.scan(
+            body, h, (params["layers"], state["pages"], bl_tree))
+    else:
+        def body(hc, xs):
+            lp, pages = xs
+            hc, new_pages = _paged_decoder_layer(cfg, lp, hc, shard, pages,
+                                                 table, pos)
+            return hc, new_pages
+        h, new_pages = jax.lax.scan(body, h, (params["layers"],
+                                              state["pages"]))
+    logits = _unembed(cfg, params, h, shard)
+    return logits, {"pages": new_pages, "table": table}
+
+
+def paged_chunk_prefill(cfg: ModelConfig, params, req: PrefillRequest,
+                        state, slot, start, shard: Shard = no_shard):
+    """One prompt CHUNK for one slot through the paged cache.
+
+    req.batch["tokens"]: (1, C) — C is the static chunk width (jit traces
+    once per width); req.last_idx: local index of the chunk's last valid
+    token (only meaningful on the final chunk, where the returned logits
+    seed the first generated token); slot / start: traced int32 scalars.
+    Earlier chunks — and shared-prefix pages claimed from the KV cache —
+    already occupy positions [0, start)."""
+    if cfg.family != "decoder":
+        raise ValueError(f"chunked prefill is decoder-only (family "
+                         f"{cfg.family!r})")
+    batch, last_idx, ctx = req.batch, req.last_idx, req.ctx
+    h = _embed(cfg, params, batch["tokens"], shard)
+    table_row = jax.lax.dynamic_index_in_dim(state["table"], slot, axis=0,
+                                             keepdims=False)
+    bl_tree = ctx.group("layers") if ctx is not None else None
+
+    def _layer(hc, lp, pages, rot_attn=None, rot_mlp=None):
+        a, new_pages = paged_prefill_chunk_block(
+            lp["attn"], rms_norm(hc, lp["attn_norm"], cfg.norm_eps), cfg,
+            pages=pages, table_row=table_row, start=start, shard=shard,
+            rot=rot_attn)
+        hc = hc + a
+        hin = rms_norm(hc, lp["mlp_norm"], cfg.norm_eps)
+        if "moe" in lp:
+            m, _ = moe_layer(lp["moe"], hin, cfg, shard,
+                             segment=cfg.moe_segment)
+        else:
+            m = apply_mlp(lp["mlp"], hin, cfg.mlp_type, shard, rot=rot_mlp)
+        return hc + m, new_pages
+
+    if bl_tree is not None:
+        def body(hc, xs):
+            lp, pages, bl = xs
+            return _layer(hc, lp, pages,
+                          rot_attn=ctx.rotator(bl.get("attn")),
+                          rot_mlp=ctx.rotator(bl.get("mlp")))
+        h, new_pages = jax.lax.scan(
+            body, h, (params["layers"], state["pages"], bl_tree))
+    else:
+        def body(hc, xs):
+            lp, pages = xs
+            return _layer(hc, lp, pages)
+        h, new_pages = jax.lax.scan(body, h, (params["layers"],
+                                              state["pages"]))
+    logits = _unembed(cfg, params, _gather_last(h, last_idx), shard)
+    return logits, {"pages": new_pages, "table": state["table"]}
+
+
+# ---------------------------------------------------------------------------
 # registry entries — one EXPLICIT record per family this module implements
 # (ssm / hybrid / vlm used to be silently routed through the decoder path)
 # ---------------------------------------------------------------------------
@@ -419,6 +547,7 @@ def _init_decode_state_ops(cfg: ModelConfig, batch: int, max_len: int,
 
 
 for _family in ("decoder", "vlm", "ssm", "hybrid"):
+    _paged = _family == "decoder"       # paged KV is decoder-only for now
     registry.register(registry.FamilyOps(
         family=_family,
         init_params=init_lm,
@@ -428,4 +557,7 @@ for _family in ("decoder", "vlm", "ssm", "hybrid"):
         prefill=prefill,
         decode_step=decode_step,
         active_param_count=active_param_count,
+        init_paged_state=init_paged_state if _paged else None,
+        paged_chunk_prefill=paged_chunk_prefill if _paged else None,
+        paged_decode_step=paged_decode_step if _paged else None,
     ))

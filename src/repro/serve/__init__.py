@@ -1,1 +1,2 @@
-from .engine import Request, ServeEngine, StaticServeEngine
+from .engine import PagedServeEngine, Request, ServeEngine, StaticServeEngine
+from .kv import KVPagePool, SlotPages, kv_page_bytes, pages_for_budget

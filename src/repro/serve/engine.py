@@ -49,6 +49,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.peft import PrefillRequest
 from repro.core.runtime import ModelRuntime
+from .kv import KVPagePool, SlotPages, pages_for_budget
 
 
 @dataclasses.dataclass
@@ -124,11 +125,8 @@ class ServeEngine:
         self._enc_len = max(max_len // 4, 8)
         self._prefix = _stream_prefix(self.cfg)
 
-        self._slot_prefill = runtime.slot_prefill_fn(max_len, self._enc_len)
-        self._decode = runtime.decode_fn()
+        self._setup_compute()
 
-        self._state = runtime.init_decode_state(max_batch, max_len,
-                                                enc_len=self._enc_len)
         # per-slot bookkeeping (host side)
         self._pos = np.zeros(max_batch, np.int32)
         self._last = np.zeros(max_batch, np.int32)
@@ -144,6 +142,19 @@ class ServeEngine:
         # periodically instead of letting history accumulate.
         self.finished: List[Request] = []
         self.stats = _new_stats()
+        # decode-loop AdapterContext cache (satellite: the store-paged lane
+        # used to rebuild the context — host LUT indexing + H2D per method —
+        # on EVERY decode step; see _context())
+        self._ctx_key: Any = None
+        self._ctx_val = None
+
+    def _setup_compute(self) -> None:
+        """Jitted closures + device state (overridden by the paged engine)."""
+        self._slot_prefill = self.rt.slot_prefill_fn(self.max_len,
+                                                     self._enc_len)
+        self._decode = self.rt.decode_fn()
+        self._state = self.rt.decode_state(self.max_batch, self.max_len,
+                                           enc_len=self._enc_len)
 
     # -- submission -----------------------------------------------------------
     def add_request(self, prompt: List[int], max_new_tokens: int = 16,
@@ -234,19 +245,37 @@ class ServeEngine:
             if first == self.eos_id or req.max_new_tokens <= 1:
                 self._finish(slot)
 
+    def _context(self):
+        """AdapterContext for the current slot ids, cached across decode
+        steps. Rebuilding it is host work (numpy LUT indexing + one H2D per
+        method) that used to run EVERY step — the store-paged serve
+        regression. The cache key is (slot ids, bank version): page-in /
+        eviction bumps ``bank.version`` so a stale gather can never serve."""
+        key = (tuple(int(i) for i in self._slot_ids),
+               getattr(self.rt.bank, "version", 0))
+        if key != self._ctx_key:
+            self._ctx_val = self.rt.context(self._slot_ids)
+            self._ctx_key = key
+        return self._ctx_val
+
+    def _row_active(self, slot: int) -> bool:
+        """Is this slot decoding? (The paged engine parks slots that are
+        still mid-chunked-prefill.)"""
+        return self._slot_req[slot] is not None
+
     def _decode_tick(self) -> None:
         """One jitted decode step over the full slot array."""
         tokens = jnp.asarray(self._last[:, None])
         pos = jnp.asarray(self._pos)
-        ctx = self.rt.context(self._slot_ids)
+        ctx = self._context()
         nt, _, self._state = self._decode(self.rt.params, ctx, tokens,
                                           self._state, pos)
         self.stats["decode_steps"] += 1
         vals = np.asarray(nt[:, 0])
         for slot in range(self.max_batch):
-            req = self._slot_req[slot]
-            if req is None:
+            if not self._row_active(slot):
                 continue
+            req = self._slot_req[slot]
             tok = int(vals[slot])
             self._outs[slot].append(tok)
             self._pos[slot] += 1
@@ -334,7 +363,7 @@ class StaticServeEngine:
         for i, r in enumerate(batch):
             toks[i, :len(r.prompt)] = r.prompt          # right-padded
         enc_len = max(plen // 4, 8)
-        state = self.rt.init_decode_state(b, self.max_len, enc_len=enc_len)
+        state = self.rt.decode_state(b, self.max_len, enc_len=enc_len)
         feed = _family_feed(self.cfg, toks, enc_len)
         # ragged fix: each row samples at its OWN last prompt position and
         # decodes from its own position counter — padded rows no longer read
@@ -387,3 +416,178 @@ class StaticServeEngine:
                 self.stats["requests"] += 1
         self.stats["wall_s"] += time.perf_counter() - t0
         return results
+
+
+@dataclasses.dataclass
+class _PrefillPlan:
+    """One admitted request's remaining chunked-prefill work."""
+    slot: int
+    req: Request
+    sp: SlotPages
+    next_start: int          # absolute position of the next chunk's 1st token
+
+
+class PagedServeEngine(ServeEngine):
+    """Continuous batching over a PAGED KV cache with chunked prefill.
+
+    Three changes against the contiguous parent (ISSUE 7):
+
+      * HBM: slots own fixed-size pages from one static pool (sized by
+        ``hbm_kv_budget`` or ``num_pages``) through per-slot int32 page
+        tables — a short request pays ceil(len / page_size) pages, not
+        ``max_len`` rows; when the pool is exhausted admission STALLS
+        (``kv_stalls`` counter) instead of over-subscribing.
+      * Admission: prompts prefill in ``prefill_chunk``-token chunks, ONE
+        chunk per scheduler tick, interleaved with decode — a long prompt
+        delays decoding slots by one chunk per tick instead of
+        head-of-line-blocking them for its whole prefill.
+      * Shared prefixes: full prompt pages are content-hashed (seeded by
+        the adapter name) and refcount-shared across requests — N tenants
+        with one system prompt pin ONE set of pages, and their prefill
+        skips the cached tokens entirely (``prefix_hits``). Divergent
+        suffixes are private by construction (see serve/kv.py).
+
+    Greedy tokens are identical to ``ServeEngine`` (tests pin this); only
+    residency and scheduling change. Decoder-family runtimes only.
+    """
+
+    def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
+                 max_len: int = 256, eos_id: int = 0, page_size: int = 8,
+                 prefill_chunk: int = 16, num_pages: Optional[int] = None,
+                 hbm_kv_budget: Optional[int] = None):
+        if runtime._ops.init_paged_state is None:
+            raise ValueError(
+                f"family {runtime.cfg.family!r} has no paged KV serve path "
+                "— use the contiguous ServeEngine")
+        if page_size < 1 or prefill_chunk < 1:
+            raise ValueError("page_size and prefill_chunk must be >= 1")
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.max_pages = -(-max_len // page_size)
+        self._parked = self.max_pages * page_size   # sentinel write position
+        if num_pages is None:
+            if hbm_kv_budget is not None:
+                num_pages = pages_for_budget(runtime.cfg, page_size,
+                                             hbm_kv_budget)
+            else:                       # stall-free default: worst case + 1
+                num_pages = max_batch * self.max_pages + 1
+        self.num_pages = num_pages
+        super().__init__(runtime, max_batch=max_batch, max_len=max_len,
+                         eos_id=eos_id)
+        self._pos[:] = self._parked
+        self._decoding = np.zeros(max_batch, bool)
+        self._slot_pages: List[Optional[SlotPages]] = [None] * max_batch
+        self._prefill_q: "collections.deque[_PrefillPlan]" = \
+            collections.deque()
+        self._zero_row = jnp.zeros(self.max_pages + 1, jnp.int32)
+
+    def _setup_compute(self) -> None:
+        self._decode = self.rt.paged_decode_fn()
+        self._chunk_prefill = self.rt.chunk_prefill_fn()
+        self.pool = KVPagePool(self.num_pages, self.page_size)
+        self._state = self.rt.paged_state(self.max_batch, self.num_pages,
+                                          self.page_size, self.max_pages)
+
+    # -- scheduling -----------------------------------------------------------
+    def _row_active(self, slot: int) -> bool:
+        return bool(self._decoding[slot])
+
+    def _admit(self) -> None:
+        """Claim a slot + adapter + KV pages per queued request; the prompt
+        itself is fed later, one chunk per tick (``_feed_one_chunk``).
+        Either resource exhausted -> stall (stop admitting, keep decoding:
+        finishing requests is what frees pages and unpins adapters)."""
+        for slot in range(self.max_batch):
+            if not self._queue:
+                return
+            if self._slot_req[slot] is not None:
+                continue
+            req = self._queue[0]
+            aid = self.rt.acquire_adapter(req.adapter)
+            if aid is None:
+                self.stats["admission_stalls"] += 1
+                return
+            sp = self.pool.admit(req.adapter, req.prompt, req.max_new_tokens)
+            if sp is None:                        # KV stall, not an error
+                self.rt.release_adapter(req.adapter)
+                self.stats["admission_stalls"] += 1
+                return
+            self._queue.popleft()
+            row = self.pool.table_row(sp, self.max_pages + 1)
+            self._state["table"] = \
+                self._state["table"].at[slot].set(jnp.asarray(row))
+            self._slot_req[slot] = req
+            self._slot_ids[slot] = aid
+            self._slot_pages[slot] = sp
+            self._outs[slot] = []
+            self._decoding[slot] = False
+            self._pos[slot] = self._parked        # writes park in garbage
+            self._prefill_q.append(_PrefillPlan(slot, req, sp,
+                                                next_start=sp.n_cached))
+
+    def _feed_one_chunk(self) -> None:
+        """Advance the HEAD prefill plan by one fixed-width chunk. The last
+        chunk yields the request's first token and flips the slot to
+        decoding; cached-prefix tokens were never fed at all."""
+        if not self._prefill_q:
+            return
+        plan = self._prefill_q[0]
+        req, slot = plan.req, plan.slot
+        plen = len(req.prompt)
+        start = plan.next_start
+        end = min(start + self.prefill_chunk, plen)
+        toks = np.zeros((1, self.prefill_chunk), np.int32)
+        toks[0, :end - start] = req.prompt[start:end]
+        final = end == plen
+        last_local = (plen - 1) - start if final else end - start - 1
+        feed = PrefillRequest(
+            batch={"tokens": jnp.asarray(toks)},
+            last_idx=jnp.asarray(last_local, jnp.int32),
+            ctx=self.rt.context([self._slot_ids[slot]]))
+        first, self._state = self._chunk_prefill(
+            self.rt.params, feed, self._state,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32))
+        plan.next_start = end
+        if not final:
+            return
+        self._prefill_q.popleft()
+        self.pool.register(plan.sp)               # publish full prompt pages
+        first = int(first)
+        req.t_first = time.perf_counter()
+        self.stats["prefills"] += 1
+        log = self.stats["admission_log"]
+        log.append((req.rid, self.stats["decode_steps"]))
+        if len(log) > 4096:
+            del log[:-2048]
+        self._outs[slot] = [first]
+        self._pos[slot] = plen
+        self._last[slot] = first
+        self._decoding[slot] = True
+        if first == self.eos_id or req.max_new_tokens <= 1:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        sp = self._slot_pages[slot]
+        super()._finish(slot)
+        self._slot_pages[slot] = None
+        self._decoding[slot] = False
+        self._pos[slot] = self._parked
+        self._last[slot] = 0
+        self._state["table"] = \
+            self._state["table"].at[slot].set(self._zero_row)
+        self.pool.finish(sp)
+
+    def step(self) -> bool:
+        """One tick: admit, feed ONE prompt chunk, one decode step over the
+        decoding slots. Decode latency is bounded by one chunk of prefill
+        per tick — never a whole prompt."""
+        self._admit()
+        self._feed_one_chunk()
+        if self._decoding.any():
+            self._decode_tick()
+        return not self.idle
+
+    def kv_stats(self) -> Dict[str, int]:
+        """Page-pool residency counters (allocs, prefix hits, KV stalls,
+        cache evictions, pages in use)."""
+        return self.pool.stats()

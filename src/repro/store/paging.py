@@ -130,6 +130,10 @@ class PagedAdapterBank:
             "hits": 0, "misses": 0, "evictions": 0, "stalls": 0,
             "builds": 0, "build_cache_hits": 0, "page_in_ms": [],
             "max_resident": 0}
+        # bumped on every residency change (page-in / evict): engines key
+        # their per-step AdapterContext cache on (slot ids, version), so a
+        # context built over stale stacks can never serve a decode step
+        self.version = 0
 
     # -- AdapterBank surface --------------------------------------------------
     @property
@@ -250,6 +254,7 @@ class PagedAdapterBank:
             del self._pins[name]
 
     def _evict(self, name: str) -> None:
+        self.version += 1
         uslot, method, cslot = self._resident.pop(name)
         self._lru.pop(name, None)
         self._lut[method][uslot] = 0                 # universal id -> identity
@@ -287,6 +292,7 @@ class PagedAdapterBank:
         return pages
 
     def _page_in(self, name: str, method: str, cslot: int) -> None:
+        self.version += 1
         pages = self._pages_for(name, method)
         for path, page in pages.items():
             idx = (slice(None),) * self._axis[path] + (cslot,)

@@ -150,6 +150,52 @@ def build_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     return serve_step
 
 
+def build_paged_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                            batch_divisible: bool = True):
+    """One decode token for the whole batch through per-slot PAGE TABLES
+    (ISSUE 7). Same call shape as ``build_decode_step`` — params, ctx,
+    tokens (B, 1), state {"pages", "table"}, pos (B,) — so the paged engine
+    drops in next to the contiguous one. Parked rows (pos at the sentinel
+    position) write into the garbage page; their sampled token is ignored
+    by the engine."""
+    shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
+             if mesh is not None else no_shard)
+    fam = api.family_ops(cfg)
+    if fam.paged_decode_step is None:
+        raise ValueError(f"family {cfg.family!r} has no paged decode path")
+
+    def serve_step(params, ctx, tokens, state, pos):
+        logits, new_state = fam.paged_decode_step(cfg, params, tokens, state,
+                                                  pos, shard, ctx=ctx)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_state
+
+    return serve_step
+
+
+def build_chunk_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                             batch_divisible: bool = True):
+    """Chunked-prefill admission unit: ONE fixed-width prompt chunk for ONE
+    slot, written through that slot's page table. Returns
+    step(params, req, state, slot, start) -> (first_token scalar, state);
+    the chunk width is static (one trace per width), slot/start are traced
+    scalars, and the returned first_token is only meaningful on the final
+    chunk (req.last_idx marks the prompt's last valid token there)."""
+    shard = (ShardingRules(cfg, mesh).make_sharder(batch_divisible)
+             if mesh is not None else no_shard)
+    fam = api.family_ops(cfg)
+    if fam.paged_chunk_prefill is None:
+        raise ValueError(f"family {cfg.family!r} has no chunked-prefill path")
+
+    def chunk_step(params, req: peft_lib.PrefillRequest, state, slot, start):
+        logits, new_state = fam.paged_chunk_prefill(cfg, params, req, state,
+                                                    slot, start, shard)
+        first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[0]
+        return first, new_state
+
+    return chunk_step
+
+
 def build_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                        batch_divisible: bool = True):
     """Full-prompt prefill. The single ``PrefillRequest`` argument carries

@@ -1,0 +1,274 @@
+"""Paged KV cache (ISSUE 7): page pool, paged engine vs contiguous,
+chunked prefill, shared-prefix reuse, paged flash-decode kernel, and the
+autotuner persistence round trip."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_smoke_config
+from repro.core import peft as peft_lib
+from repro.core.runtime import ModelRuntime
+from repro.kernels import dispatch
+from repro.kernels.flash_attention import paged_flash_decode
+from repro.kernels.ref import paged_attn_ref
+from repro.serve.engine import PagedServeEngine, ServeEngine, \
+    StaticServeEngine
+from repro.serve.kv import GARBAGE_PAGE, KVPagePool
+from repro.store import AdapterStore
+
+CFG = get_smoke_config("qwen2-72b")
+RT = ModelRuntime(CFG, key=jax.random.PRNGKey(0))
+
+
+def _solo(prompt, max_new, eos_id=-1):
+    eng = StaticServeEngine(RT, max_batch=1, max_len=64, eos_id=eos_id)
+    rid = eng.add_request(list(prompt), max_new_tokens=max_new)
+    return eng.run()[rid]
+
+
+def _paged(rt=RT, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("eos_id", -1)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 8)
+    return PagedServeEngine(rt, **kw)
+
+
+# ---------------------------------------------------------------------------
+# page pool
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_roundtrip():
+    pool = KVPagePool(num_pages=9, page_size=8)
+    assert pool.available == 8                      # page 0 is garbage
+    sp = pool.admit(None, list(range(10)), max_new=6)   # 16 tok -> 2 pages
+    assert sp is not None and len(sp.pages) == 2
+    assert GARBAGE_PAGE not in sp.pages
+    assert pool.available == 6
+    pool.finish(sp)
+    assert pool.available == 8                      # private pages -> free
+
+
+def test_pool_stall_when_exhausted():
+    pool = KVPagePool(num_pages=5, page_size=8)     # 4 usable pages
+    sp = pool.admit(None, list(range(20)), max_new=8)   # 28 tok -> 4 pages
+    assert sp is not None
+    assert pool.admit(None, [1, 2, 3], max_new=8) is None
+    assert pool.stats()["kv_stalls"] == 1
+    pool.finish(sp)
+    assert pool.admit(None, [1, 2, 3], max_new=8) is not None
+
+
+def test_pool_table_row_pads_with_garbage():
+    pool = KVPagePool(num_pages=9, page_size=8)
+    sp = pool.admit(None, list(range(9)), max_new=2)    # 11 tok -> 2 pages
+    row = pool.table_row(sp, width=5)
+    assert row.dtype == np.int32 and row.shape == (5,)
+    assert list(row[:2]) == sp.pages
+    assert all(p == GARBAGE_PAGE for p in row[2:])
+
+
+def test_pool_shared_prefix_refcount_two_tenants():
+    """Two tenants, identical 16-token prefix, divergent suffixes: full
+    prefix pages are shared (refcount 2) while the divergent tail stays
+    private, so decode writes never alias across tenants."""
+    pool = KVPagePool(num_pages=17, page_size=8)
+    prefix = list(range(100, 116))                  # 2 full pages
+    a = pool.admit("t", prefix + [1, 2, 3], max_new=4)
+    pool.register(a)
+    b = pool.admit("t", prefix + [7, 8, 9], max_new=4)
+    assert b.n_cached == 16                         # both full pages claimed
+    assert b.pages[:2] == a.pages[:2]               # shared
+    assert b.pages[2:] != a.pages[2:]               # divergent tail private
+    for pid in a.pages[:2]:
+        assert pool._refs[pid] == 2
+    avail = pool.available
+    pool.finish(a)
+    pool.finish(b)
+    assert pool.available > avail                   # everything reclaimable
+
+
+def test_pool_partial_page_never_shared():
+    """A prefix hit never extends into a partially-filled page: tenant B
+    with a 12-token common prefix (page 1 only half full) claims just the
+    first full page."""
+    pool = KVPagePool(num_pages=17, page_size=8)
+    a = pool.admit("t", list(range(12)), max_new=4)
+    pool.register(a)
+    b = pool.admit("t", list(range(12)) + [99], max_new=4)
+    assert b.n_cached == 8                          # only page 0 shared
+    assert b.pages[0] == a.pages[0]
+    assert b.pages[1] != a.pages[1]
+
+
+def test_pool_cache_eviction_retires_hash():
+    pool = KVPagePool(num_pages=5, page_size=8)     # 4 usable pages
+    a = pool.admit(None, list(range(8)), max_new=8)     # 2 pages, published
+    pool.register(a)
+    pool.finish(a)                                  # -> reusable, cached
+    b = pool.admit(None, list(range(200, 232)), max_new=0)  # needs all 4
+    assert b is not None
+    assert pool.stats()["cache_evictions"] > 0
+
+
+# ---------------------------------------------------------------------------
+# paged engine == contiguous engine
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_continuous_mixed_lengths():
+    """Greedy tokens identical to the contiguous engine on ragged traffic,
+    including prompts long enough to need several prefill chunks."""
+    rng = np.random.default_rng(3)
+    wl = [(rng.integers(1, 200, size=n).tolist(), m)
+          for n, m in ((5, 4), (19, 6), (3, 8), (26, 3), (11, 5), (7, 7))]
+
+    def serve(eng):
+        rids = [eng.add_request(p, max_new_tokens=m) for p, m in wl]
+        res = eng.run()
+        return [res[r] for r in rids]
+
+    ref = serve(ServeEngine(RT, max_batch=3, max_len=48, eos_id=-1))
+    got = serve(_paged())
+    assert got == ref
+
+
+def test_multi_chunk_prompt_matches_solo():
+    prompt = list(range(1, 20))                     # 19 tok, chunk 8 -> 3
+    eng = _paged(max_batch=1)
+    rid = eng.add_request(prompt, max_new_tokens=6)
+    assert eng.run()[rid] == _solo(prompt, 6)
+
+
+def test_eos_refill_reuses_freed_pages():
+    """EOS terminates early, freed pages are recycled for queued requests,
+    outputs still match solo references, and the pool drains clean."""
+    probe = _solo([5, 6, 7], 8)
+    eos = next(t for t in probe if t != probe[0])
+    prompts = [[5, 6, 7], [9, 10, 11, 12], [3, 4], [8, 2, 6, 1], [13, 14]]
+    solo = [_solo(p, 8, eos_id=eos) for p in prompts]
+    # tight pool: ~2 concurrent requests' worth, so serving 5 forces reuse
+    eng = _paged(max_batch=2, num_pages=7, eos_id=eos)
+    rids = [eng.add_request(p, max_new_tokens=8) for p in prompts]
+    res = eng.run()
+    assert [res[r] for r in rids] == solo
+    assert any(len(out) < 8 for out in solo)        # EOS actually fired
+    st = eng.kv_stats()
+    assert st["alloc"] > 6                          # more allocs than pages
+    assert eng.pool.available == 6                  # fully reclaimed
+
+
+def test_shared_prefix_engine_hits_and_matches_solo():
+    sys_prompt = list(range(40, 56))                # 2 full pages at ps=8
+    p1, p2 = sys_prompt + [1, 2, 3], sys_prompt + [7, 8]
+    eng = _paged(max_batch=1)
+    r1 = eng.add_request(p1, max_new_tokens=5)
+    out1 = eng.run()[r1]
+    r2 = eng.add_request(p2, max_new_tokens=5)
+    out2 = eng.run()[r2]
+    assert eng.kv_stats()["prefix_hits"] >= 2
+    assert out1 == _solo(p1, 5)
+    assert out2 == _solo(p2, 5)
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode kernel
+# ---------------------------------------------------------------------------
+
+def test_paged_flash_decode_matches_ref():
+    b, h, kh, d, ps, npages, w = 3, 4, 2, 16, 8, 11, 5
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (npages, ps, kh, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (npages, ps, kh, d), jnp.float32)
+    table = jnp.asarray(
+        np.random.default_rng(0).integers(0, npages, size=(b, w)), jnp.int32)
+    kv_len = jnp.asarray([1, 17, 40], jnp.int32)
+    ref = paged_attn_ref(q, kp, vp, table, kv_len)
+    got = paged_flash_decode(q, kp, vp, table, kv_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine hot loop: adapter context cached across decode steps
+# ---------------------------------------------------------------------------
+
+def test_adapter_context_cached_until_bank_version_bumps():
+    pcfg = {"a0": peft_lib.PEFTConfig(method="gsoft", block_size=8),
+            "a1": peft_lib.PEFTConfig(method="boft", block_size=8)}
+    ads = {n: peft_lib.init_peft(c, RT.params, jax.random.PRNGKey(i))
+           for i, (n, c) in enumerate(pcfg.items())}
+    store = AdapterStore.from_adapters(ads, pcfg)
+    rt = RT.attach(store, hbm_budget=2)
+    eng = ServeEngine(rt, max_batch=2, max_len=32, eos_id=-1)
+    c1 = eng._context()
+    assert eng._context() is c1                     # cache hit, no host work
+    rt.bank.version += 1                            # page-in/evict happened
+    c2 = eng._context()
+    assert c2 is not c1
+    assert eng._context() is c2
+
+
+# ---------------------------------------------------------------------------
+# autotuner persistence
+# ---------------------------------------------------------------------------
+
+def test_tuning_cache_roundtrip(tmp_path, monkeypatch):
+    path = str(tmp_path / "tunings.json")
+    key = dispatch.paged_attn_key(4, 2, 16, 8, jnp.float32, backend="cpu")
+    saved_tuned = dict(dispatch._TUNED)
+    try:
+        dispatch._TUNED.clear()
+        dispatch._TUNED[key] = dispatch.Tuning(token_tile=64, group_tile=2)
+        assert dispatch.save_tuning_cache(path) == path
+
+        dispatch._TUNED.clear()
+        assert dispatch.load_tuning_cache(path) == 1
+        assert dispatch._TUNED[key] == dispatch.Tuning(64, 2)
+
+        # results timed in-process win over the cache on reload
+        dispatch._TUNED[key] = dispatch.Tuning(token_tile=256)
+        assert dispatch.load_tuning_cache(path) == 0
+        assert dispatch._TUNED[key].token_tile == 256
+
+        # env-driven lazy load on first resolution
+        dispatch._TUNED.clear()
+        monkeypatch.setenv(dispatch.TUNING_CACHE_ENV, path)
+        monkeypatch.setattr(dispatch, "_cache_loaded", False)
+        assert dispatch.get_tuning(key) == dispatch.Tuning(64, 2)
+    finally:
+        dispatch._TUNED.clear()
+        dispatch._TUNED.update(saved_tuned)
+
+
+def test_tuning_cache_missing_file_is_noop(tmp_path):
+    assert dispatch.load_tuning_cache(str(tmp_path / "absent.json")) == 0
+    assert dispatch.save_tuning_cache(None) is None
+
+
+# ---------------------------------------------------------------------------
+# guard mirror: contiguous max_len allocation stays behind the runtime facade
+# ---------------------------------------------------------------------------
+
+def test_no_contiguous_kv_alloc_outside_runtime():
+    """``init_decode_state(`` is the contiguous max_len allocator; serving,
+    launch, bench, and example code must go through ``rt.decode_state`` /
+    ``rt.paged_state`` so the KV residency policy lives in one place
+    (mirrors the CI grep guard)."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    pat = re.compile(r"init_decode_state\s*\(")
+    offenders, scanned = [], 0
+    for sub in ("src/repro/serve", "src/repro/launch", "benchmarks",
+                "examples"):
+        for f in (root / sub).rglob("*.py"):
+            scanned += 1
+            for i, line in enumerate(f.read_text().splitlines(), 1):
+                if pat.search(line):
+                    offenders.append(f"{f}:{i}")
+    assert scanned > 8
+    assert not offenders, offenders
