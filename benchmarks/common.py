@@ -1,10 +1,15 @@
 """Benchmark utilities: timing, the assignment's CSV contract
-(``name,us_per_call,derived``), and the shared serving-benchmark protocol
+(``name,us_per_call,derived``), the shared serving-benchmark protocol
 (mixed-length workload generation + warmup-then-timed engine runs) so the
-serve and quant lanes measure with ONE methodology and their JSON
-trajectories stay comparable."""
+serve and quant lanes measure with ONE methodology, and the
+``BENCH_*.json`` trajectory writer (``write_summary`` — every run APPENDS
+to a per-suite history instead of overwriting it, so the perf trajectory
+across PRs is actually recorded)."""
 from __future__ import annotations
 
+import datetime
+import json
+import pathlib
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -13,11 +18,41 @@ import numpy as np
 
 ROWS: List[str] = []
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_summary(suite: str, summary: Dict) -> pathlib.Path:
+    """Persist one suite run to ``BENCH_<suite>.json`` WITHOUT discarding
+    prior runs: ``latest`` mirrors the newest summary (what dashboards and
+    quick greps read) and ``history`` accumulates timestamped entries —
+    the PR-over-PR perf trajectory. A pre-history flat file (one bare
+    summary dict) is adopted as the history's first entry."""
+    out = REPO_ROOT / f"BENCH_{suite}.json"
+    history: List[Dict] = []
+    if out.exists():
+        try:
+            prev = json.loads(out.read_text())
+        except ValueError:
+            prev = None
+        if isinstance(prev, dict):
+            if "history" in prev:
+                history = list(prev["history"])
+            else:                       # migrate the old wholesale format
+                history = [prev]
+    entry = dict(summary)
+    entry["ts"] = datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds")
+    history.append(entry)
+    out.write_text(json.dumps({"latest": summary, "history": history},
+                              indent=2, sort_keys=True))
+    print(f"# wrote {out} ({len(history)} run(s) in history)", flush=True)
+    return out
 
 
 def mixed_workload(n_req: int, prompt_hi: int, max_new_hi: int, seed: int = 0,

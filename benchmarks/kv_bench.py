@@ -15,6 +15,12 @@ Three lanes, all over the same smoke model:
     p99 of the gap between consecutive decode steps (what a decoding slot
     actually waits through) plus the deterministic worst-case prefill
     tokens a single tick can interpose.
+  * ``tp``     — the 1->N tensor-parallel scaling curve (ISSUE 8): the
+    paged engine re-run per mesh geometry in a fresh subprocess
+    (``scaling_child`` — XLA_FLAGS must precede backend init) on fake CPU
+    devices. Greedy tokens are asserted identical across geometries; tok/s
+    per tp rides the summary. On fake devices the curve measures GSPMD
+    partition overhead, not speedup — real scaling needs real chips.
 
 ``REPRO_BENCH_TINY=1`` shrinks the workload and writes ``BENCH_kv.json``
 at the repo root (uploaded as a CI artifact).
@@ -23,7 +29,8 @@ from __future__ import annotations
 
 import json
 import os
-import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -34,7 +41,7 @@ from repro.core.runtime import ModelRuntime
 from repro.serve.engine import PagedServeEngine, ServeEngine
 from repro.serve.kv import kv_page_bytes
 
-from .common import emit
+from .common import REPO_ROOT, emit, write_summary
 
 TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
 
@@ -182,6 +189,37 @@ def _lane_hol(rt, summary):
         hol_tokens_chunked=res["chunked"]["hol_tokens"])
 
 
+def _lane_tp(summary):
+    """Paged decode under serve-time TP, one fresh process per geometry."""
+    n_req = 8 if TINY else 16
+    rows = []
+    for tp in (1, 2):
+        cmd = [sys.executable, "-m", "benchmarks.scaling_child",
+               "--tp", str(tp), "--n-req", str(n_req),
+               "--page-size", str(PAGE), "--prefill-chunk", str(CHUNK)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (str(REPO_ROOT / "src"), env.get("PYTHONPATH")) if p)
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              cwd=REPO_ROOT, env=env, timeout=900)
+        lines = [l for l in proc.stdout.splitlines()
+                 if l.startswith("RESULT ")]
+        if proc.returncode != 0 or not lines:
+            raise RuntimeError(
+                f"scaling child tp={tp} failed (rc={proc.returncode}):\n"
+                f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+        rows.append(json.loads(lines[-1][len("RESULT "):]))
+    for r in rows:
+        assert r["outputs"] == rows[0]["outputs"], \
+            f"tp={r['tp']} tokens diverged from tp=1"
+        emit(f"kv/paged_tp{r['tp']}", 0.0,
+             f"tok/s={r['tok_s']:.1f};devices={r['devices']};"
+             f"decode_steps={r['decode_steps']};tokens_equal=1")
+    summary["tp_scaling"] = [{k: r[k] for k in
+                              ("tp", "devices", "tok_s", "tokens")}
+                             for r in rows]
+
+
 def run():
     cfg = get_smoke_config("qwen2-72b")
     rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0))
@@ -190,10 +228,9 @@ def run():
     _lane_bytes(rt, cfg, summary)
     _lane_slots(rt, cfg, summary)
     _lane_hol(rt, summary)
+    _lane_tp(summary)
     if TINY:
-        out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kv.json"
-        out.write_text(json.dumps(summary, indent=2, sort_keys=True))
-        print(f"# wrote {out}", flush=True)
+        write_summary("kv", summary)
 
 
 if __name__ == "__main__":

@@ -17,9 +17,7 @@ artifact so the per-method trajectory is tracked PR-over-PR).
 """
 from __future__ import annotations
 
-import json
 import os
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +31,7 @@ from repro.core.runtime import ModelRuntime
 from repro.kernels.dispatch import banked_key_fn
 from repro.serve.engine import ServeEngine
 
-from .common import emit, mixed_workload, run_engine_timed
+from .common import emit, mixed_workload, run_engine_timed, write_summary
 
 TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
 
@@ -123,9 +121,7 @@ def run():
          f"tok/s={r['tok_s']:.1f};methods={'+'.join(summary['mixed_bank']['methods'])}")
 
     if TINY:
-        out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_methods.json"
-        out.write_text(json.dumps(summary, indent=2, sort_keys=True))
-        print(f"# wrote {out}", flush=True)
+        write_summary("methods", summary)
 
 
 if __name__ == "__main__":

@@ -22,9 +22,7 @@ at the repo root for the CI artifact lane.
 """
 from __future__ import annotations
 
-import json
 import os
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -38,11 +36,9 @@ from repro.core.runtime import ModelRuntime
 from repro.kernels import dispatch, ops, ref
 from repro.serve.engine import ServeEngine
 
-from .common import emit, mixed_workload, run_engine_timed, time_fn
+from .common import emit, mixed_workload, run_engine_timed, time_fn, write_summary
 
 TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
-
 
 def _tok_s(rt, workload, max_batch, max_len):
     make = lambda: ServeEngine(rt, max_batch=max_batch, max_len=max_len,
@@ -150,9 +146,7 @@ def run():
          f"t={t};k={k};n={n};tt={tun.token_tile};nt={tun.group_tile}")
 
     if TINY:
-        out = REPO_ROOT / "BENCH_quant.json"
-        out.write_text(json.dumps(summary, indent=2, sort_keys=True))
-        print(f"# wrote {out}", flush=True)
+        write_summary("quant", summary)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,67 @@
+"""Subprocess child for the serve-time TP scaling lane (ISSUE 8).
+
+JAX reads ``XLA_FLAGS`` once at backend init, so every mesh geometry
+needs a FRESH process: the parent lane (``kv_bench._lane_tp``) launches
+this module once per ``--tp`` and parses the single ``RESULT {json}``
+line. The flag is set here, before the first ``import jax``, so the lane
+works no matter how the parent was launched. All geometries run under the
+same forced device count — tp=1 is the same backend minus the mesh, so
+the curve compares sharding, not backend configuration.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--n-req", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+    import jax  # noqa: E402  (after XLA_FLAGS — this initializes the backend)
+
+    from repro.config import get_smoke_config
+    from repro.core.runtime import ModelRuntime
+    from repro.distrib import serve_mesh
+    from repro.serve.engine import PagedServeEngine
+
+    from benchmarks.common import mixed_workload, run_engine_timed
+
+    cfg = get_smoke_config("qwen2-72b")
+    mesh = serve_mesh(args.tp) if args.tp > 1 else None
+    rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0), mesh=mesh)
+
+    prompt_hi, new_hi = 24, 12
+    max_len = prompt_hi + new_hi + 8
+    wl = mixed_workload(args.n_req, prompt_hi, new_hi, seed=7)
+    make = lambda: PagedServeEngine(rt, max_batch=4, max_len=max_len,
+                                    eos_id=-1, page_size=args.page_size,
+                                    prefill_chunk=args.prefill_chunk)
+    r = run_engine_timed(make, wl, wl)
+
+    # a full greedy transcript rides along so the parent can assert the
+    # sharded computation is token-identical to the single-device one
+    probe = make()
+    rids = [probe.add_request(**req) for req in wl]
+    res = probe.run()
+    sys.stdout.flush()
+    print("RESULT " + json.dumps({
+        "tp": args.tp, "devices": jax.device_count(),
+        "tok_s": r["tok_s"], "tokens": r["tokens"],
+        "decode_steps": r["decode_steps"],
+        "outputs": [res[rid] for rid in rids]}), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,23 +8,30 @@ deterministic measure of how much decode work the scheduler wastes on
 finished-or-empty rows (lockstep static batching burns steps on the
 max(max_new) barrier; slot-based continuous batching refills them).
 
+The ``cluster`` lane (ISSUE 8) is the 1->N replica scaling curve: Poisson
+mixed-length multi-tenant traffic whose adapter working set thrashes ONE
+replica's HBM budget but partitions cleanly across two under the
+``EngineCluster`` affinity router. Tokens are asserted identical across
+replica counts, and the 2-replica speedup / affinity hit rate ride the
+summary so the scale-out trajectory is tracked PR-over-PR.
+
 ``REPRO_BENCH_TINY=1`` shrinks the workload for the CI smoke lane and
 writes a ``BENCH_serve.json`` summary at the repo root (uploaded as a CI
 artifact so the serving-perf trajectory is tracked PR-over-PR).
 """
 from __future__ import annotations
 
-import json
 import os
-import pathlib
+import time
 
 import jax
+import numpy as np
 
 from repro.config import get_smoke_config
 from repro.core.runtime import ModelRuntime
 from repro.serve.engine import ServeEngine, StaticServeEngine
 
-from .common import emit, mixed_workload, run_engine_timed
+from .common import emit, mixed_workload, run_engine_timed, write_summary
 
 TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
 
@@ -113,6 +120,8 @@ def run():
          f"tok/s={r['tok_s']:.1f};vs_eager=x{resident_ratio:.2f};"
          f"evictions={st['evictions']};hit_rate={st['hit_rate']:.2f}")
 
+    cluster = _lane_cluster(rt)
+
     if TINY:
         summary = {"backend": jax.default_backend(), "arch": cfg.name,
                    "continuous_speedup": speedup,
@@ -120,9 +129,90 @@ def run():
         for name, r in res.items():
             for key, val in r.items():
                 summary[f"{name}_{key}"] = val
-        out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
-        out.write_text(json.dumps(summary, indent=2, sort_keys=True))
-        print(f"# wrote {out}", flush=True)
+        summary.update(cluster)
+        write_summary("serve", summary)
+
+
+def _poisson_arrivals(n: int, rate: float, seed: int) -> np.ndarray:
+    """Cumulative Poisson arrival times in DECODE-TICK units (exponential
+    gaps at ``rate`` requests/tick) — deterministic, no wall-clock sleeps,
+    so the timed pass measures serving, not the arrival process."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def _drive_poisson(eng, workload, arrivals):
+    """Feed ``workload`` as it arrives on the tick clock, stepping the
+    engine/cluster between waves; returns (wall_s, {rid: tokens})."""
+    nxt, tick, busy = 0, 0, True
+    out = {}
+    t0 = time.perf_counter()
+    while nxt < len(workload) or busy:
+        while nxt < len(workload) and arrivals[nxt] <= tick:
+            out[eng.add_request(**workload[nxt])] = None
+            nxt += 1
+        busy = eng.step()
+        tick += 1
+    dt = time.perf_counter() - t0
+    for r in eng.drain_finished():
+        out[r.rid] = r.output
+    return dt, out
+
+
+def _lane_cluster(rt):
+    """1 -> N replica scaling (ISSUE 8): the tenant working set (``n_ad``
+    adapters) is twice ONE replica's paged-bank budget, so a single engine
+    pages factors on nearly every admission while the 2-replica cluster's
+    affinity router partitions tenants into two working sets that each
+    fit — page-ins happen once per tenant per home. Same per-replica
+    resources on both sides; greedy tokens must agree exactly."""
+    from repro.core import peft as peft_lib
+    from repro.distrib import EngineCluster
+    from repro.launch.serve import make_demo_adapters
+    from repro.store import AdapterStore
+
+    n_ad, max_batch = 8, 4
+    n_req = 32 if TINY else 64
+    budget = n_ad // 2                     # one replica holds half the tenants
+    # method split uncorrelated with tenant index parity: the affinity
+    # router alternates first sightings across replicas, so an i%2 method
+    # assignment would hand each replica ONE method's tenants and starve
+    # the per-method capacity split
+    bank_peft = {f"t{i}": peft_lib.PEFTConfig(
+        method="gsoft" if i < n_ad // 2 else "boft", block_size=8)
+        for i in range(n_ad)}
+    adapters = make_demo_adapters(list(bank_peft), rt.params, bank_peft)
+    store = AdapterStore.from_adapters(adapters, bank_peft)
+    wl = mixed_workload(n_req, 12, 16, seed=3, adapters=list(bank_peft))
+    arrivals = _poisson_arrivals(n_req, rate=2.0, seed=3)
+
+    rows, outputs = [], {}
+    for n in (1, 2):
+        cl = EngineCluster([ServeEngine(rt.attach(store, hbm_budget=budget),
+                                        max_batch=max_batch, max_len=40,
+                                        eos_id=-1) for _ in range(n)])
+        _drive_poisson(cl, wl, arrivals)   # warmup: compile + page + homes
+        toks0 = cl.stats["tokens_generated"]
+        dt, out = _drive_poisson(cl, wl, arrivals)
+        toks = cl.stats["tokens_generated"] - toks0
+        tok_s = toks / max(dt, 1e-9)
+        ahr = cl.affinity_hit_rate()
+        outputs[n] = [out[k] for k in sorted(out)]
+        rows.append({"replicas": n, "tok_s": tok_s, "tokens": toks,
+                     "affinity_hit_rate": ahr})
+        emit(f"serve/cluster_{n}replica", 1e6 * dt / max(toks, 1),
+             f"tok/s={tok_s:.1f};affinity_hit_rate={ahr:.2f};"
+             f"rebalanced={cl.routing['rebalanced']}")
+    assert outputs[1] == outputs[2], \
+        "cluster tokens diverged from single-replica tokens"
+    speedup = rows[1]["tok_s"] / max(rows[0]["tok_s"], 1e-9)
+    ahr = rows[1]["affinity_hit_rate"]
+    assert speedup >= 1.5, f"2-replica speedup x{speedup:.2f} < x1.5"
+    assert ahr >= 0.9, f"affinity hit rate {ahr:.2f} < 0.9"
+    emit("serve/cluster_scaling_speedup", 0.0,
+         f"x{speedup:.2f};affinity_hit_rate={ahr:.2f};tokens_equal=1")
+    return {"cluster_scaling": rows, "cluster_speedup": speedup,
+            "cluster_affinity_hit_rate": ahr}
 
 
 if __name__ == "__main__":

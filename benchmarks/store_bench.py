@@ -22,9 +22,7 @@ Full mode: 1000 tenants / budget 96 (<100 resident).
 """
 from __future__ import annotations
 
-import json
 import os
-import pathlib
 import time
 
 import jax
@@ -36,7 +34,7 @@ from repro.core.runtime import ModelRuntime
 from repro.serve.engine import ServeEngine, StaticServeEngine
 from repro.store import AdapterStore
 
-from .common import emit
+from .common import emit, write_summary
 
 TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
 
@@ -140,9 +138,7 @@ def run():
                "tenants": n_tenants, "hbm_budget": budget,
                "cold_sweep_s": cold_s, "hot_revisit_s": hot_s}
     summary.update({k: v for k, v in stats.items() if k != "methods"})
-    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_store.json"
-    out.write_text(json.dumps(summary, indent=2, sort_keys=True))
-    print(f"# wrote {out}", flush=True)
+    write_summary("store", summary)
 
 
 if __name__ == "__main__":

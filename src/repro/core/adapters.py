@@ -218,6 +218,18 @@ def gsoft_bank_build(spec: AdapterSpec, params_by_slot) -> Params:
     return _stack_slots(spec, {"L": eye, "R": eye}, processed)
 
 
+def gsoft_bank_shard_axes(factor: str, shape) -> "int | None":
+    """Serve-time TP hook (``MethodOps.bank_shard_axes``): a GSOFT bank
+    stack {"L"/"R": (..., A, r, b, b)} may split its BLOCK axis r over the
+    mesh 'model' axis — the per-row gather (``jnp.take`` over A) and the
+    blockwise transform are both elementwise in r, so the split needs no
+    collectives until the (already TP-sharded) base matmul. Only worth it
+    for banks that outgrow replication (thousands of resident slots)."""
+    if factor in ("L", "R") and len(shape) >= 4:
+        return len(shape) - 3            # ...the r (block) axis
+    return None
+
+
 def gs_rotate_banked(entry: Params, ids: Array, x: Array,
                      use_pallas: bool = False) -> Array:
     """Per-row-indexed activation-side GSOFT: row i of x gets x_i Q_{ids[i]}.

@@ -33,6 +33,10 @@ Per-record capability surface:
   key family the banked transform rides ("gs" / "bdmm"; "" = einsum-only)
 * ``quant_fuse(entry, slots, dtype)``    — per-row factors for the fused
   rotate+quantized-matmul kernel (only GSOFT has one today)
+* ``bank_shard_axes(factor, shape)``     — serve-time tensor parallelism:
+  which axis of a built bank-factor stack may split over the mesh 'model'
+  axis (None/absent -> replicate; ``sharding.specs.bank_spec_tree`` is the
+  only consumer — methods never touch jax.sharding themselves)
 * ``orthogonal`` / ``quant_compatible``  — capability flags (README table)
 """
 from __future__ import annotations
@@ -61,6 +65,7 @@ class MethodOps:
     bank_build: Optional[Callable] = None
     bank_rotator: Optional[Callable] = None
     quant_fuse: Optional[Callable] = None
+    bank_shard_axes: Optional[Callable] = None
     quant_compatible: bool = False
     bank_unsupported: str = ""        # why bank_build is None (error text)
     banked_kernel: str = ""           # kernels.dispatch.BANKED_KEYS family
@@ -121,6 +126,7 @@ register(MethodOps(
     bank_build=_ad.gsoft_bank_build,
     bank_rotator=_ad.gs_rotate_banked,
     quant_fuse=_ad.gsoft_quant_fuse,
+    bank_shard_axes=_ad.gsoft_bank_shard_axes,
     quant_compatible=True,
     banked_kernel="gs",
 ))

@@ -14,6 +14,17 @@ PEFTConfig(s), a checkpoint directory, or ``name=dir`` entry lists; the
 serving side never touches raw checkpoint layout. The PR-5 trio
 (``with_bank`` / ``save_bank`` / ``load_named_adapters``) survives as
 warn-once deprecation shims over ``attach`` / ``repro.store``.
+
+Serve-time tensor parallelism (ISSUE 8): building the runtime with a mesh
+COMMITS its state onto it — params (quantized trees included) under the
+Megatron column/row splits of ``sharding.specs``, contiguous and paged KV
+state with kv-heads over the 'model' axis, eager bank factor stacks
+replicated (or method-sharded via ``MethodOps.bank_shard_axes``). The
+jitted prefill/slot-prefill/decode/chunk-prefill closures are built once
+per geometry and GSPMD-partition against the committed input shardings,
+so the serving engines run unchanged on 1..N devices; kernel dispatch
+keys grow a ``tp`` tag so per-shard tunings never collide with
+single-device ones.
 """
 from __future__ import annotations
 
@@ -101,16 +112,24 @@ class ModelRuntime:
                     "request would apply adapters twice")
             params = peft_lib.materialize_tree(peft_cfg, params, adapters,
                                                merged=True)
-        self.params = params
         self.mesh = mesh
+        if mesh is not None and not abstract and any(
+                not isinstance(l, jax.ShapeDtypeStruct)
+                for l in jax.tree.leaves(params)):
+            from repro.sharding import specs as shard_specs
+            rules = shard_specs.ShardingRules(cfg, mesh)
+            params = shard_specs.place(mesh, params,
+                                       rules.serve_params_tree(params))
+            from repro.kernels import dispatch as kernel_dispatch
+            kernel_dispatch.set_serve_tp(shard_specs.tp_size(mesh))
+        self.params = params
         self.bank = bank
         self.quant_cfg = None        # set by .quantized() / load_quantized
-        self._decode = None
-        self._prefill = None
-        self._loss = None
-        self._slot_prefill: Dict[Tuple[int, int], Any] = {}
-        self._paged_decode = None
-        self._chunk_prefill = None
+        # jitted-closure cache. A plain dict (not attributes) so derived
+        # runtimes (attach/detach — same cfg+mesh, closures take params as
+        # arguments) can SHARE it by reference via ``_adopt_jit``: traces
+        # land in the cache once, whichever runtime triggers them.
+        self._jit: Dict[str, Any] = {"slot_prefill": {}}
 
     @classmethod
     def abstract(cls, cfg: ModelConfig, mesh=None) -> "ModelRuntime":
@@ -234,8 +253,19 @@ class ModelRuntime:
                             "checkpoint dir, or checkpoint entries")
         if self.is_quantized:
             _check_bank_quant_compatible(bank)
+        if self.mesh is not None and isinstance(bank, peft_lib.AdapterBank):
+            # eager bank: commit factor stacks onto the serve mesh
+            # (replicated unless the method's bank_shard_axes hook opts a
+            # factor axis into the 'model' split). The store-paged bank is
+            # left alone — its stacks are rewritten in place on every
+            # page-in, so it keeps default placement.
+            from repro.sharding import specs as shard_specs
+            rules = shard_specs.ShardingRules(self.cfg, self.mesh)
+            bank.tree = shard_specs.place(self.mesh, bank.tree,
+                                          rules.bank_spec_tree(bank.tree))
         rt = ModelRuntime(self.cfg, self.params, mesh=self.mesh, bank=bank)
         rt.quant_cfg = self.quant_cfg   # quantize-then-bank commutes
+        self._adopt_jit(rt)
         return rt
 
     def detach(self) -> "ModelRuntime":
@@ -243,7 +273,16 @@ class ModelRuntime:
         rt = ModelRuntime(self.cfg, self.params, mesh=self.mesh)
         rt.quant_cfg = self.quant_cfg
         rt._merged = self._merged
+        self._adopt_jit(rt)
         return rt
+
+    def _adopt_jit(self, other: "ModelRuntime") -> None:
+        """Share the jitted-closure cache with a runtime derived from this
+        one. attach/detach keep (cfg, mesh) and the closures take params /
+        bank state as ARGUMENTS, so traces transfer; sharing by REFERENCE
+        means every replica of an ``EngineCluster`` built via ``attach``
+        reuses one compiled program set instead of re-tracing N times."""
+        other._jit = self._jit
 
     def with_bank(self, adapters_by_name: Dict[str, Tree],
                   peft_cfg: "peft_lib.PEFTConfigs") -> "ModelRuntime":
@@ -282,6 +321,7 @@ class ModelRuntime:
                           mesh=self.mesh, bank=self.bank)
         rt._merged = self._merged
         rt.quant_cfg = qcfg
+        self._adopt_jit(rt)     # same traces cache; new avals re-specialize
         return rt
 
     @classmethod
@@ -336,20 +376,35 @@ class ModelRuntime:
         """Contiguous decode state (one max_len KV region per slot). THE
         engine/bench-facing constructor — a grep guard keeps raw
         ``init_decode_state(`` calls confined to this module so every
-        contiguous allocation is auditable against the paged path."""
-        return self.init_decode_state(batch, max_len, enc_len)
+        contiguous allocation is auditable against the paged path. On a
+        meshed runtime the KV caches commit with kv-heads over 'model'."""
+        state = self.init_decode_state(batch, max_len, enc_len)
+        if self.mesh is not None:
+            from repro.sharding import specs as shard_specs
+            rules = shard_specs.ShardingRules(self.cfg, self.mesh)
+            state = shard_specs.place(
+                self.mesh, state, rules.decode_state_spec(state, batch))
+        return state
 
     def paged_state(self, batch: int, num_pages: int, page_size: int,
                     max_pages: int):
         """Paged decode state: per-layer (num_pages, page_size, K, D) pools
         shared by all slots + a (batch, max_pages + 1) int32 page table per
         slot (sentinel garbage column last). Raises for families without a
-        paged serve path."""
+        paged serve path. On a meshed runtime the page pools commit with
+        kv-heads over 'model'; the table stays replicated (host-side page
+        allocation never sees the mesh)."""
         if self._ops.init_paged_state is None:
             raise ValueError(f"family {self.cfg.family!r} has no paged "
                              "KV serve path")
-        return self._ops.init_paged_state(self.cfg, batch, num_pages,
-                                          page_size, max_pages)
+        state = self._ops.init_paged_state(self.cfg, batch, num_pages,
+                                           page_size, max_pages)
+        if self.mesh is not None:
+            from repro.sharding import specs as shard_specs
+            rules = shard_specs.ShardingRules(self.cfg, self.mesh)
+            state = shard_specs.place(self.mesh, state,
+                                      rules.paged_state_spec(state))
+        return state
 
     def active_param_count(self) -> int:
         return self._ops.active_param_count(self.cfg)
@@ -366,57 +421,59 @@ class ModelRuntime:
     # -- jitted closures (lazy, cached on the runtime) ------------------------
     def prefill_fn(self):
         """jitted (params, PrefillRequest, state) -> (logits, state)."""
-        if self._prefill is None:
-            self._prefill = jax.jit(self.build_prefill())
-        return self._prefill
+        if self._jit.get("prefill") is None:
+            self._jit["prefill"] = jax.jit(self.build_prefill())
+        return self._jit["prefill"]
 
     def decode_fn(self):
         """jitted (params, ctx, tokens, state, pos) ->
         (next_tok, logits, state); ``state`` is donated."""
-        if self._decode is None:
-            self._decode = jax.jit(self.build_decode(), donate_argnums=(3,))
-        return self._decode
+        if self._jit.get("decode") is None:
+            self._jit["decode"] = jax.jit(self.build_decode(),
+                                          donate_argnums=(3,))
+        return self._jit["decode"]
 
     def paged_decode_fn(self):
         """jitted (params, ctx, tokens, state, pos) ->
         (next_tok, logits, state) through page tables; state donated."""
-        if self._paged_decode is None:
+        if self._jit.get("paged_decode") is None:
             from repro.train.steps import build_paged_decode_step
-            self._paged_decode = jax.jit(
+            self._jit["paged_decode"] = jax.jit(
                 build_paged_decode_step(self.cfg, self.mesh),
                 donate_argnums=(3,))
-        return self._paged_decode
+        return self._jit["paged_decode"]
 
     def chunk_prefill_fn(self):
         """jitted (params, req, state, slot, start) -> (first, state);
         state donated. One trace per chunk width (req token shape)."""
-        if self._chunk_prefill is None:
+        if self._jit.get("chunk_prefill") is None:
             from repro.train.steps import build_chunk_prefill_step
-            self._chunk_prefill = jax.jit(
+            self._jit["chunk_prefill"] = jax.jit(
                 build_chunk_prefill_step(self.cfg, self.mesh),
                 donate_argnums=(2,))
-        return self._chunk_prefill
+        return self._jit["chunk_prefill"]
 
     def slot_prefill_fn(self, max_len: int, enc_len: int = 0):
         """jitted (params, PrefillRequest, state, slot) -> (first, state);
         ``state`` is donated. Cached per (max_len, enc_len) geometry."""
         key = (max_len, enc_len)
-        if key not in self._slot_prefill:
+        cache = self._jit["slot_prefill"]
+        if key not in cache:
             from repro.train.steps import build_slot_prefill_step
-            self._slot_prefill[key] = jax.jit(
+            cache[key] = jax.jit(
                 build_slot_prefill_step(self.cfg, self.mesh, max_len=max_len,
                                         enc_len=enc_len),
                 donate_argnums=(2,))
-        return self._slot_prefill[key]
+        return cache[key]
 
     def loss_fn(self):
         """jitted (params, batch) -> (loss, metrics)."""
-        if self._loss is None:
+        if self._jit.get("loss") is None:
             cfg, shard = self.cfg, self._shard()
             fam = self._ops
-            self._loss = jax.jit(
+            self._jit["loss"] = jax.jit(
                 lambda params, batch: fam.loss(cfg, params, batch, shard))
-        return self._loss
+        return self._jit["loss"]
 
     def loss(self, batch):
         return self.loss_fn()(self.params, batch)

@@ -1,0 +1,21 @@
+"""Serving-side distribution (ISSUE 8).
+
+Two layers over the single-device serving stack:
+
+* ``distrib.tp`` — tensor-parallel serve meshes. ``serve_mesh(tp)``
+  builds the 1 x tp mesh a ``ModelRuntime`` commits its params / KV /
+  bank state onto (placement rules live in ``sharding.specs``); the
+  module is also one of the two homes (with ``sharding/``) where
+  ``shard_map`` construction is allowed by the CI grep guard.
+* ``distrib.cluster`` — ``EngineCluster``: N engine replicas behind one
+  engine-shaped surface, with adapter-affinity routing (repeat tenants
+  land on the replica whose ``PagedAdapterBank`` already holds their
+  factors — no duplicate page-ins), least-loaded spillover, queued-work
+  rebalancing, and one aggregated ``cluster_stats()`` report whose N=1
+  case is the plain single-engine report.
+"""
+from .cluster import EngineCluster, format_cluster_report
+from .tp import head_shard_map, serve_mesh
+
+__all__ = ["EngineCluster", "format_cluster_report", "head_shard_map",
+           "serve_mesh"]

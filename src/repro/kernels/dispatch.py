@@ -77,27 +77,55 @@ def _interpret() -> bool:
     return _backend() != "tpu"
 
 
+# Serve-time tensor parallelism (ISSUE 8): under ``shard_map``/GSPMD each
+# device traces the kernel on its LOCAL shard, whose shapes alias a
+# different single-device problem (e.g. a tp=2 split of d_ff=256 looks like
+# an unsharded d_ff=128 call). Tunings timed for one must not answer for
+# the other — the launch that wins for the full array can be illegal for
+# the shard — so a meshed ``ModelRuntime`` declares its TP degree here and
+# every key's op name picks up an ``@tpN`` tag. tp=1 (the default, and
+# every pre-existing caller) leaves op names, wildcard semantics
+# (``key[:-2]``) and the persisted REPRO_TUNING_CACHE byte-identical.
+_SERVE_TP: int = 1
+
+
+def set_serve_tp(n: int) -> None:
+    """Declare the serve-time TP degree (1 = off). Called by
+    ``core.runtime.ModelRuntime`` when built with a mesh."""
+    global _SERVE_TP
+    _SERVE_TP = max(int(n), 1)
+
+
+def serve_tp() -> int:
+    return _SERVE_TP
+
+
+def _op(name: str) -> str:
+    return name if _SERVE_TP == 1 else f"{name}@tp{_SERVE_TP}"
+
+
 def bdmm_key(r: int, bo: int, bi: int, dtype,
              backend: Optional[str] = None) -> Key:
-    return ("bdmm", r, bo, bi, jnp.dtype(dtype).name,
+    return (_op("bdmm"), r, bo, bi, jnp.dtype(dtype).name,
             backend or _backend())
 
 
 def gs_key(r: int, b: int, dtype, backend: Optional[str] = None) -> Key:
-    return ("gs", r, b, jnp.dtype(dtype).name, backend or _backend())
+    return (_op("gs"), r, b, jnp.dtype(dtype).name, backend or _backend())
 
 
 def qmm_key(k: int, n: int, dtype, backend: Optional[str] = None) -> Key:
     """Quantized matmul (kernels/q_matmul.py): x (T, k) @ W_q (k, n).
     ``dtype`` is the ACTIVATION dtype (codes are int8 by construction);
     ``Tuning.group_tile`` doubles as the out-channel tile here."""
-    return ("qmm", k, n, jnp.dtype(dtype).name, backend or _backend())
+    return (_op("qmm"), k, n, jnp.dtype(dtype).name, backend or _backend())
 
 
 def gs_qmm_key(r: int, b: int, n: int, dtype,
                backend: Optional[str] = None) -> Key:
     """Fused rotate+quantized-matmul: GS factors (r, b, b), W_q (r*b, n)."""
-    return ("gs_qmm", r, b, n, jnp.dtype(dtype).name, backend or _backend())
+    return (_op("gs_qmm"), r, b, n, jnp.dtype(dtype).name,
+            backend or _backend())
 
 
 def paged_attn_key(h: int, kh: int, d: int, page: int, dtype,
@@ -107,7 +135,7 @@ def paged_attn_key(h: int, kh: int, d: int, page: int, dtype,
     The launch geometry is fixed by (heads, page) — the key exists so the
     serving path resolves through the same registry (and the persisted
     tuning cache) as every other kernel."""
-    return ("paged_attn", h, kh, d, page, jnp.dtype(dtype).name,
+    return (_op("paged_attn"), h, kh, d, page, jnp.dtype(dtype).name,
             backend or _backend())
 
 
@@ -191,12 +219,13 @@ def get_tuning(key: Key) -> Tuning:
         return _OVERRIDES[wc]
     if key in _TUNED:
         return _TUNED[key]
-    if key[0] == "bdmm":
+    op = str(key[0]).split("@", 1)[0]     # strip any serve-TP tag
+    if op == "bdmm":
         _, r, bo, bi = key[:4]
         return Tuning(token_tile=128, group_tile=default_group_tile(r, bi))
-    if key[0] == "qmm":
+    if op == "qmm":
         return Tuning(token_tile=128, group_tile=default_n_tile(key[2]))
-    if key[0] == "gs_qmm":
+    if op == "gs_qmm":
         return Tuning(token_tile=128, group_tile=default_n_tile(key[3]))
     return Tuning(token_tile=128)
 

@@ -35,6 +35,7 @@ import numpy as np
 from repro.config import get_config, get_smoke_config, parse_overrides
 from repro.core import peft as peft_lib
 from repro.core.runtime import ModelRuntime
+from repro.distrib import EngineCluster, format_cluster_report, serve_mesh
 from repro.launch.mesh import make_mesh
 from repro.serve.engine import (PagedServeEngine, ServeEngine,
                                 StaticServeEngine, latency_percentiles)
@@ -58,9 +59,10 @@ def make_demo_adapters(names, params, peft_cfg, seed=1, scale=0.1):
     return out
 
 
-def drive_streaming(eng: ServeEngine, requests, arrivals):
+def drive_streaming(eng, requests, arrivals):
     """Admit requests as they 'arrive' (Poisson sim) while stepping the
-    continuous scheduler; returns results once traffic drains."""
+    continuous scheduler; returns results once traffic drains. ``eng`` is
+    anything engine-shaped — a single engine or an ``EngineCluster``."""
     t0 = time.perf_counter()
     i = 0
     while i < len(requests) or not eng.idle:
@@ -72,7 +74,7 @@ def drive_streaming(eng: ServeEngine, requests, arrivals):
             time.sleep(min(0.005, max(arrivals[i] - now, 0.0)))
             continue
         eng.step()
-    eng.stats["wall_s"] += time.perf_counter() - t0
+    eng.add_wall(time.perf_counter() - t0)
     return {r.rid: r.output for r in eng.finished}
 
 
@@ -103,7 +105,17 @@ def main():
                          " — the ragged workload continuous batching wins on")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals (req/s); 0 = all queued up front")
-    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="'data,model' mesh shape for tensor-parallel "
+                         "serving (params/KV/bank commit per "
+                         "sharding.specs)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="shorthand for --mesh 1,N: split the model over N "
+                         "devices at serve time")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="run N engine replicas behind an EngineCluster "
+                         "with adapter-affinity routing (continuous/paged "
+                         "engines)")
     ap.add_argument("--adapters", nargs="*", default=[],
                     metavar="NAME=CKPT_DIR",
                     help="load named adapters into a per-request bank "
@@ -147,11 +159,23 @@ def main():
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = cfg.with_overrides(**parse_overrides(args.set))
     mesh = None
-    if args.mesh:
+    if args.tp:
+        if args.mesh:
+            raise SystemExit("--tp is shorthand for --mesh 1,N — pass one "
+                             "or the other")
+        mesh = serve_mesh(args.tp)
+    elif args.mesh:
         d, m = (int(x) for x in args.mesh.split(","))
         mesh = make_mesh(d, m)
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.replicas > 1 and args.engine == "static":
+        raise SystemExit("--replicas needs a steppable engine "
+                         "(continuous/paged) — the static engine drains "
+                         "one batch at a time")
 
-    rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0), mesh=mesh)
+    base_rt = ModelRuntime(cfg, key=jax.random.PRNGKey(0), mesh=mesh)
+    rt = base_rt
     max_len = cfg.frontend_tokens + args.prompt_len + args.max_new + 8
 
     # ---- adapter bank / store ----------------------------------------------
@@ -227,19 +251,46 @@ def main():
               f"{before / 1e6:.2f} MB -> {after / 1e6:.2f} MB "
               f"({before / max(after, 1):.2f}x smaller)")
 
+    def replica_runtimes(n: int):
+        """Runtimes for N engine replicas. Stateless runtimes (bankless,
+        eager bank, merged, quantized) are SHARED — engines keep their own
+        KV state, and jitted closures/weights exist once. Only a store-
+        paged bank forces a fresh runtime per replica: paging state
+        (residency, pins, LRU order) must be per-replica for the
+        cluster's adapter-affinity routing to mean anything."""
+        from repro.store import PagedAdapterBank
+        if n == 1 or not isinstance(rt.bank, PagedAdapterBank):
+            return [rt] * n
+        out = [rt]
+        for _ in range(n - 1):
+            r = base_rt.attach(rt.bank.store, hbm_budget=budget)
+            if args.quantize != "none":
+                r = r.quantized(args.quantize)
+            out.append(r)
+        return out
+
     if args.engine == "static":
         if rt.banked:
             raise SystemExit("--adapters needs --engine continuous "
                              "(static serving merges ONE adapter offline)")
         eng = StaticServeEngine(rt, max_batch=args.max_batch,
                                 max_len=max_len)
-    elif args.engine == "paged":
-        eng = PagedServeEngine(rt, max_batch=args.max_batch, max_len=max_len,
-                               page_size=args.page_size,
-                               prefill_chunk=args.prefill_chunk,
-                               hbm_kv_budget=args.hbm_kv_budget or None)
     else:
-        eng = ServeEngine(rt, max_batch=args.max_batch, max_len=max_len)
+        rts = replica_runtimes(args.replicas)
+        if args.engine == "paged":
+            engines = [PagedServeEngine(r, max_batch=args.max_batch,
+                                        max_len=max_len,
+                                        page_size=args.page_size,
+                                        prefill_chunk=args.prefill_chunk,
+                                        hbm_kv_budget=args.hbm_kv_budget
+                                        or None)
+                       for r in rts]
+        else:
+            engines = [ServeEngine(r, max_batch=args.max_batch,
+                                   max_len=max_len) for r in rts]
+        # N=1 rides the same cluster path: the launcher report below IS
+        # cluster_stats(), single-replica being its degenerate case
+        eng = EngineCluster(engines)
 
     # ---- synthetic traffic -------------------------------------------------
     rng = np.random.default_rng(0)
@@ -272,25 +323,10 @@ def main():
     dt = time.perf_counter() - t0
 
     describe(eng, results, args.engine, dt)
-    residency = getattr(eng, "adapter_stats", lambda: None)()
-    if residency is not None:
-        print(f"store residency: hit_rate={residency['hit_rate']:.2f} "
-              f"evictions={residency['evictions']} "
-              f"page_in_p95={residency['page_in_ms_p95']:.1f}ms "
-              f"max_resident={residency['max_resident']}"
-              f"/{residency['capacity']} "
-              f"compaction={residency['compaction_ratio']:.2f}x")
-    kv = getattr(eng, "kv_stats", lambda: None)()
-    if kv is not None:
-        from repro.serve.kv import kv_page_bytes
-        used_pk = kv["num_pages"] - 1
-        print(f"kv residency: pool={kv['num_pages']} pages x "
-              f"{kv['page_size']} tok "
-              f"({used_pk * kv_page_bytes(cfg, kv['page_size']) / 1e6:.2f} "
-              f"MB) alloc={kv['alloc']} prefix_hits={kv['prefix_hits']} "
-              f"kv_stalls={kv['kv_stalls']} "
-              f"cache_evictions={kv['cache_evictions']} "
-              f"cached={kv['cached']}")
+    if isinstance(eng, EngineCluster):
+        # the ONE residency/routing report — replica rows carry the bank
+        # and KV-pool residency that used to be printed ad hoc here
+        print(format_cluster_report(eng.cluster_stats()))
     sample = results[min(results)]
     print("sample output tokens:", sample[:16])
     return 0

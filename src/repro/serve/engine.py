@@ -175,8 +175,42 @@ class ServeEngine:
         return sum(r is not None for r in self._slot_req)
 
     @property
+    def queue_depth(self) -> int:
+        """Requests admitted but not yet slotted (router load signal)."""
+        return len(self._queue)
+
+    @property
+    def load(self) -> int:
+        """Queued + in-flight work — the cluster router's balance metric."""
+        return self.queue_depth + self.num_active
+
+    @property
     def idle(self) -> bool:
         return not self._queue and self.num_active == 0
+
+    def add_wall(self, dt: float) -> None:
+        """Account driver wall time (drivers call this instead of poking
+        ``stats`` so the cluster can aggregate it the same way)."""
+        self.stats["wall_s"] += dt
+
+    # -- cluster hooks (distrib.cluster) --------------------------------------
+    def steal_queued(self) -> Optional[Request]:
+        """Pop the YOUNGEST queued (never-admitted) request so the cluster
+        can rebalance it onto a less-loaded replica; None when empty.
+        Stealing from the tail keeps FIFO order for what stays."""
+        return self._queue.pop() if self._queue else None
+
+    def submit(self, req: Request) -> int:
+        """Enqueue an existing Request under a FRESH local rid (rebalanced
+        arrivals keep their submit timestamp/adapter; rids are per-engine,
+        so a moved request must be re-keyed by the caller)."""
+        self.rt.validate_adapter(req.adapter)
+        _check_capacity(self.cfg, req.prompt, req.max_new_tokens,
+                        self.max_len)
+        req.rid = self._next_id
+        self._next_id += 1
+        self._queue.append(req)
+        return req.rid
 
     # -- internals ------------------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -263,14 +297,22 @@ class ServeEngine:
         still mid-chunked-prefill.)"""
         return self._slot_req[slot] is not None
 
-    def _decode_tick(self) -> None:
-        """One jitted decode step over the full slot array."""
+    def _decode_launch(self):
+        """Dispatch one jitted decode step over the full slot array and
+        return the PENDING next-token array without syncing it. JAX
+        dispatch is async: the device crunches while the host moves on —
+        which is exactly what lets an ``EngineCluster`` launch every
+        replica's tick before blocking on any of them."""
         tokens = jnp.asarray(self._last[:, None])
         pos = jnp.asarray(self._pos)
         ctx = self._context()
         nt, _, self._state = self._decode(self.rt.params, ctx, tokens,
                                           self._state, pos)
         self.stats["decode_steps"] += 1
+        return nt
+
+    def _decode_commit(self, nt) -> None:
+        """Sync the launched step's tokens and advance slot bookkeeping."""
         vals = np.asarray(nt[:, 0])
         for slot in range(self.max_batch):
             if not self._row_active(slot):
@@ -283,14 +325,32 @@ class ServeEngine:
             if tok == self.eos_id or len(self._outs[slot]) >= req.max_new_tokens:
                 self._finish(slot)
 
+    def _decode_tick(self) -> None:
+        """One jitted decode step over the full slot array."""
+        self._decode_commit(self._decode_launch())
+
+    def step_launch(self):
+        """First half of ``step``: admit into free slots, dispatch the
+        decode step, return the pending token array (None when no slot is
+        decoding). Pass the result to ``step_commit`` — splitting the tick
+        lets a multi-replica driver overlap every replica's device work."""
+        self._admit()
+        if self.num_active:
+            return self._decode_launch()
+        return None
+
+    def step_commit(self, pending) -> bool:
+        """Second half of ``step``: sync + bookkeep a launched tick.
+        Returns True if any work remains queued or in flight."""
+        if pending is not None:
+            self._decode_commit(pending)
+        return not self.idle
+
     def step(self) -> bool:
         """One scheduler tick: admit into free slots, then one decode step
         over all active slots. Returns True if any work remains queued or
         in flight (the streaming driver loop condition)."""
-        self._admit()
-        if self.num_active:
-            self._decode_tick()
-        return not self.idle
+        return self.step_commit(self.step_launch())
 
     def drain_finished(self) -> List[Request]:
         """Hand over (and forget) everything completed so far — the
@@ -353,6 +413,13 @@ class StaticServeEngine:
         """Hand over (and forget) the completed-Request history."""
         out, self.finished = self.finished, []
         return out
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def add_wall(self, dt: float) -> None:
+        self.stats["wall_s"] += dt
 
     # -- internals ------------------------------------------------------------
     def _run_batch(self, batch: List[Request]) -> None:
@@ -577,15 +644,16 @@ class PagedServeEngine(ServeEngine):
             self._state["table"].at[slot].set(self._zero_row)
         self.pool.finish(sp)
 
-    def step(self) -> bool:
-        """One tick: admit, feed ONE prompt chunk, one decode step over the
-        decoding slots. Decode latency is bounded by one chunk of prefill
-        per tick — never a whole prompt."""
+    def step_launch(self):
+        """One tick's dispatch half: admit, feed ONE prompt chunk, launch
+        one decode step over the decoding slots. Decode latency is bounded
+        by one chunk of prefill per tick — never a whole prompt. (``step``
+        composes this with the inherited ``step_commit``.)"""
         self._admit()
         self._feed_one_chunk()
         if self._decoding.any():
-            self._decode_tick()
-        return not self.idle
+            return self._decode_launch()
+        return None
 
     def kv_stats(self) -> Dict[str, int]:
         """Page-pool residency counters (allocs, prefix hits, KV stalls,

@@ -215,3 +215,21 @@ class KVPagePool:
         return dict(self.counters, in_use=self.in_use,
                     free=len(self._free), cached=len(self._reusable),
                     num_pages=self.num_pages, page_size=self.page_size)
+
+
+def merge_pool_stats(stats: "List[Dict[str, int]]") -> Dict[str, int]:
+    """Aggregate N replicas' ``KVPagePool.stats()`` into one cluster view:
+    counters and capacities sum (a cluster of two 64-page pools IS a
+    128-page budget); ``page_size`` must agree — mixed geometries would
+    make the summed page counts meaningless."""
+    if not stats:
+        raise ValueError("merge_pool_stats needs at least one stats dict")
+    sizes = {s["page_size"] for s in stats}
+    if len(sizes) > 1:
+        raise ValueError(f"cannot merge pools with mixed page sizes {sizes}")
+    out = dict(stats[0])
+    for s in stats[1:]:
+        for k, v in s.items():
+            if k != "page_size":
+                out[k] += v
+    return out

@@ -8,6 +8,17 @@ falls back to replication (e.g. GQA kv-heads < |model| replicate; the
 mamba2-130m 24-head SSD replicates over 'model' — DESIGN §5).  That makes
 every (arch x shape x mesh) cell lowerable by construction; the roofline
 report then shows the cost of whatever replication was forced.
+
+Serve-time placement (ISSUE 8) lives here too: ``serve_params_tree``
+(quantization-aware — QuantTensor codes shard like their logical weight,
+scales ride along where their keepdims shape divides), ``paged_state_spec``
+(KV page pools split over the kv-head axis, page tables replicated) and
+``bank_spec_tree`` (adapter-bank factor stacks replicated by default, with
+a per-method ``MethodOps.bank_shard_axes`` hook so large GSOFT (L, R)
+stacks can shard over their block axis). ``ModelRuntime`` applies these
+when built with a mesh; a CI grep guard keeps ``NamedSharding``/
+``shard_map`` construction confined to ``sharding/`` and ``distrib/`` so
+placement policy has one home.
 """
 from __future__ import annotations
 
@@ -202,6 +213,98 @@ class ShardingRules:
                 x, NamedSharding(mesh, spec))
         return shard
 
+    # -- serve-time placement (ISSUE 8) ---------------------------------------
+    def _fit(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Divisibility guard at leaf granularity: any spec axis whose dim
+        does not divide its mesh axes drops to None (replicated). This is
+        what lets ONE rule cover a weight and its keepdims quantization
+        scales (a size-1 dim can never shard)."""
+        sizes = dict(self.mesh.shape)
+        out = []
+        for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if ax is None:
+                out.append(None)
+                continue
+            n = int(np.prod([sizes[a] for a in
+                             ((ax,) if isinstance(ax, str) else ax)]))
+            out.append(ax if dim % n == 0 else None)
+        return P(*out)
+
+    def serve_params_tree(self, params: Tree) -> Tree:
+        """Param placement specs for a SERVING runtime. Unlike
+        ``params_tree`` this understands quantized trees: a ``QuantTensor``
+        leaf expands to per-child specs — the int8/fp8 codes shard exactly
+        like the logical weight (same shape), and the fp32 scales reuse the
+        same spec wherever their keepdims shape divides (a per-channel
+        scale keeps its out-channel split; the size-1 reduced dims
+        replicate via the ``_fit`` guard)."""
+        from repro.core.peft import path_str
+        from repro.quant.core import QuantTensor, is_quant_tensor
+        import jax.tree_util as jtu
+
+        def one(p, leaf):
+            spec = self.param_spec(path_str(p), tuple(leaf.shape))
+            if is_quant_tensor(leaf):
+                return QuantTensor(q=self._fit(spec, leaf.q.shape),
+                                   scale=self._fit(spec, leaf.scale.shape),
+                                   meta=leaf.meta)
+            return self._fit(spec, leaf.shape)
+
+        return jtu.tree_map_with_path(one, params, is_leaf=is_quant_tensor)
+
+    def paged_state_spec(self, abstract: Tree) -> Tree:
+        """Paged-KV serve state: the per-layer (P, page, K, hd) page pools
+        (layer-stacked: (L, P, page, K, hd)) shard over the KV-HEAD axis on
+        'model' — every device holds its heads' slice of EVERY page, so the
+        host-side page table stays replicated int32 and allocation policy
+        never sees the mesh. Tables/scalars replicate."""
+        kv = "model" if self.kv_heads_shardable else None
+
+        from repro.core.peft import path_str
+        import jax.tree_util as jtu
+
+        def one(p, l):
+            path = path_str(p)
+            if "pages/" in path or path.endswith(("/k", "/v")):
+                # (L, P, page, K, hd) or (P, page, K, hd): K is axis -2
+                spec = [None] * l.ndim
+                if l.ndim >= 2:
+                    spec[l.ndim - 2] = kv
+                return self._fit(P(*spec), l.shape)
+            return P()        # page table, scalars: replicated
+
+        return jtu.tree_map_with_path(one, abstract)
+
+    def bank_spec_tree(self, bank_tree: Tree) -> Tree:
+        """Adapter-bank factor placement: REPLICATED by default (bank
+        factors are tiny next to the base weights, and every row of a
+        decode batch may gather any slot), with a per-method opt-out — a
+        ``MethodOps.bank_shard_axes`` hook names the factor axis that may
+        split over 'model' (GSOFT's block axis: thousands of resident
+        (L, R) stacks are the one bank that outgrows replication)."""
+        from repro.core import methods as methods_lib
+        from repro.core.peft import path_str
+        import jax.tree_util as jtu
+
+        registered = set(methods_lib.registered())
+
+        def one(p, leaf):
+            parts = path_str(p).split("/")
+            method = next((s for s in parts if s in registered), None)
+            if method is None:
+                return P()
+            hook = methods_lib.get(method).bank_shard_axes
+            if hook is None:
+                return P()
+            ax = hook(parts[-1], tuple(leaf.shape))
+            if ax is None:
+                return P()
+            spec = [None] * leaf.ndim
+            spec[ax % leaf.ndim] = "model"
+            return self._fit(P(*spec), leaf.shape)
+
+        return jtu.tree_map_with_path(one, bank_tree)
+
     # -- batches / states ------------------------------------------------------
     def batch_spec(self, abstract: Tree, batch_size: int) -> Tree:
         ok = _div(batch_size, dp_size(self.mesh))
@@ -247,3 +350,11 @@ class ShardingRules:
 def named(mesh: Mesh, spec_tree: Tree) -> Tree:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+def place(mesh: Mesh, tree: Tree, spec_tree: Tree) -> Tree:
+    """``device_put`` a (possibly quantized) tree onto the mesh per its
+    spec tree. The ONE entry point non-sharding code uses to commit serve
+    state — ``NamedSharding`` construction stays inside this module (CI
+    grep guard)."""
+    return jax.device_put(tree, named(mesh, spec_tree))

@@ -154,6 +154,12 @@ class PagedAdapterBank:
     def resident(self) -> Tuple[str, ...]:
         return tuple(self._resident)
 
+    def is_resident(self, name: str) -> bool:
+        """Is this adapter's factor set currently paged into HBM? The
+        cluster router's affinity probe — warm here means admitting here
+        skips the page-in entirely."""
+        return name in self._resident
+
     def cfg_for(self, name: str) -> peft_lib.PEFTConfig:
         return self.store.cfg_for(name)
 

@@ -11,6 +11,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.mark.slow
+@pytest.mark.distributed
 def test_distributed_stack():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
