@@ -1,0 +1,271 @@
+"""Image serving benchmark: the 1-Lipschitz GS-SOC convnet served as a
+registered stateless family with per-request orthogonal conv adapters
+(ISSUE 9 acceptance).
+
+Multi-tenant batched workload through ``ImageServeEngine`` (methods
+round-robin over gsoft/givens/householder — channel-axis rotations of the
+conv feature stream), measured AND verified:
+
+  throughput   warmup-then-timed mixed-tenant run (images/s at the tick
+               batch size), single engine and a 2-replica EngineCluster
+  equality     every request's banked logits match its tenant's solo
+               offline-merged run — argmax (predicted class) EQUAL, logits
+               allclose — in f32, bf16, and over int8 base weights (the
+               identity ``wc`` quantizes exactly; gsoft rides the fused
+               rotate+quantized-matmul path)
+  store-paged  the same workload over an AdapterStore-backed bank at a
+               resident budget below the tenant count: outputs must equal
+               the eager bank's bit for bit
+  certified    margin-certified accuracy (radius 36/255) of the banked
+               base (identity slot) must EQUAL the unbanked model's — the
+               bank attaches without touching the Lipschitz certificate
+
+Summary lands in ``BENCH_image.json``; ``REPRO_BENCH_TINY=1`` shrinks the
+workload for the CI smoke lane.
+"""
+from __future__ import annotations
+
+import collections
+import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.config import get_smoke_config
+from repro.core import peft as peft_lib
+from repro.core.conv import certified_radius
+from repro.core.runtime import ModelRuntime
+from repro.data.synthetic import image_batch
+from repro.distrib import EngineCluster
+from repro.models import registry
+from repro.models.image import CERT_EPS
+from repro.serve.image import ImageServeEngine
+from repro.store import AdapterStore
+
+from .common import emit, run_engine_timed, write_summary
+from .table3_lipconvnet import _freeze_wc
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+
+METHODS = ("gsoft", "givens", "householder")
+
+
+def _tenants(params, n, scale=0.3):
+    """n named conv-adapter tenants, methods round-robin (mixed bank)."""
+    cfgs = {f"t{i}": peft_lib.PEFTConfig(method=METHODS[i % len(METHODS)],
+                                         block_size=4)
+            for i in range(n)}
+    adapters = {}
+    for i, (name, cfg) in enumerate(cfgs.items()):
+        key = jax.random.PRNGKey(i + 1)
+        ad = peft_lib.init_peft(cfg, params, key)
+        adapters[name] = jax.tree.map(
+            lambda a, k=key: a + scale * jax.random.normal(
+                jax.random.fold_in(k, 7), a.shape), ad)
+    return adapters, cfgs
+
+
+def _workload(cfg, n_req, names, seed=0) -> List[Dict]:
+    """Template-plus-noise images (the learnable class manifold) so a
+    trained model's top-2 margins are decisive at every precision."""
+    imgs = np.asarray(image_batch(cfg, n_req, seed=seed)["images"],
+                      np.float32)
+    return [{"prompt": imgs[i], "max_new_tokens": 1,
+             "adapter": names[i % len(names)]} for i in range(n_req)]
+
+
+def _pretrain(cfg, rt, steps=12):
+    """A few margin-loss steps on the class manifold (``wc`` attachment
+    points frozen, as in table3) — enough for nonzero certified accuracy,
+    so the banked-vs-unbanked certificate check is not vacuously 0 == 0."""
+    ops = registry.get(cfg.family)
+    train = image_batch(cfg, 64, seed=2)
+    ocfg = optim.OptimizerConfig(learning_rate=1e-3, weight_decay=0.0,
+                                 grad_clip=0.5)
+    params = rt.params
+    opt = optim.init(ocfg, params)
+
+    @jax.jit
+    def step(p, o):
+        (_, _), g = jax.value_and_grad(
+            lambda q: ops.loss(cfg, q, train), has_aux=True)(p)
+        p, o, _ = optim.update(ocfg, _freeze_wc(g), o, p)
+        return p, o
+
+    for _ in range(steps):
+        params, opt = step(params, opt)
+    return ModelRuntime(cfg, params)
+
+
+def _serve_logits(eng, workload) -> Dict[int, np.ndarray]:
+    """{workload index: logits} through an engine (or cluster of them)."""
+    rids = [eng.add_request(**req) for req in workload]
+    eng.run()
+    if isinstance(eng, EngineCluster):
+        by_rid = {r.rid: r.logits for r in eng.drain_finished()}
+    else:
+        by_rid = dict(eng.result_logits)
+        eng.drain_finished()
+    return {i: by_rid[rid] for i, rid in enumerate(rids)}
+
+
+def _solo_logits(cfg, params, adapters, cfgs, workload,
+                 quantize: Optional[str] = None) -> Dict[int, np.ndarray]:
+    """Per-tenant offline-merged reference: one ModelRuntime per adapter
+    (identity slot -> the bare model), whole tenant batch in one forward."""
+    by_name = collections.defaultdict(list)
+    for i, req in enumerate(workload):
+        by_name[req["adapter"]].append(i)
+    out = {}
+    for name, idxs in by_name.items():
+        rt = (ModelRuntime(cfg, params) if name is None else
+              ModelRuntime(cfg, params, adapters=adapters[name],
+                           peft_cfg=cfgs[name]))
+        if quantize:
+            rt = rt.quantized(quantize)
+        imgs = np.stack([workload[i]["prompt"] for i in idxs])
+        logits = np.asarray(rt.infer(jnp.asarray(imgs)))
+        for j, i in enumerate(idxs):
+            out[i] = logits[j]
+    return out
+
+
+def _assert_equal(banked: Dict[int, np.ndarray], solo: Dict[int, np.ndarray],
+                  atol: float, tag: str):
+    """Logits within ``atol``; predicted class EQUAL on every request whose
+    solo top-2 margin exceeds ``2*atol`` — below that the argmax is
+    undetermined at this precision (the same margin-beats-radius rule the
+    Lipschitz certificate applies). Returns (max |diff|, decisive count)."""
+    worst, decisive = 0.0, 0
+    for i, b in banked.items():
+        b = b.astype(np.float32)
+        s = solo[i].astype(np.float32)
+        worst = max(worst, float(np.abs(b - s).max()))
+        top2 = np.sort(s)[-2:]
+        if top2[1] - top2[0] > 2 * atol:
+            decisive += 1
+            assert int(b.argmax()) == int(s.argmax()), \
+                f"{tag}: request {i} class {b.argmax()} != solo {s.argmax()}"
+    assert worst <= atol, f"{tag}: max logits diff {worst:.2e} > {atol}"
+    return worst, decisive
+
+
+def _cert_acc(logits: np.ndarray, labels: np.ndarray) -> float:
+    correct = logits.argmax(-1) == labels
+    radii = np.asarray(certified_radius(jnp.asarray(logits)))
+    return float(np.mean((radii > CERT_EPS) & correct))
+
+
+def run():
+    cfg = get_smoke_config("lipconvnet-15")          # f32
+    n_tenants = 6 if TINY else 12
+    n_req = 24 if TINY else 96
+    max_batch = 4 if TINY else 8
+    budget = 3 if TINY else 6                        # < n_tenants: paging
+
+    base = _pretrain(cfg, ModelRuntime(cfg, key=jax.random.PRNGKey(0)))
+    adapters, cfgs = _tenants(base.params, n_tenants)
+    names = [None] + list(cfgs)                      # identity slot serves
+    workload = _workload(cfg, n_req, names)          # the base model
+    warmup = _workload(cfg, max_batch, names, seed=1)
+
+    # -- throughput: eager mixed-method bank ---------------------------------
+    brt = base.attach(adapters, cfgs)
+    res = run_engine_timed(lambda: ImageServeEngine(brt, max_batch=max_batch),
+                           warmup, workload)
+    emit("image/eager_serve", 1e6 / max(res["tok_s"], 1e-9),
+         f"img_s={res['tok_s']:.1f};ticks={res['decode_steps']};"
+         f"util={res['util']:.2f};p95_ms={res['p95_ms']:.0f}")
+
+    # -- equality vs solo merged: f32, bf16, int8 ----------------------------
+    banked = _serve_logits(ImageServeEngine(brt, max_batch=max_batch),
+                           workload)
+    d32, n32 = _assert_equal(banked, _solo_logits(cfg, base.params, adapters,
+                                                  cfgs, workload),
+                             1e-5, "f32")
+    assert n32 == n_req, "f32 margins must all be decisive"
+    emit("image/banked_vs_solo_f32", 0.0,
+         f"requests={n_req};max_diff={d32:.2e};decisive={n32}")
+
+    bf16 = cfg.with_overrides(dtype="bf16")
+    brt16 = ModelRuntime(bf16, base.params).attach(adapters, cfgs)
+    banked16 = _serve_logits(ImageServeEngine(brt16, max_batch=max_batch),
+                             workload)
+    d16, n16 = _assert_equal(banked16, _solo_logits(bf16, base.params,
+                                                    adapters, cfgs, workload),
+                             0.06, "bf16")
+    emit("image/banked_vs_solo_bf16", 0.0,
+         f"max_diff={d16:.2e};decisive={n16}")
+
+    qrt = brt.quantized("int8")
+    bankedq = _serve_logits(ImageServeEngine(qrt, max_batch=max_batch),
+                            workload)
+    dq, nq = _assert_equal(bankedq, _solo_logits(cfg, base.params, adapters,
+                                                 cfgs, workload,
+                                                 quantize="int8"),
+                           0.08, "int8")
+    emit("image/banked_vs_solo_int8", 0.0, f"max_diff={dq:.2e};decisive={nq}")
+
+    # -- store-paged bank below tenant count ---------------------------------
+    store = AdapterStore.from_adapters(adapters, cfgs)
+    srt = base.attach(store, hbm_budget=budget)
+    seng = ImageServeEngine(srt, max_batch=max_batch)
+    paged = _serve_logits(seng, workload)
+    for i in range(n_req):
+        np.testing.assert_array_equal(
+            paged[i], banked[i],
+            err_msg=f"request {i}: store-paged logits != eager bank")
+    astats = seng.adapter_stats()
+    emit("image/store_paged", 0.0,
+         f"budget={budget};tenants={n_tenants};"
+         f"evictions={astats['evictions']};"
+         f"stalls={seng.stats['admission_stalls']};exact=1")
+
+    # -- certified accuracy: banked base == unbanked -------------------------
+    labeled = image_batch(cfg, 32 if TINY else 128, seed=3)
+    imgs = np.asarray(labeled["images"])
+    labels = np.asarray(labeled["labels"])
+    plain = np.asarray(ModelRuntime(cfg, base.params).infer(
+        jnp.asarray(imgs)))
+    base_load = [{"prompt": imgs[i], "max_new_tokens": 1, "adapter": None}
+                 for i in range(len(imgs))]
+    banked_base = _serve_logits(ImageServeEngine(brt, max_batch=max_batch),
+                                base_load)
+    stack = np.stack([banked_base[i] for i in range(len(imgs))])
+    np.testing.assert_array_equal(
+        stack, plain, err_msg="identity-slot banked logits != unbanked")
+    cert = _cert_acc(plain, labels)
+    assert cert > 0.0, "pretrained base should certify some of the manifold"
+    assert _cert_acc(stack, labels) == cert
+    emit("image/certified_base", 0.0,
+         f"cert_acc={cert:.3f};radius={CERT_EPS:.4f};exact=1")
+
+    # -- 2-replica cluster over the shared eager bank ------------------------
+    cluster = EngineCluster([ImageServeEngine(brt, max_batch=max_batch)
+                             for _ in range(2)])
+    clustered = _serve_logits(cluster, workload)
+    for i in range(n_req):
+        np.testing.assert_array_equal(
+            clustered[i], banked[i],
+            err_msg=f"request {i}: cluster logits != single engine")
+    emit("image/cluster_2x", 0.0,
+         f"routed={cluster.routing['routed']};"
+         f"hits={cluster.routing['affinity_hits']};exact=1")
+
+    write_summary("image", {
+        "backend": jax.default_backend(), "arch": cfg.name,
+        "tenants": n_tenants, "requests": n_req, "max_batch": max_batch,
+        "img_s": res["tok_s"], "p50_ms": res["p50_ms"],
+        "p95_ms": res["p95_ms"], "util": res["util"],
+        "max_diff_f32": d32, "max_diff_bf16": d16, "max_diff_int8": dq,
+        "decisive_f32": n32, "decisive_bf16": n16, "decisive_int8": nq,
+        "store_budget": budget, "store_evictions": astats["evictions"],
+        "cert_acc_base": cert,
+    })
+
+
+if __name__ == "__main__":
+    run()

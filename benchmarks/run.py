@@ -14,13 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-list of {table1,table2,table3,micro,kernels,"
-                         "serve,quant,methods,store,kv}")
+                         "serve,quant,methods,store,kv,image}")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     from . import table1_glue, table2_subject, table3_lipconvnet
-    from . import kernels_bench, kv_bench, method_bench, micro_gs, \
-        quant_bench, serve_bench, store_bench
+    from . import image_bench, kernels_bench, kv_bench, method_bench, \
+        micro_gs, quant_bench, serve_bench, store_bench
 
     suites = [
         ("table1", table1_glue.run),
@@ -33,6 +33,7 @@ def main() -> None:
         ("methods", method_bench.run),
         ("store", store_bench.run),
         ("kv", kv_bench.run),
+        ("image", image_bench.run),
     ]
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -1,74 +1,87 @@
-"""Paper Table 3/4 (LipConvnet-15, CIFAR-100) — scaled reproduction.
+"""Paper Table 3/4 (LipConvnet-15, CIFAR-100) — scaled reproduction on the
+REGISTERED ``image`` family (ISSUE 9: no direct LipConvnet calls — every
+variant builds a ``ModelConfig`` and runs through ``ModelRuntime``, the
+same path the serving lane uses).
 
 Synthetic 32x32 images (no CIFAR offline), LipConvnet-10 at reduced width:
   * conv-parameter compression SOC -> GS-SOC (paper: 24.1M -> 6.81M, 3.5x)
   * forward speedup of GS-SOC groups (4,-) / (4,1) vs SOC
   * certified-robust-accuracy machinery end-to-end (margin / sqrt(2))
   * Table 4 ablation direction: paired shuffle + MaxMinPermuted >= MaxMin
+
+Training trains the LipConvnet weights only — the identity ``wc``
+channel-mix leaves (the adapter/quant attachment points) stay FROZEN, as
+in the serving story: base training never moves them, orthogonal adapters
+rotate them per tenant.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
-from repro.models.lipconvnet import (LipConvnetConfig, apply_lipconvnet,
-                                     count_conv_params, init_lipconvnet,
-                                     lipconvnet_loss)
+from repro.config import get_smoke_config
+from repro.core.runtime import ModelRuntime
+from repro.data.synthetic import image_batch
+from repro.models import registry
+from repro.models.image import lip_cfg
+from repro.models.lipconvnet import count_conv_params
 from .common import emit, time_fn
 
-BASE = dict(depth=10, base_width=8, num_classes=10, image_size=32, terms=4)
+BASE = get_smoke_config("lipconvnet-15")     # depth 10 / width 8 / 10 classes
 
 
 def _cfg(conv_layer, groups, activation="maxmin_permuted", paired=True):
-    return LipConvnetConfig(conv_layer=conv_layer, groups=groups,
-                            activation=activation, paired_shuffle=paired,
-                            **BASE)
+    return BASE.with_overrides(conv_layer=conv_layer, conv_groups=groups,
+                               conv_activation=activation,
+                               paired_shuffle=paired)
 
 
-def _data(key, n=128):
-    x = jax.random.normal(key, (n, 32, 32, 3)) * 0.5
-    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 10))
-    feats = x[:, :8, :8].mean(axis=(1, 2))          # (n, 3)
-    labels = jnp.argmax(feats @ w, axis=-1)
-    return x, labels
+def _freeze_wc(grads):
+    """Zero the identity channel-mix grads: ``wc`` is an adapter
+    attachment point, not a base-training weight (unconstrained training
+    would break the 1-Lipschitz bound the certificate needs)."""
+    from repro.core.peft import path_str
+    return jax.tree_util.tree_map_with_path(
+        lambda p, g: jnp.zeros_like(g) if path_str(p).endswith("/wc") else g,
+        grads)
 
 
 def run():
     rows = {}
-    x, labels = _data(jax.random.PRNGKey(0))
+    batch = image_batch(BASE, 64, seed=0)
     variants = [
         ("SOC", _cfg("soc", (1, 0), activation="maxmin", paired=False)),
-        ("GS-SOC_4-", _cfg("gs", (4, 0))),
-        ("GS-SOC_4-1", _cfg("gs", (4, 1))),
-        ("GS-SOC_4-2", _cfg("gs", (4, 2))),
+        ("GS-SOC_4-", _cfg("gs_soc", (4, 0))),
+        ("GS-SOC_4-1", _cfg("gs_soc", (4, 1))),
+        ("GS-SOC_4-2", _cfg("gs_soc", (4, 2))),
         ("GS-SOC_4-_maxmin_unpaired",
-         _cfg("gs", (4, 0), activation="maxmin", paired=False)),
+         _cfg("gs_soc", (4, 0), activation="maxmin", paired=False)),
     ]
     soc_params = soc_us = None
     for name, cfg in variants:
-        params = init_lipconvnet(cfg, jax.random.PRNGKey(1))
-        fwd = jax.jit(lambda p, v: apply_lipconvnet(cfg, p, v))
-        us = time_fn(fwd, params, x[:32], iters=5)
-        n_conv = count_conv_params(cfg)
+        ops = registry.get(cfg.family)
+        rt = ModelRuntime(cfg, key=jax.random.PRNGKey(1))
+        fwd = rt.infer_fn()
+        us = time_fn(fwd, rt.params, None, batch["images"][:32], iters=5)
+        n_conv = count_conv_params(lip_cfg(cfg))
 
         # few training steps: loss must go down, certified acc computable
         # (LR conservative: the margin loss destabilizes plain SOC above 1e-3)
+        params = rt.params
         ocfg = optim.OptimizerConfig(learning_rate=1e-3, weight_decay=0.0,
                                      grad_clip=0.5)
         opt = optim.init(ocfg, params)
 
         @jax.jit
-        def step(p, o):
+        def step(p, o, cfg=cfg, ops=ops, ocfg=ocfg):
             (l, m), g = jax.value_and_grad(
-                lambda q: lipconvnet_loss(cfg, q, x[:64], labels[:64]),
-                has_aux=True)(p)
-            p, o, _ = optim.update(ocfg, g, o, p)
+                lambda q: ops.loss(cfg, q, batch), has_aux=True)(p)
+            p, o, _ = optim.update(ocfg, _freeze_wc(g), o, p)
             return p, o, l, m
 
         l0 = None
-        for s in range(15):
+        for _ in range(15):
             params, opt, l, m = step(params, opt)
             l0 = float(l) if l0 is None else l0
         derived = (f"conv_params={n_conv};loss0={l0:.3f};"

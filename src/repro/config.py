@@ -18,7 +18,7 @@ DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16}
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: str                      # decoder | encdec | hybrid | ssm | vlm
+    family: str              # decoder | encdec | hybrid | ssm | vlm | image
     num_layers: int
     d_model: int
     num_heads: int = 0
@@ -52,6 +52,18 @@ class ModelConfig:
 
     # encoder-decoder
     enc_layers: int = 0
+
+    # image family (1-Lipschitz GS-SOC convnet; models/image.py)
+    image_size: int = 0              # input H = W
+    in_channels: int = 3
+    num_classes: int = 0
+    base_width: int = 0              # stage-0 conv width (doubles per block)
+    conv_layer: str = "gs_soc"       # gs_soc | soc
+    conv_groups: Tuple[int, int] = (1, 1)   # GS group counts (g1, g2)
+    conv_kernel: int = 3
+    conv_terms: int = 6              # conv-exponential Taylor terms
+    conv_activation: str = "maxmin"  # maxmin | maxmin_permuted
+    paired_shuffle: bool = False
 
     # modality frontend stub ([vlm]/[audio]: precomputed embeddings)
     frontend: str = "none"           # none | patch | frames

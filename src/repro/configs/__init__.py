@@ -2,4 +2,4 @@
 package registers every config with repro.config."""
 from . import (qwen2_72b, mistral_large_123b, granite_34b, gemma_7b,
                phi35_moe_42b, qwen3_moe_30b, zamba2_2p7b, pixtral_12b,
-               mamba2_130m, seamless_m4t_medium)
+               mamba2_130m, seamless_m4t_medium, lipconvnet_15)

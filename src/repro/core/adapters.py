@@ -61,6 +61,7 @@ class AdapterSpec:
     alpha: float = 16.0            # lora scaling
     boft_factors: int = 2          # BOFT m
     reflections: int = 4           # householder factor count (even)
+    givens_rounds: int = 4         # givens brick-wall round count
     neumann_order: Optional[int] = None   # approximate Cayley (perf option)
     use_scale: bool = False        # learnable per-output magnitude
     use_pallas: bool = False       # GS rotations via the Pallas kernel path
@@ -509,6 +510,106 @@ def householder_rotate_banked(entry: Params, ids: Array, x: Array,
     einsum fallback on every backend."""
     V = jnp.take(entry["V"], ids, axis=0).astype(x.dtype)  # (B, k, d)
     return kernel_ops.householder_banked(V, x, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Givens rounds  (GOFT: Q = G_m .. G_1, each G_l one brick-wall round of
+# disjoint 2x2 plane rotations — quasi-Givens orthogonal fine-tuning,
+# arXiv 2404.04316)
+# ---------------------------------------------------------------------------
+
+def _givens_num_rounds(spec: AdapterSpec) -> int:
+    m = spec.givens_rounds
+    if m <= 0:
+        raise ValueError(f"givens needs a positive round count; got {m}")
+    return m
+
+
+def _givens_pairs(d: int, level: int) -> np.ndarray:
+    """Left indices of round ``level``'s disjoint neighbor pairs (i, i+1).
+
+    Brick-wall layout: even rounds pair (0,1),(2,3),..; odd rounds shift by
+    one — (1,2),(3,4),.. — so two consecutive rounds couple every coordinate
+    with both neighbors (odd-even transposition network). Boundary elements
+    with no partner stay fixed, which also handles odd d."""
+    off = level % 2
+    return off + 2 * np.arange((d - off) // 2)
+
+
+def _givens_apply(theta: Array, y: Array, transpose: bool) -> Array:
+    """Apply Q = G_{m-1}..G_0 (or Q^T) to vectors on the last axis of y.
+
+    theta: (m, d//2) angles — round l consumes its first ``len(pairs(l))``
+    columns (odd rounds have one fewer pair; the tail is ignored and stays
+    zero from init). Q^T = reversed rounds with negated angles. Rotations
+    run in fp32 (angles are tiny; the cos/sin and pair updates are exact
+    enough that Q stays orthogonal to fp32 roundoff for ANY theta — like
+    Householder, the method never leaves the orthogonal group)."""
+    m = theta.shape[0]
+    d = y.shape[-1]
+    t32 = theta.astype(jnp.float32)
+    c_all, s_all = jnp.cos(t32), jnp.sin(t32)
+    y32 = y.astype(jnp.float32)
+    for lvl in (reversed(range(m)) if transpose else range(m)):
+        ii = _givens_pairs(d, lvl)
+        if ii.size == 0:
+            continue
+        c = c_all[lvl, :ii.size]
+        s = -s_all[lvl, :ii.size] if transpose else s_all[lvl, :ii.size]
+        a, b = y32[..., ii], y32[..., ii + 1]
+        y32 = y32.at[..., ii].set(c * a - s * b)
+        y32 = y32.at[..., ii + 1].set(s * a + c * b)
+    return y32.astype(y.dtype)
+
+
+def givens_init(spec: AdapterSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    del key  # theta = 0 -> every round is I -> Q = I
+    m = _givens_num_rounds(spec)
+    return {"theta": jnp.zeros(
+        _maybe_batch((m, spec.d_in // 2), spec.batch), dtype)}
+
+
+def givens_materialize(spec: AdapterSpec, params: Params, W: Array) -> Array:
+    """Q @ W round by round on the columns of W — O(m d n) total, no dense
+    Q, and (like Householder) no block-divisibility constraint on d_in."""
+    del spec
+    WT = jnp.swapaxes(W, -1, -2)
+    WT = _givens_apply(params["theta"], WT, transpose=False)
+    return jnp.swapaxes(WT, -1, -2)
+
+
+def givens_apply_T(spec: AdapterSpec, params: Params, x: Array) -> Array:
+    """x -> x Q = (Q^T x^T)^T: rounds reversed, angles negated."""
+    del spec
+    return _givens_apply(params["theta"], x, transpose=True)
+
+
+def givens_param_count(spec: AdapterSpec) -> int:
+    return _givens_num_rounds(spec) * (spec.d_in // 2)
+
+
+def givens_bank_build(spec: AdapterSpec, params_by_slot) -> Params:
+    """{"c"/"s": (..., A, m, d//2)} PRE-EVALUATED cos/sin stacks (the
+    trig runs once at build time); the identity slot is c = 1, s = 0."""
+    m = _givens_num_rounds(spec)
+    p = spec.d_in // 2
+    ident = {"c": jnp.ones(_maybe_batch((m, p), spec.batch), jnp.float32),
+             "s": jnp.zeros(_maybe_batch((m, p), spec.batch), jnp.float32)}
+    processed = [None if pr is None else
+                 {"c": jnp.cos(pr["theta"].astype(jnp.float32)),
+                  "s": jnp.sin(pr["theta"].astype(jnp.float32))}
+                 for pr in params_by_slot]
+    return _stack_slots(spec, ident, processed)
+
+
+def givens_rotate_banked(entry: Params, ids: Array, x: Array,
+                         use_pallas: bool = False) -> Array:
+    """Per-row x_i Q_{ids[i]} for Givens rounds. Like Householder, the op
+    is O(m d) per token — bandwidth-trivial — so ``ops.givens_banked`` is
+    the reference implementation on every backend."""
+    C = jnp.take(entry["c"], ids, axis=0)               # (B, m, p)
+    S = jnp.take(entry["s"], ids, axis=0)
+    return kernel_ops.givens_banked(C, S, x, use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------

@@ -185,6 +185,19 @@ register(MethodOps(
 ))
 
 register(MethodOps(
+    method="givens",
+    structure="Q = G_m..G_1 (brick-wall Givens rounds, GOFT)",
+    orthogonal=True,
+    init_params=_ad.givens_init,
+    materialize=_ad.givens_materialize,
+    param_count=_ad.givens_param_count,
+    apply_activation_side=_ad.givens_apply_T,
+    bank_build=_ad.givens_bank_build,
+    bank_rotator=_ad.givens_rotate_banked,
+    quant_compatible=True,
+))
+
+register(MethodOps(
     method="lora",
     structure="W + (alpha/r) A B (low-rank residual)",
     orthogonal=False,

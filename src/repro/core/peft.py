@@ -35,6 +35,7 @@ DEFAULT_TARGETS: Tuple[str, ...] = (
     r".*/(wq|wk|wv|wo|wi|wg)$",       # attention + MLP/MoE projections
     r".*/(wz|wx)$",                   # mamba in-projections (z / x branches)
     r".*/(in_proj|out_proj)$",
+    r".*/wc$",                        # image-family conv channel mixers
 )
 
 
@@ -47,6 +48,7 @@ class PEFTConfig:
     alpha: float = 16.0
     boft_factors: int = 2
     reflections: int = 4           # householder factor count (even)
+    givens_rounds: int = 4         # givens brick-wall round count
     neumann_order: Optional[int] = None
     use_scale: bool = False
     use_pallas: bool = False       # GS rotations via the Pallas kernel path
@@ -114,6 +116,7 @@ def spec_for(cfg: PEFTConfig, shape: Tuple[int, ...]) -> AdapterSpec:
         alpha=cfg.alpha,
         boft_factors=cfg.boft_factors,
         reflections=cfg.reflections,
+        givens_rounds=cfg.givens_rounds,
         neumann_order=cfg.neumann_order,
         use_scale=cfg.use_scale,
         use_pallas=cfg.use_pallas,

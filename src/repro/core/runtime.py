@@ -369,7 +369,17 @@ class ModelRuntime:
         return load_adapter_checkpoints(entries)
 
     # -- family ops / state ---------------------------------------------------
+    @property
+    def stateless(self) -> bool:
+        """True for families with no token-level decode state (they serve
+        whole inputs through ``infer_fn`` — e.g. ``image``)."""
+        return self._ops.stateless
+
     def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0):
+        if self._ops.init_decode_state is None:
+            raise ValueError(
+                f"family {self.cfg.family!r} is stateless — it has no "
+                "decode state; serve it through infer_fn / ImageServeEngine")
         return self._ops.init_decode_state(self.cfg, batch, max_len, enc_len)
 
     def decode_state(self, batch: int, max_len: int, enc_len: int = 0):
@@ -465,6 +475,27 @@ class ModelRuntime:
                                         enc_len=enc_len),
                 donate_argnums=(2,))
         return cache[key]
+
+    def infer_fn(self):
+        """jitted (params, ctx, inputs) -> logits — the STATELESS serving
+        entry point (``FamilyOps.infer``): one whole-input batched forward,
+        no KV. ``ctx`` is the same AdapterContext the decode path takes, so
+        per-request banked adapters work identically."""
+        if self._jit.get("infer") is None:
+            if self._ops.infer is None:
+                raise ValueError(
+                    f"family {self.cfg.family!r} has no stateless infer "
+                    "entry point — serve it through prefill/decode")
+            cfg, shard = self.cfg, self._shard()
+            fam = self._ops
+            self._jit["infer"] = jax.jit(
+                lambda params, ctx, inputs: fam.infer(cfg, params, inputs,
+                                                      shard, ctx=ctx))
+        return self._jit["infer"]
+
+    def infer(self, inputs,
+              ctx: Optional[peft_lib.AdapterContext] = None):
+        return self.infer_fn()(self.params, ctx, inputs)
 
     def loss_fn(self):
         """jitted (params, batch) -> (loss, metrics)."""

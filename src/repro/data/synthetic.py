@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.models import registry
 
 Array = jnp.ndarray
 
@@ -41,7 +42,8 @@ def _token_stream(key, batch: int, seq: int, vocab: int) -> Array:
 def lm_batch(cfg: ModelConfig, batch: int, seq: int,
              seed: int = 0) -> Dict[str, Array]:
     key = jax.random.PRNGKey(seed)
-    if cfg.family == "vlm":
+    t = registry.get(cfg.family)
+    if t.has_patches:
         p = cfg.frontend_tokens
         s_text = max(seq - p, 8)
         toks = _token_stream(key, batch, s_text + 1, cfg.vocab_size)
@@ -50,7 +52,7 @@ def lm_batch(cfg: ModelConfig, batch: int, seq: int,
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
                 "mask": jnp.ones((batch, s_text), jnp.float32),
                 "patches": patches.astype(cfg.act_dtype)}
-    if cfg.family == "encdec":
+    if t.has_encoder:
         frames = jax.random.normal(jax.random.fold_in(key, 2),
                                    (batch, max(seq // 4, 8), cfg.d_model),
                                    jnp.float32)
@@ -61,3 +63,22 @@ def lm_batch(cfg: ModelConfig, batch: int, seq: int,
     toks = _token_stream(key, batch, seq + 1, cfg.vocab_size)
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
             "mask": jnp.ones((batch, seq), jnp.float32)}
+
+
+def image_batch(cfg: ModelConfig, batch: int,
+                seed: int = 0) -> Dict[str, Array]:
+    """Learnable synthetic images for the stateless image family: each
+    class c gets a fixed random template; a sample is its class template
+    plus noise, so a 1-Lipschitz classifier can separate the classes while
+    inputs stay O(1)-normalized (certified radii are meaningful)."""
+    key = jax.random.PRNGKey(seed)
+    k_lbl, k_noise = jax.random.split(key)
+    shape = (cfg.image_size, cfg.image_size, cfg.in_channels)
+    # class templates from a seed-independent key: every image_batch draw
+    # of one config samples the SAME class manifold
+    templates = jax.random.normal(jax.random.PRNGKey(17),
+                                  (cfg.num_classes,) + shape, jnp.float32)
+    labels = jax.random.randint(k_lbl, (batch,), 0, cfg.num_classes)
+    noise = jax.random.normal(k_noise, (batch,) + shape, jnp.float32)
+    images = templates[labels] + 0.5 * noise
+    return {"images": images, "labels": labels.astype(jnp.int32)}

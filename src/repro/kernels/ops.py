@@ -136,6 +136,19 @@ def householder_banked(V: Array, x: Array, use_pallas: bool = False) -> Array:
     return ref.householder_banked_ref(V, x)
 
 
+def givens_banked(C: Array, S: Array, x: Array,
+                  use_pallas: bool = False) -> Array:
+    """Per-row Givens-round rotation y[i] = x[i] Q_{i} (GOFT bank).
+
+    C, S: (B, m, d//2) pre-evaluated cos/sin round stacks; x: (B, T, d).
+    Like the Householder bank, the transform is O(m*d) per token —
+    bandwidth-trivial next to the projection matmul — so the reference
+    gather/rotate is the implementation on every backend (``use_pallas``
+    accepted for hook uniformity and ignored; ``banked_kernel=""``)."""
+    del use_pallas
+    return ref.givens_banked_ref(C, S, x)
+
+
 def q_matmul(x: Array, q: Array, scale: Array, use_pallas: bool = False,
              tuning: Optional[Tuning] = None) -> Array:
     """Quantized-weight matmul y = x @ dequant(q, scale) with the dequant

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jnp.ndarray
 
@@ -102,6 +103,34 @@ def householder_banked_ref(V: Array, x: Array) -> Array:
         v = v32[:, i]                                   # (B, d)
         coef = jnp.einsum("btd,bd->bt", y, v)
         y = y - 2.0 * coef[..., None] * v[:, None, :]
+    return y.astype(x.dtype)
+
+
+def givens_banked_ref(C: Array, S: Array, x: Array) -> Array:
+    """Per-row Givens-round rotation y[i] = x[i] Q_{i} with
+    Q_i = G_m .. G_1 brick-wall rounds of disjoint 2x2 rotations (GOFT).
+
+    C, S: (B, m, d//2) PRE-EVALUATED cos/sin stacks (identity slot is
+    c = 1, s = 0); x: (B, T, d). Round l pairs neighbors at offset l % 2
+    — (off, off+1), (off+2, off+3), .. — boundary elements stay fixed.
+    Row-vector application: rounds reversed, angles negated (x Q =
+    (Q^T x^T)^T). fp32 accumulate; O(B*T*m*d) total.
+    """
+    m = C.shape[1]
+    d = x.shape[-1]
+    y = x.astype(jnp.float32)
+    c32, s32 = C.astype(jnp.float32), S.astype(jnp.float32)
+    for lvl in reversed(range(m)):
+        off = lvl % 2
+        p = (d - off) // 2
+        if p == 0:
+            continue
+        ii = off + 2 * np.arange(p)
+        c = c32[:, lvl, :p][:, None, :]                 # (B, 1, p)
+        s = -s32[:, lvl, :p][:, None, :]                # transpose side
+        a, b = y[..., ii], y[..., ii + 1]
+        y = y.at[..., ii].set(c * a - s * b)
+        y = y.at[..., ii + 1].set(s * a + c * b)
     return y.astype(x.dtype)
 
 

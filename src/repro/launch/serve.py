@@ -23,6 +23,12 @@ adapter bank.
     # backed store, paged into HBM under a fixed budget (LRU eviction)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
         --store-dir /ckpts/tenants --hbm-adapter-budget 64
+
+    # image lane: batched stateless serving of the 1-Lipschitz convnet
+    # with per-request conv adapters (ImageServeEngine; same bank/store/
+    # quantize/replica flags as the token lanes)
+    PYTHONPATH=src python -m repro.launch.serve --arch lipconvnet-15 \
+        --smoke --family image --requests 16 --demo-adapters 3
 """
 from __future__ import annotations
 
@@ -37,8 +43,10 @@ from repro.core import peft as peft_lib
 from repro.core.runtime import ModelRuntime
 from repro.distrib import EngineCluster, format_cluster_report, serve_mesh
 from repro.launch.mesh import make_mesh
+from repro.models import registry
 from repro.serve.engine import (PagedServeEngine, ServeEngine,
                                 StaticServeEngine, latency_percentiles)
+from repro.serve.image import ImageServeEngine
 
 
 def make_demo_adapters(names, params, peft_cfg, seed=1, scale=0.1):
@@ -92,6 +100,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--family", default=None,
+                    help="assert the arch's registered family (lane "
+                         "selector in scripts: --family image routes "
+                         "through the batched stateless ImageServeEngine)")
     ap.add_argument("--engine", choices=("continuous", "static", "paged"),
                     default="continuous",
                     help="'paged': fixed-size KV pages + per-slot page "
@@ -158,6 +170,14 @@ def main():
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = cfg.with_overrides(**parse_overrides(args.set))
+    if args.family and not registry.is_family(cfg, args.family):
+        raise SystemExit(f"--family {args.family} but arch {args.arch!r} "
+                         f"registers family {cfg.family!r}")
+    stateless = registry.get(cfg.family).stateless
+    if stateless and args.engine != "continuous":
+        raise SystemExit(f"family {cfg.family!r} is stateless (no KV) — "
+                         "it serves through the batched image engine "
+                         "(--engine continuous, the default)")
     mesh = None
     if args.tp:
         if args.mesh:
@@ -275,6 +295,10 @@ def main():
                              "(static serving merges ONE adapter offline)")
         eng = StaticServeEngine(rt, max_batch=args.max_batch,
                                 max_len=max_len)
+    elif stateless:
+        engines = [ImageServeEngine(r, max_batch=args.max_batch)
+                   for r in replica_runtimes(args.replicas)]
+        eng = EngineCluster(engines)
     else:
         rts = replica_runtimes(args.replicas)
         if args.engine == "paged":
@@ -297,13 +321,19 @@ def main():
     names = adapter_names if rt.banked and adapter_names else [None]
     requests = []
     for i in range(args.requests):
-        plen = (int(rng.integers(4, args.prompt_len + 1))
-                if args.mixed_lengths else args.prompt_len)
-        mnew = (int(rng.integers(2, args.max_new + 1))
-                if args.mixed_lengths else args.max_new)
-        req = {"prompt": rng.integers(1, min(cfg.vocab_size, 255),
-                                      size=plen).tolist(),
-               "max_new_tokens": mnew}
+        if stateless:       # one image in, one class out — the prompt IS
+            req = {"prompt": rng.normal(size=(       # the (H, W, C) array
+                       cfg.image_size, cfg.image_size,
+                       cfg.in_channels)).astype(np.float32),
+                   "max_new_tokens": 1}
+        else:
+            plen = (int(rng.integers(4, args.prompt_len + 1))
+                    if args.mixed_lengths else args.prompt_len)
+            mnew = (int(rng.integers(2, args.max_new + 1))
+                    if args.mixed_lengths else args.max_new)
+            req = {"prompt": rng.integers(1, min(cfg.vocab_size, 255),
+                                          size=plen).tolist(),
+                   "max_new_tokens": mnew}
         if rt.banked:
             req["adapter"] = names[i % len(names)]
         requests.append(req)

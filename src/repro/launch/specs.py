@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, ShapeConfig
-from repro.models import api
+from repro.models import api, registry
 
 SDS = jax.ShapeDtypeStruct
 
@@ -24,13 +24,14 @@ def _f(shape, cfg: ModelConfig):
 
 def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     b, s = shape.global_batch, shape.seq_len
-    if cfg.family == "vlm":
+    t = registry.get(cfg.family)
+    if t.has_patches:
         p = cfg.frontend_tokens
         st = s - p
         return {"tokens": _i32((b, st)), "labels": _i32((b, st)),
                 "mask": SDS((b, st), jnp.float32),
                 "patches": _f((b, p, cfg.frontend_dim), cfg)}
-    if cfg.family == "encdec":
+    if t.has_encoder:
         return {"frames": _f((b, s // 4, cfg.d_model), cfg),
                 "tokens": _i32((b, s)), "labels": _i32((b, s)),
                 "mask": SDS((b, s), jnp.float32)}
@@ -40,11 +41,12 @@ def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
 
 def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
     b, s = shape.global_batch, shape.seq_len
+    t = registry.get(cfg.family)
     batch: Dict[str, Any] = {"tokens": _i32((b, s))}
-    if cfg.family == "vlm":
+    if t.has_patches:
         batch = {"tokens": _i32((b, s - cfg.frontend_tokens)),
                  "patches": _f((b, cfg.frontend_tokens, cfg.frontend_dim), cfg)}
-    if cfg.family == "encdec":
+    if t.has_encoder:
         batch["frames"] = _f((b, s // 4, cfg.d_model), cfg)
     state = api.abstract_decode_state(cfg, b, s, enc_len=s // 4)
     return batch, state

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from . import encdec, transformer  # noqa: F401  (register their FamilyOps)
+from . import encdec, image, transformer  # noqa: F401  (register FamilyOps)
 from . import registry
 from .layers import no_shard
 

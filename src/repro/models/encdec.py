@@ -179,4 +179,5 @@ registry.register(registry.FamilyOps(
     prefill=prefill,
     decode_step=decode_step,
     active_param_count=_active_param_count,
+    has_encoder=True,
 ))

@@ -1,0 +1,193 @@
+"""``image`` family — the 1-Lipschitz GS-SOC LipConvnet as a registered,
+servable ``FamilyOps`` entry (paper §7.3 meets the serving stack).
+
+The family is STATELESS: there is no token-level decode state, no KV — a
+request is one image and the whole decode surface is ``None``; inference
+goes through ``FamilyOps.infer`` (one batched forward), which is what
+``ImageServeEngine`` drives.
+
+Adapter attachment points: every orthogonal conv layer carries an explicit
+identity-initialized ``(c, c)`` channel-mix weight ``wc`` applied as a 1x1
+(im2col-free) matmul over flattened ``(N, H*W, C)`` activations, routed
+through the same ``qlinear`` hook as every transformer projection. That
+gives the conv trunk the full adapter stack for free:
+
+* merged serving — ``materialize`` folds an orthogonal adapter ``Q`` into
+  ``wc`` (identity base -> the effective weight IS ``Q``: a channel-axis
+  GS rotation of the conv feature stream);
+* banked serving — activation-side ``x·Q`` per request via any bankable
+  ``core.methods`` entry, identical math since ``(xQ)·I == x·(QI)``;
+* int8 — ``wc`` quantizes per-output-channel (the identity quantizes
+  EXACTLY), and the banked GSOFT rotation fuses into
+  ``gs_q_matmul_banked`` on the flattened 1x1 path;
+* certification — orthogonal ``Q`` keeps every layer an isometry, so the
+  end-to-end Lipschitz constant (and the margin certificate) survives
+  adapter attachment untouched.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.conv import (ACTIVATIONS, certified_radius, gs_soc_layer,
+                             power_iteration_sn, space_to_depth)
+from repro.core.peft import AdapterContext
+from . import registry
+from .layers import Shard, no_shard, qlinear
+from .lipconvnet import LipConvnetConfig, init_lipconvnet
+
+Array = jnp.ndarray
+
+# margin used by SOC-style certified training; 36/255 is the CIFAR
+# certification radius the paper's Table 3 reports at
+CERT_EPS = 36.0 / 255.0
+
+
+def lip_cfg(cfg: ModelConfig) -> LipConvnetConfig:
+    """ModelConfig -> the LipConvnet hyperparameter record."""
+    return LipConvnetConfig(
+        depth=cfg.num_layers,
+        base_width=cfg.base_width or cfg.d_model,
+        num_classes=cfg.num_classes,
+        image_size=cfg.image_size,
+        in_channels=cfg.in_channels,
+        groups=tuple(cfg.conv_groups),
+        activation=cfg.conv_activation,
+        terms=cfg.conv_terms,
+        conv_layer="soc" if cfg.conv_layer == "soc" else "gs",
+        paired_shuffle=cfg.paired_shuffle,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_image(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    """LipConvnet params + identity ``wc`` channel-mix at every conv layer
+    (the adapter/quant attachment points — see module docstring)."""
+    lc = lip_cfg(cfg)
+    params = init_lipconvnet(lc, key)
+    per_block = lc.depth // 5
+    for bi, width in enumerate(lc.block_widths()):
+        block = params[f"block{bi}"]
+        for li in range(per_block - 1):
+            block[f"conv{li}"]["wc"] = jnp.eye(width, dtype=jnp.float32)
+        block["down"]["wc"] = jnp.eye(2 * width, dtype=jnp.float32)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_image, cfg), key)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _channel_mix(x: Array, w, rot, name: str) -> Array:
+    """The 1x1 channel-mix hook: flatten NHWC -> (N, H*W, C) so the banked
+    rotation (``(B, T, d)`` contract) and the quantized matmul ride the
+    same machinery as every transformer projection, then restore NHWC."""
+    n, h, wd, c = x.shape
+    y = qlinear(x.reshape(n, h * wd, c), w, rot, name, cast=True)
+    return y.reshape(n, h, wd, c)
+
+
+def _cast_conv(lp: Dict[str, Array], dtype) -> Dict[str, Array]:
+    return {k: lp[k].astype(dtype) for k in ("m1", "m2") if k in lp}
+
+
+def apply_image(cfg: ModelConfig, params: Dict[str, Any], images: Array,
+                shard: Shard = no_shard,
+                ctx: Optional[AdapterContext] = None) -> Array:
+    """images (N, H, W, C_in) -> logits (N, num_classes); 1-Lipschitz end
+    to end (orthogonal convs, isometric activations, orthogonal ``wc``
+    rotations, spectral-normalized head).
+
+    ``ctx`` is the same per-request ``AdapterContext`` the decode path
+    takes: row i of the batch rotates its channel stream with adapter
+    ``ctx.slots[i]`` before each ``wc`` matmul (slot 0 = identity)."""
+    lc = lip_cfg(cfg)
+    act = ACTIVATIONS[lc.activation]
+    per_block = lc.depth // 5
+    x = images.astype(cfg.act_dtype)
+    pad = lc.base_width - x.shape[-1]
+    if pad > 0:                       # norm-preserving channel injection
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    x = shard(x, "act_bhwc")
+    for bi, width in enumerate(lc.block_widths()):
+        block = params[f"block{bi}"]
+        grp = (lambda n: ctx.rotator(ctx.group(f"block{bi}", n))
+               ) if ctx is not None else (lambda n: None)
+        spec = lc.layer_spec(width)
+        for li in range(per_block - 1):
+            name = f"conv{li}"
+            x = gs_soc_layer(spec, _cast_conv(block[name], x.dtype), x)
+            x = _channel_mix(x, block[name]["wc"], grp(name), "wc")
+            x = act(x)
+        # downsample: orthogonal space-to-depth, orthogonal conv on 4w,
+        # select 2w channels (semi-orthogonal), then the 2w channel mix
+        x = space_to_depth(x, 2)
+        spec_dn = lc.layer_spec(4 * width)
+        x = gs_soc_layer(spec_dn, _cast_conv(block["down"], x.dtype), x)
+        x = act(x[..., : 2 * width])
+        x = _channel_mix(x, block["down"]["wc"], grp("down"), "wc")
+    x = x.reshape(x.shape[0], -1)
+    w = params["head"]["w"]
+    sn = jax.lax.stop_gradient(
+        power_iteration_sn(w.astype(jnp.float32))) + 1e-6
+    wn = (w.astype(jnp.float32) / sn).astype(x.dtype)
+    return shard(x @ wn, "logits")
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, Array],
+            shard: Shard = no_shard) -> Tuple[Array, Array]:
+    """FamilyOps.forward: batch["images"] -> (logits, aux=0)."""
+    logits = apply_image(cfg, params, batch["images"], shard)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def infer(cfg: ModelConfig, params, images: Array, shard: Shard = no_shard,
+          ctx: Optional[AdapterContext] = None) -> Array:
+    """FamilyOps.infer — the stateless serving entry point."""
+    return apply_image(cfg, params, images, shard, ctx=ctx)
+
+
+def image_loss(cfg: ModelConfig, params, batch: Dict[str, Array],
+               shard: Shard = no_shard, margin: float = 0.7071):
+    """Margin cross-entropy of SOC-style certified training, plus the
+    certified-accuracy metric at radius ``CERT_EPS``."""
+    logits = apply_image(cfg, params, batch["images"], shard)
+    labels = batch["labels"]
+    onehot = jax.nn.one_hot(labels, cfg.num_classes, dtype=logits.dtype)
+    adjusted = logits - margin * np.sqrt(2.0) * onehot
+    logp = jax.nn.log_softmax(adjusted.astype(jnp.float32))
+    loss = -jnp.mean(jnp.sum(onehot.astype(jnp.float32) * logp, axis=-1))
+    correct = jnp.argmax(logits, -1) == labels
+    acc = jnp.mean(correct)
+    cert = jnp.mean((certified_radius(logits) > CERT_EPS) & correct)
+    return loss, {"loss": loss, "accuracy": acc, "certified": cert}
+
+
+registry.register(registry.FamilyOps(
+    family="image",
+    init_params=init_image,
+    forward=forward,
+    loss=image_loss,
+    active_param_count=active_param_count,
+    infer=infer,
+    mixer="none",
+))

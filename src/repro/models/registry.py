@@ -6,8 +6,27 @@ call-site signature.
 
 ``transformer`` registers explicit entries for decoder / vlm / ssm / hybrid
 (previously the last three were silently routed through the decoder path);
-``encdec`` registers itself. Importing ``repro.models.api`` (or the
-``repro.models`` package) triggers registration.
+``encdec`` and ``image`` register themselves. Importing
+``repro.models.api`` (or the ``repro.models`` package) triggers
+registration.
+
+This module is the ONLY place family strings are compared (CI greps for
+``family ==`` leaking elsewhere). Everything a call-site used to branch on
+is a trait on the record:
+
+* ``mixer`` — "attention" | "ssm" | "hybrid": which sequence mixer the
+  transformer stack runs (hybrid alternates ssm/attention by layer).
+* ``has_patches`` — the batch carries a vision-frontend ``patches`` field
+  and the stream begins with ``cfg.frontend_tokens`` patch positions.
+* ``has_encoder`` — encoder-decoder: the batch carries ``frames`` and
+  decode needs an encoder pass + cross-attention state.
+* ``stateless`` (property) — no token-level decode state at all: the
+  family serves whole inputs through ``infer`` (one batched forward per
+  request set, no KV), e.g. the ``image`` family.  Stateless families
+  must provide ``init_params``/``forward``/``loss``/
+  ``active_param_count``/``infer`` and may leave the whole decode and
+  paged surfaces ``None``; ``ServeEngine``/``PagedServeEngine`` refuse
+  them up front and ``ImageServeEngine`` is their lane.
 """
 from __future__ import annotations
 
@@ -22,12 +41,24 @@ class FamilyOps:
     * ``init_params(cfg, key) -> params``
     * ``forward(cfg, params, batch, shard=no_shard) -> (logits, aux)``
     * ``loss(cfg, params, batch, shard=no_shard) -> (loss, metrics)``
+    * ``active_param_count(cfg) -> int``
+
+    Token-decode surface (None -> the family is stateless and token
+    engines refuse it):
+
     * ``init_decode_state(cfg, batch, max_len, enc_len=0) -> state``
     * ``prefill(cfg, params, req: PrefillRequest, state, shard=no_shard)
       -> (last_logits, state)``
     * ``decode_step(cfg, params, tokens, state, pos, shard=no_shard,
       ctx: AdapterContext | None = None) -> (logits, state)``
-    * ``active_param_count(cfg) -> int``
+
+    Stateless-inference surface (required iff the decode surface is
+    absent):
+
+    * ``infer(cfg, params, batch_inputs, shard=no_shard, ctx=None)
+      -> logits`` — one whole-input batched forward; ``ctx`` is the same
+      ``AdapterContext`` the decode path takes, so banked per-request
+      adapters work identically.
 
     Optional paged-KV surface (None -> the family has no paged serve path
     and ``PagedServeEngine`` refuses it up front):
@@ -44,13 +75,34 @@ class FamilyOps:
     init_params: Callable
     forward: Callable
     loss: Callable
-    init_decode_state: Callable
-    prefill: Callable
-    decode_step: Callable
     active_param_count: Callable
+    init_decode_state: Optional[Callable] = None
+    prefill: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    infer: Optional[Callable] = None
     init_paged_state: Optional[Callable] = None
     paged_chunk_prefill: Optional[Callable] = None
     paged_decode_step: Optional[Callable] = None
+    # traits — the registry-owned answers to what used to be family
+    # string comparisons at call sites ("none": no sequence mixer at all,
+    # e.g. the stateless image family)
+    mixer: str = "attention"
+    has_patches: bool = False
+    has_encoder: bool = False
+
+    @property
+    def stateless(self) -> bool:
+        """No token-level decode state: serve through ``infer``."""
+        return self.init_decode_state is None
+
+    def __post_init__(self):
+        if self.mixer not in ("attention", "ssm", "hybrid", "none"):
+            raise ValueError(f"family {self.family!r}: unknown mixer "
+                             f"{self.mixer!r}")
+        if self.init_decode_state is None and self.infer is None:
+            raise ValueError(
+                f"family {self.family!r} registers neither a decode "
+                f"surface nor a stateless ``infer`` entry point")
 
 
 _FAMILIES: Dict[str, FamilyOps] = {}
@@ -70,3 +122,9 @@ def get(family: str) -> FamilyOps:
 
 def families() -> List[str]:
     return sorted(_FAMILIES)
+
+
+def is_family(cfg, family: str) -> bool:
+    """Registry-owned label check (CLI lane assertions and the like) —
+    call sites must not compare ``cfg.family`` strings themselves."""
+    return cfg.family == family

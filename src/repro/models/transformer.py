@@ -34,6 +34,13 @@ from .ssm import init_mamba, init_mamba_state, mamba_block, mamba_decode_step
 Array = jnp.ndarray
 
 
+def _traits(cfg: ModelConfig) -> registry.FamilyOps:
+    """The registry record for this config's family — all structural
+    branching in this module reads traits off it (``mixer`` /
+    ``has_patches``), never the family string."""
+    return registry.get(cfg.family)
+
+
 # ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
@@ -51,7 +58,8 @@ def init_lm(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
             ks[1], 1, cfg.d_model, vp, wd)[0]}
 
     L = cfg.num_layers
-    if cfg.family in ("decoder", "vlm"):
+    t = _traits(cfg)
+    if t.mixer == "attention":
         layers: Dict[str, Any] = {
             "attn_norm": jnp.zeros((L, cfg.d_model), wd),
             "attn": init_attention(ks[2], cfg, stacked=L),
@@ -63,15 +71,15 @@ def init_lm(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
             layers["mlp"] = init_stacked_mlp(ks[3], L, cfg.d_model, cfg.d_ff,
                                              cfg.mlp_type, wd)
         params["layers"] = layers
-        if cfg.family == "vlm":
+        if t.has_patches:
             params["patch_proj"] = {"wi": stacked_dense_init(
                 ks[4], 1, cfg.frontend_dim, cfg.d_model, wd)[0]}
-    elif cfg.family == "ssm":
+    elif t.mixer == "ssm":
         params["layers"] = {
             "norm": jnp.zeros((L, cfg.d_model), wd),
             "mamba": init_mamba(ks[2], cfg, (L,), wd),
         }
-    elif cfg.family == "hybrid":
+    elif t.mixer == "hybrid":
         per = cfg.attn_every
         assert L % per == 0, "attn_every must divide num_layers"
         nsuper = L // per
@@ -201,28 +209,29 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Array],
     """-> (logits (B, S, Vp), moe_aux). batch["tokens"]: (B, S) int32;
     vlm adds batch["patches"] (B, P, frontend_dim) prepended to the stream."""
     tokens = batch["tokens"]
+    t = _traits(cfg)
     h = _embed(cfg, params, tokens, shard)
     n_prefix = 0
-    if cfg.family == "vlm" and "patches" in batch:
+    if t.has_patches and "patches" in batch:
         pe = qlinear(batch["patches"].astype(cfg.act_dtype),
                      params["patch_proj"]["wi"], cast=True)
         h = jnp.concatenate([shard(pe, "act_btd"), h], axis=1)
         n_prefix = pe.shape[1]
 
-    if cfg.family in ("decoder", "vlm"):
+    if t.mixer == "attention":
         def body(hc, lp):
             hc, aux, _ = _decoder_layer(cfg, lp, hc, shard)
             return hc, aux
         h, auxs = jax.lax.scan(_remat(cfg, body), h, params["layers"])
         aux = jnp.mean(auxs)
-    elif cfg.family == "ssm":
+    elif t.mixer == "ssm":
         def body(hc, lp):
             y = mamba_block(lp["mamba"], rms_norm(hc, lp["norm"], cfg.norm_eps),
                             cfg, shard)
             return hc + y, jnp.zeros((), jnp.float32)
         h, _ = jax.lax.scan(_remat(cfg, body), h, params["layers"])
         aux = jnp.zeros((), jnp.float32)
-    elif cfg.family == "hybrid":
+    elif t.mixer == "hybrid":
         sp = params["shared_attn"]
 
         def super_body(hc, bp):
@@ -267,13 +276,14 @@ def lm_loss(cfg: ModelConfig, params, batch: Dict[str, Array],
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
     L = cfg.num_layers
-    if cfg.family in ("decoder", "vlm"):
+    t = _traits(cfg)
+    if t.mixer == "attention":
         c = init_cache(cfg, batch, max_len)
         return {"kv": jax.tree.map(
             lambda v: jnp.broadcast_to(v[None], (L,) + v.shape).copy(), c)}
-    if cfg.family == "ssm":
+    if t.mixer == "ssm":
         return {"mamba": init_mamba_state(cfg, batch, (L,))}
-    if cfg.family == "hybrid":
+    if t.mixer == "hybrid":
         per = cfg.attn_every
         nsuper = L // per
         c = init_cache(cfg, batch, max_len)
@@ -298,8 +308,9 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state,
     slot 0 is the identity).
     """
     h = _embed(cfg, params, tokens, shard)
+    t = _traits(cfg)
 
-    if cfg.family in ("decoder", "vlm"):
+    if t.mixer == "attention":
         bl_tree = ctx.group("layers") if ctx is not None else None
         if bl_tree is not None:
             def body(hc, xs):
@@ -322,7 +333,7 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state,
     elif ctx is not None:
         raise ValueError(f"adapter bank serving not supported for "
                          f"family {cfg.family}")
-    elif cfg.family == "ssm":
+    elif t.mixer == "ssm":
         def body(hc, xs):
             lp, st = xs
             y, new_st = mamba_decode_step(
@@ -331,7 +342,7 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state,
             return hc + y, new_st
         h, new_m = jax.lax.scan(body, h, (params["layers"], state["mamba"]))
         new_state = {"mamba": new_m}
-    elif cfg.family == "hybrid":
+    elif t.mixer == "hybrid":
         sp = params["shared_attn"]
 
         def super_body(hc, xs):
@@ -385,9 +396,10 @@ def prefill(cfg: ModelConfig, params, req: PrefillRequest, state,
     a production setting; here the decode path is the state authority."""
     batch, last_idx, ctx = req.batch, req.last_idx, req.ctx
     tokens = batch["tokens"]
+    t = _traits(cfg)
     h = _embed(cfg, params, tokens, shard)
-    if cfg.family in ("decoder", "vlm"):
-        if cfg.family == "vlm" and "patches" in batch:
+    if t.mixer == "attention":
+        if t.has_patches and "patches" in batch:
             patches = batch["patches"].astype(cfg.act_dtype)
             prot = (ctx.rotator(ctx.group("patch_proj"))
                     if ctx is not None else None)
@@ -436,9 +448,9 @@ def init_paged_state(cfg: ModelConfig, batch: int, num_pages: int,
     the extra SENTINEL column always holds the garbage page 0, so a parked
     row (pos == max_pages * page_size) writes into garbage and jitted
     full-batch decode never retraces or masks on slot liveness."""
-    if cfg.family != "decoder":
-        raise ValueError(f"paged KV serving is decoder-only for now "
-                         f"(family {cfg.family!r})")
+    if _traits(cfg).init_paged_state is not init_paged_state:
+        raise ValueError(f"family {cfg.family!r} has no paged serve path "
+                         f"through this module")
     L = cfg.num_layers
     pools = init_paged_kv(cfg, num_pages, page_size)
     pages = jax.tree.map(
@@ -456,9 +468,9 @@ def paged_decode_step(cfg: ModelConfig, params, tokens: Array, state,
     carry max_pages * page_size); state: {"pages", "table"} from
     ``init_paged_state``. Returns (logits, new_state) — the table passes
     through unchanged (host code owns table edits at admission/finish)."""
-    if cfg.family != "decoder":
-        raise ValueError(f"paged decode is decoder-only (family "
-                         f"{cfg.family!r})")
+    if _traits(cfg).paged_decode_step is not paged_decode_step:
+        raise ValueError(f"family {cfg.family!r} has no paged decode path "
+                         f"through this module")
     h = _embed(cfg, params, tokens, shard)
     table = state["table"]
     bl_tree = ctx.group("layers") if ctx is not None else None
@@ -494,9 +506,9 @@ def paged_chunk_prefill(cfg: ModelConfig, params, req: PrefillRequest,
     seed the first generated token); slot / start: traced int32 scalars.
     Earlier chunks — and shared-prefix pages claimed from the KV cache —
     already occupy positions [0, start)."""
-    if cfg.family != "decoder":
-        raise ValueError(f"chunked prefill is decoder-only (family "
-                         f"{cfg.family!r})")
+    if _traits(cfg).paged_chunk_prefill is not paged_chunk_prefill:
+        raise ValueError(f"family {cfg.family!r} has no chunked-prefill "
+                         f"path through this module")
     batch, last_idx, ctx = req.batch, req.last_idx, req.ctx
     h = _embed(cfg, params, batch["tokens"], shard)
     table_row = jax.lax.dynamic_index_in_dim(state["table"], slot, axis=0,
@@ -546,8 +558,18 @@ def _init_decode_state_ops(cfg: ModelConfig, batch: int, max_len: int,
     return init_decode_state(cfg, batch, max_len)
 
 
-for _family in ("decoder", "vlm", "ssm", "hybrid"):
-    _paged = _family == "decoder"       # paged KV is decoder-only for now
+# the per-family traits live HERE, on the registry record — call sites
+# branch on ``mixer`` / ``has_patches``, never on the family string
+_FAMILY_TRAITS = {
+    "decoder": dict(mixer="attention", paged=True),  # paged KV: decoder-only
+    "vlm": dict(mixer="attention", has_patches=True),
+    "ssm": dict(mixer="ssm"),
+    "hybrid": dict(mixer="hybrid"),
+}
+
+for _family, _tr in _FAMILY_TRAITS.items():
+    _tr = dict(_tr)
+    _paged = _tr.pop("paged", False)
     registry.register(registry.FamilyOps(
         family=_family,
         init_params=init_lm,
@@ -560,4 +582,5 @@ for _family in ("decoder", "vlm", "ssm", "hybrid"):
         init_paged_state=init_paged_state if _paged else None,
         paged_chunk_prefill=paged_chunk_prefill if _paged else None,
         paged_decode_step=paged_decode_step if _paged else None,
+        **_tr,
     ))

@@ -30,10 +30,14 @@ Tree = Any
 
 # weights consumed through the qlinear hook (models/layers.py): attention +
 # cross-attention + dense-MLP projections (any nesting), the vlm patch
-# frontend, and the LM head. NOT moe/mamba (raw-einsum call sites).
+# frontend, the LM head, and the image-family conv channel mixers. NOT
+# moe/mamba (raw-einsum call sites), NOT the spectral-normalized image
+# head (power iteration needs the raw matrix), NOT the skew conv kernels
+# (consumed by conv_general_dilated, not qlinear).
 DEFAULT_QUANT_TARGETS: Tuple[str, ...] = (
     r"(.*/)?(attn|cross|mlp|patch_proj)/(wq|wk|wv|wo|wi|wg)$",
     r"lm_head/w$",
+    r"(.*/)?(conv\d+|down)/wc$",
 )
 
 

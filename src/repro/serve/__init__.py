@@ -1,2 +1,3 @@
 from .engine import PagedServeEngine, Request, ServeEngine, StaticServeEngine
+from .image import ImageServeEngine
 from .kv import KVPagePool, SlotPages, kv_page_bytes, pages_for_budget

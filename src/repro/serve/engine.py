@@ -49,6 +49,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.peft import PrefillRequest
 from repro.core.runtime import ModelRuntime
+from repro.models import registry
 from .kv import KVPagePool, SlotPages, pages_for_budget
 
 
@@ -77,7 +78,17 @@ def _new_stats() -> Dict[str, Any]:
 
 def _stream_prefix(cfg: ModelConfig) -> int:
     """Non-text positions prepended to the decode stream (vlm patches)."""
-    return cfg.frontend_tokens if cfg.family == "vlm" else 0
+    return cfg.frontend_tokens if registry.get(cfg.family).has_patches else 0
+
+
+def _check_token_family(cfg: ModelConfig) -> None:
+    """Token engines need a prefill/decode surface; stateless families
+    (``FamilyOps.stateless`` — whole-input forward, no KV) are served by
+    ``serve.image.ImageServeEngine`` instead."""
+    if registry.get(cfg.family).stateless:
+        raise ValueError(
+            f"family {cfg.family!r} is stateless (no prefill/decode "
+            "surface) — serve it through serve.image.ImageServeEngine")
 
 
 def _check_capacity(cfg: ModelConfig, prompt: List[int], max_new: int,
@@ -94,9 +105,10 @@ def _family_feed(cfg: ModelConfig, toks: np.ndarray,
     streams (encdec frames / vlm patches) — shared by both engines."""
     feed: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
     b = toks.shape[0]
-    if cfg.family == "encdec":
+    t = registry.get(cfg.family)
+    if t.has_encoder:
         feed["frames"] = jnp.zeros((b, enc_len, cfg.d_model), cfg.act_dtype)
-    if cfg.family == "vlm":
+    if t.has_patches:
         feed["patches"] = jnp.zeros(
             (b, cfg.frontend_tokens, cfg.frontend_dim), cfg.act_dtype)
     return feed
@@ -117,6 +129,7 @@ class ServeEngine:
 
     def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
                  max_len: int = 256, eos_id: int = 0):
+        _check_token_family(runtime.cfg)
         self.rt = runtime
         self.cfg = runtime.cfg
         self.max_batch = max_batch
@@ -384,6 +397,7 @@ class StaticServeEngine:
 
     def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
                  max_len: int = 256, eos_id: int = 0):
+        _check_token_family(runtime.cfg)
         if runtime.banked:
             raise ValueError(
                 "static serving merges ONE adapter offline "

@@ -1,0 +1,216 @@
+"""Image serving lane (ISSUE 9): the registered stateless ``image`` family
+end-to-end — conv-adapter orthogonality (hypothesis sweep over every
+orthogonal method incl. givens), the 1-Lipschitz bound surviving a banked
+adapter, banked-vs-solo-merged equality in f32/bf16/int8, store-paged
+equality, cluster serving, and the engines refusing each other's families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_smoke_config
+from repro.core import methods as methods_lib
+from repro.core import peft as peft_lib
+from repro.core.orthogonal import orthogonality_error
+from repro.core.peft import path_str
+from repro.core.runtime import ModelRuntime
+from repro.distrib import EngineCluster
+from repro.serve.engine import ServeEngine, StaticServeEngine
+from repro.serve.image import ImageServeEngine
+from repro.store import AdapterStore
+
+CFG = get_smoke_config("lipconvnet-15")
+BASE = ModelRuntime(CFG, key=jax.random.PRNGKey(0))
+PARAMS = BASE.params
+
+TENANT_CFGS = {
+    "alice": peft_lib.PEFTConfig(method="gsoft", block_size=4),
+    "bob": peft_lib.PEFTConfig(method="givens"),
+    "carol": peft_lib.PEFTConfig(method="householder", reflections=4),
+    "dave": peft_lib.PEFTConfig(method="gsoft", block_size=4),
+}
+
+
+def _tuned(cfg, seed, scale=0.3):
+    ad = peft_lib.init_peft(cfg, PARAMS, jax.random.PRNGKey(seed))
+    return jax.tree.map(
+        lambda a: a + scale * jax.random.normal(
+            jax.random.PRNGKey(seed + 50), a.shape), ad)
+
+
+ADAPTERS = {n: _tuned(c, i + 1) for i, (n, c) in enumerate(TENANT_CFGS.items())}
+BANKED = BASE.attach(ADAPTERS, TENANT_CFGS)
+
+
+def _images(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, CFG.image_size, CFG.image_size,
+                            CFG.in_channels)).astype(np.float32)
+
+
+def _serve(rt, reqs, max_batch=4):
+    """reqs: [(image, adapter)] -> logits rows in request order."""
+    eng = ImageServeEngine(rt, max_batch=max_batch)
+    rids = [eng.add_request(img, adapter=name) for img, name in reqs]
+    eng.run()
+    return np.stack([eng.result_logits[r] for r in rids])
+
+
+def _solo(cfg, name, images, quantize=None):
+    rt = (ModelRuntime(cfg, PARAMS) if name is None else
+          ModelRuntime(cfg, PARAMS, adapters=ADAPTERS[name],
+                       peft_cfg=TENANT_CFGS[name]))
+    if quantize:
+        rt = rt.quantized(quantize)
+    return np.asarray(rt.infer(jnp.asarray(images)))
+
+
+# ---------------------------------------------------------------------------
+# orthogonality of the conv attachment
+# ---------------------------------------------------------------------------
+
+ORTH = [m for m in methods_lib.registered()
+        if methods_lib.get(m).orthogonal]
+
+
+def _check_conv_orthogonality(method, seed):
+    """A (noised, far-from-identity) adapter merged into the conv
+    channel-mix leaves keeps each wc exactly a rotation (the base wc is
+    the identity, so the merged leaf IS the adapter's Q)."""
+    cfg = peft_lib.PEFTConfig(method=method, block_size=4, reflections=4)
+    ad = jax.tree.map(
+        lambda a, s=seed: a + 0.5 * jax.random.normal(
+            jax.random.PRNGKey(s), a.shape),
+        peft_lib.init_peft(cfg, PARAMS, jax.random.PRNGKey(seed)))
+    merged = peft_lib.materialize_tree(cfg, PARAMS, ad, merged=True)
+    wcs = [(path_str(p), l) for p, l in
+           jax.tree_util.tree_flatten_with_path(merged)[0]
+           if path_str(p).endswith("/wc")]
+    assert wcs, "image params must expose /wc attachment leaves"
+    for path, q in wcs:
+        err = float(orthogonality_error(q.astype(jnp.float32)))
+        assert err <= 1e-4, (method, path, err)
+
+
+@pytest.mark.parametrize("method", ORTH)
+def test_conv_adapter_orthogonality(method):
+    _check_conv_orthogonality(method, seed=0)
+
+
+def test_conv_adapter_orthogonality_sweep():
+    """hypothesis sweep of the same property across random seeds."""
+    pytest.importorskip("hypothesis",
+                        reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(method=st.sampled_from(ORTH), seed=st.integers(0, 2 ** 16))
+    def check(method, seed):
+        _check_conv_orthogonality(method, seed)
+
+    check()
+
+
+def test_banked_lipconvnet_stays_1_lipschitz():
+    """End-to-end bound: with a (noised, still orthogonal) adapter routed
+    through the bank, ||f(x1) - f(x2)||_2 <= ||x1 - x2||_2."""
+    for name in ("alice", "bob", None):
+        aid = BANKED.acquire_adapter(name)
+        ctx = BANKED.context(np.array([aid, aid], np.int32))
+        x = _images(2, seed=7)
+        x[1] = x[0] + 0.1 * _images(1, seed=8)[0]
+        out = np.asarray(BANKED.infer(jnp.asarray(x), ctx=ctx))
+        BANKED.release_adapter(name)
+        d_out = float(np.linalg.norm(out[0] - out[1]))
+        d_in = float(np.linalg.norm(x[0] - x[1]))
+        assert d_out <= d_in * (1 + 1e-3), (name, d_out / d_in)
+
+
+# ---------------------------------------------------------------------------
+# banked == solo merged (f32 / bf16 / int8)
+# ---------------------------------------------------------------------------
+
+def _equality_case(rt, cfg, atol, quantize=None):
+    names = [None] + list(TENANT_CFGS)
+    imgs = _images(len(names) * 2, seed=3)
+    reqs = [(imgs[i], names[i % len(names)]) for i in range(len(imgs))]
+    got = _serve(rt, reqs)
+    for name in names:
+        idxs = [i for i, (_, n) in enumerate(reqs) if n == name]
+        ref = _solo(cfg, name, imgs[idxs], quantize=quantize)
+        np.testing.assert_allclose(
+            got[idxs].astype(np.float32), ref.astype(np.float32),
+            atol=atol, err_msg=str(name))
+
+
+def test_banked_matches_solo_merged_f32():
+    _equality_case(BANKED, CFG, 1e-4)
+
+
+def test_banked_matches_solo_merged_bf16():
+    bf16 = CFG.with_overrides(dtype="bf16")
+    _equality_case(ModelRuntime(bf16, PARAMS).attach(ADAPTERS, TENANT_CFGS),
+                   bf16, 0.05)
+
+
+def test_banked_matches_solo_merged_int8():
+    _equality_case(BANKED.quantized("int8"), CFG, 0.05, quantize="int8")
+
+
+def test_identity_slot_equals_unbanked_exactly():
+    """The certificate carrier: adapter=None through the bank must be THE
+    base model bit for bit (certified accuracy trivially preserved)."""
+    imgs = _images(4, seed=5)
+    got = _serve(BANKED, [(im, None) for im in imgs])
+    np.testing.assert_array_equal(got, _solo(CFG, None, imgs))
+
+
+# ---------------------------------------------------------------------------
+# store paging + cluster
+# ---------------------------------------------------------------------------
+
+def test_store_paged_bank_matches_eager():
+    store = AdapterStore.from_adapters(ADAPTERS, TENANT_CFGS)
+    srt = BASE.attach(store, hbm_budget=3)   # 4 tenants, 3 methods: pages
+    names = list(TENANT_CFGS) + [None]
+    imgs = _images(8, seed=9)
+    reqs = [(imgs[i], names[i % len(names)]) for i in range(8)]
+    np.testing.assert_array_equal(_serve(srt, reqs), _serve(BANKED, reqs))
+
+
+def test_image_engines_under_cluster():
+    names = [None] + list(TENANT_CFGS)
+    imgs = _images(10, seed=11)
+    reqs = [(imgs[i], names[i % len(names)]) for i in range(10)]
+    cluster = EngineCluster([ImageServeEngine(BANKED, max_batch=4)
+                             for _ in range(2)])
+    rids = [cluster.add_request(img, adapter=name) for img, name in reqs]
+    results = cluster.run()
+    assert set(rids) == set(results)
+    by_rid = {r.rid: r.logits for r in cluster.drain_finished()}
+    got = np.stack([by_rid[r] for r in rids])
+    np.testing.assert_array_equal(got, _serve(BANKED, reqs))
+    assert cluster.stats["requests"] == 10
+
+
+# ---------------------------------------------------------------------------
+# family gating: token engines vs the stateless lane
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_cls", [ServeEngine, StaticServeEngine])
+def test_token_engines_refuse_stateless_family(engine_cls):
+    with pytest.raises(ValueError, match="stateless"):
+        engine_cls(BASE, max_batch=2, max_len=16, eos_id=-1)
+
+
+def test_image_engine_refuses_decoder_family():
+    rt = ModelRuntime(get_smoke_config("qwen2-72b"),
+                      key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="prefill/decode"):
+        ImageServeEngine(rt)
+
+
+def test_image_engine_rejects_bad_shape():
+    eng = ImageServeEngine(BASE, max_batch=2)
+    with pytest.raises(ValueError, match="shape"):
+        eng.add_request(np.zeros((4, 4, 3), np.float32))

@@ -76,8 +76,8 @@ def _solo(prompt, max_new, adapters=None, cfg=None, quantize=False):
 # ---------------------------------------------------------------------------
 
 def test_registry_has_explicit_entries():
-    assert methods_lib.registered() == ["boft", "double_gsoft", "gsoft",
-                                        "householder", "lora", "oft"]
+    assert methods_lib.registered() == ["boft", "double_gsoft", "givens",
+                                        "gsoft", "householder", "lora", "oft"]
 
 
 def test_unknown_method_raises_keyerror_listing_registered():

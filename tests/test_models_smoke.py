@@ -7,25 +7,30 @@ import pytest
 
 from repro.config import get_smoke_config, list_archs
 from repro.core.peft import PrefillRequest
-from repro.data.synthetic import lm_batch
-from repro.models import api
+from repro.data.synthetic import image_batch, lm_batch
+from repro.models import api, registry
 
 KEY = jax.random.PRNGKey(0)
 ARCHS = list_archs()
+TOKEN_ARCHS = [a for a in ARCHS
+               if not registry.get(get_smoke_config(a).family).stateless]
 
 
 def test_all_archs_registered():
     assert set(ARCHS) == {
         "qwen2-72b", "mistral-large-123b", "granite-34b", "gemma-7b",
         "phi3.5-moe-42b-a6.6b", "qwen3-moe-30b-a3b", "zamba2-2.7b",
-        "pixtral-12b", "mamba2-130m", "seamless-m4t-medium"}
+        "pixtral-12b", "mamba2-130m", "seamless-m4t-medium",
+        "lipconvnet-15"}
 
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward_and_grad(arch):
     cfg = get_smoke_config(arch)
+    stateless = registry.get(cfg.family).stateless
     params = api.init_params(cfg, KEY)
-    batch = lm_batch(cfg, batch=2, seq=32)
+    batch = (image_batch(cfg, 2) if stateless else
+             lm_batch(cfg, batch=2, seq=32))
 
     (loss, metrics), grads = jax.value_and_grad(
         lambda p: api.loss_fn(cfg, p, batch), has_aux=True)(params)
@@ -37,12 +42,13 @@ def test_smoke_forward_and_grad(arch):
     assert gn > 0, f"{arch}: zero gradient"
 
     logits, _ = api.forward(cfg, params, batch)
-    want_s = batch["labels"].shape[1]
-    assert logits.shape == (2, want_s, cfg.padded_vocab())
+    want = ((2, cfg.num_classes) if stateless else
+            (2, batch["labels"].shape[1], cfg.padded_vocab()))
+    assert logits.shape == want
     assert np.all(np.isfinite(np.asarray(logits, np.float32)))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", TOKEN_ARCHS)
 def test_smoke_decode_step(arch):
     cfg = get_smoke_config(arch)
     params = api.init_params(cfg, KEY)
@@ -121,5 +127,8 @@ def test_full_config_param_math(arch):
         # seamless: backbone-only (speech frontend is a stub) + untied
         # 256k-vocab embed/lm_head dominate -> 0.88B
         "mamba2-130m": 0.13e9, "seamless-m4t-medium": 0.88e9,
+        # GS-SOC LipConvnet-15 at width 32, 100 classes (paper table 3
+        # at groups (4,1): conv stack + wc mixers + SN head)
+        "lipconvnet-15": 22.6e6,
     }[arch]
     assert abs(n - expected) / expected < 0.25, (arch, n, expected)

@@ -31,8 +31,8 @@ SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
 # ---------------------------------------------------------------------------
 
 def test_registry_has_explicit_entries_per_family():
-    assert registry.families() == ["decoder", "encdec", "hybrid", "ssm",
-                                   "vlm"]
+    assert registry.families() == ["decoder", "encdec", "hybrid", "image",
+                                   "ssm", "vlm"]
 
 
 def test_unknown_family_raises_keyerror_listing_registered():
