@@ -1,0 +1,181 @@
+"""Bench-regression gate over the ``BENCH_*.json`` trajectories.
+
+Every bench suite run appends a timestamped entry to its suite's
+``history`` (``common.write_summary``), so the repo carries its own perf
+trajectory. This gate compares each suite's ``latest`` entry against the
+median of the last ``--window`` PRIOR history entries and fails (exit 1)
+when either
+
+* a throughput-like key (``*tok_s*``, ``*img_s*``, ``*speedup*``) drops
+  by more than ``--threshold`` (default 25%) after machine-speed
+  normalization, or
+* an equality-assertion key (any boolean, e.g. ``tokens_equal``) that
+  held in the baseline no longer holds — numerical drift is a
+  correctness bug, not a slowdown.
+
+Machine-speed normalization: histories are committed from whatever
+machine ran the bench, so an absolute tok/s comparison would flag every
+slower CI box. Keys are split into two classes: DIMENSIONLESS ratios
+(``*speedup*``, ``*_vs_*``, ``*ratio*``) are machine-independent and
+compared raw, while ABSOLUTE rates (``*tok_s*``, ``*img_s*``) are
+compared relative to the suite's machine-speed factor — the median
+latest/baseline ratio across the absolute keys — so a key only fails
+when it slowed down out of line with its siblings. A suite with a
+single absolute key therefore can only fail un-normalized (its own
+ratio IS the factor); pass ``--no-normalize`` to compare absolutes.
+
+Usage::
+
+    python -m benchmarks.check_regress                # gate every suite
+    python -m benchmarks.check_regress --suites serve kv
+    python -m benchmarks.check_regress --threshold 0.4 --no-normalize
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from .common import REPO_ROOT
+
+ABSOLUTE_MARKERS = ("tok_s", "img_s")        # machine-speed dependent
+RATIO_MARKERS = ("speedup", "_vs_", "ratio")  # dimensionless, compare raw
+
+
+def key_class(key: str) -> Optional[str]:
+    """'ratio' | 'absolute' | None (ungated)."""
+    if any(m in key for m in RATIO_MARKERS):
+        return "ratio"
+    if any(m in key for m in ABSOLUTE_MARKERS):
+        return "absolute"
+    return None
+
+
+def _flatten(summary: Dict) -> Dict[str, object]:
+    """Top-level scalars only; nested lists/dicts (e.g. ``cluster_scaling``
+    rows) are per-run shaped and compared via their flattened top-level
+    mirrors (``cluster_speedup`` etc.), not structurally."""
+    return {k: v for k, v in summary.items()
+            if isinstance(v, (int, float, bool)) and k != "ts"}
+
+
+def load_suite(path: pathlib.Path) -> Tuple[Dict, List[Dict]]:
+    doc = json.loads(path.read_text())
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path.name}: not a JSON object")
+    if "history" not in doc:            # pre-history flat file: no baseline
+        return doc, []
+    return doc.get("latest", {}), list(doc.get("history", []))
+
+
+def baseline_entries(latest: Dict, history: List[Dict],
+                     window: int) -> List[Dict]:
+    """The last ``window`` history entries EXCLUDING the one that mirrors
+    ``latest`` (write_summary appends the latest run to history too)."""
+    prior = list(history)
+    if prior and {k: v for k, v in prior[-1].items() if k != "ts"} == latest:
+        prior = prior[:-1]
+    return prior[-window:]
+
+
+def check_suite(suite: str, latest: Dict, baseline: List[Dict], *,
+                threshold: float, normalize: bool) -> List[str]:
+    """Return failure messages (empty == suite passes the gate)."""
+    if not baseline:
+        print(f"  {suite}: no prior history — nothing to gate against")
+        return []
+    lat = _flatten(latest)
+    base: Dict[str, List[float]] = {}
+    for entry in baseline:
+        for k, v in _flatten(entry).items():
+            base.setdefault(k, []).append(float(v))
+
+    # per-key latest/baseline-median ratios, split by class
+    ratios: Dict[str, Tuple[str, float, float]] = {}
+    for k, v in lat.items():
+        cls = key_class(k)
+        if cls is None or isinstance(v, bool) or k not in base:
+            continue
+        ref = statistics.median(base[k])
+        if ref <= 0:
+            continue
+        ratios[k] = (cls, float(v) / ref, ref)
+    abs_ratios = [r for cls, r, _ in ratios.values() if cls == "absolute"]
+    factor = (statistics.median(abs_ratios)
+              if (normalize and abs_ratios) else 1.0)
+
+    failures: List[str] = []
+    for k, (cls, ratio, ref) in sorted(ratios.items()):
+        rel = ratio / factor if cls == "absolute" else ratio
+        ok = rel >= 1.0 - threshold
+        mark = "ok" if ok else "REGRESSED"
+        print(f"  {suite}: {k:40s} x{ratio:.3f} vs median "
+              f"({cls}, norm x{rel:.3f}) {mark}")
+        if not ok:
+            failures.append(
+                f"{suite}.{k}: {lat[k]:.4g} vs baseline median {ref:.4g} "
+                f"(x{rel:.3f} after machine factor x{factor:.3f}, "
+                f"floor x{1.0 - threshold:.2f})")
+    for k, v in sorted(lat.items()):
+        if not isinstance(v, bool) or k not in base:
+            continue
+        held = all(base[k])             # only gate assertions that held
+        if held and not v:
+            failures.append(
+                f"{suite}.{k}: equality assertion drifted True -> False")
+        else:
+            print(f"  {suite}: {k:40s} {v} (baseline "
+                  f"{'held' if held else 'mixed'}) "
+                  f"{'ok' if (not held or v) else 'DRIFTED'}")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when BENCH_*.json latest regresses vs history")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated normalized throughput drop "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="baseline = median of the last N prior runs")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="compare absolute throughput (flags every "
+                         "machine-speed change, not just drift)")
+    ap.add_argument("--suites", nargs="*", default=None,
+                    help="suite names (serve, kv, ...); default: all "
+                         "BENCH_*.json at the repo root")
+    ap.add_argument("--root", type=pathlib.Path, default=REPO_ROOT,
+                    help="directory holding BENCH_*.json (for tests)")
+    args = ap.parse_args(argv)
+
+    paths = (sorted(args.root.glob("BENCH_*.json")) if args.suites is None
+             else [args.root / f"BENCH_{s}.json" for s in args.suites])
+    failures: List[str] = []
+    seen = 0
+    for path in paths:
+        suite = path.stem.removeprefix("BENCH_")
+        if not path.exists():
+            failures.append(f"{suite}: {path} missing")
+            continue
+        seen += 1
+        latest, history = load_suite(path)
+        baseline = baseline_entries(latest, history, args.window)
+        failures += check_suite(suite, latest, baseline,
+                                threshold=args.threshold,
+                                normalize=not args.no_normalize)
+    if not seen and not failures:
+        print("no BENCH_*.json trajectories found — nothing to gate")
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nregression gate passed ({seen} suite(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,6 +28,8 @@ from __future__ import annotations
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.metrics import REGISTRY
+from repro.obs.slo import SLOMonitor
 from repro.serve.engine import Request
 from repro.serve.kv import merge_pool_stats
 
@@ -49,7 +51,8 @@ class EngineCluster:
     def __init__(self, engines: Sequence, *,
                  spill_depth: Optional[int] = None,
                  rebalance_margin: Optional[int] = None,
-                 auto_rebalance: bool = True):
+                 auto_rebalance: bool = True,
+                 slo: Optional[SLOMonitor] = None):
         if not engines:
             raise ValueError("EngineCluster needs at least one engine")
         self.engines = list(engines)
@@ -67,9 +70,21 @@ class EngineCluster:
         self._results: Dict[int, List[int]] = {}
         self.finished: List[Request] = []
         self._wall = 0.0
-        self.routing = {"routed": 0, "base": 0, "fresh": 0,
-                        "affinity_hits": 0, "affinity_spills": 0,
-                        "rebalanced": 0}
+        # routing counters live in the process metrics plane; the
+        # `routing` property keeps the pre-obs dict read surface
+        self._routing = REGISTRY.scope("cluster").counters(
+            "routed", "base", "fresh", "affinity_hits",
+            "affinity_spills", "rebalanced")
+        # SLO-driven admission backpressure: when the monitor's thresholds
+        # breach, `accepting` drops and streaming drivers hold arrivals
+        # until it clears (transition callbacks — no per-request polling)
+        self.slo = slo
+        self.accepting = True
+        if slo is not None and slo.thresholds:
+            slo.on_breach(lambda *a: setattr(self, "accepting", False))
+            slo.on_clear(
+                lambda *a: setattr(self, "accepting",
+                                   not slo.any_breached))
 
     # -- routing --------------------------------------------------------------
     def _least_loaded(self, exclude: Optional[int] = None) -> int:
@@ -105,8 +120,8 @@ class EngineCluster:
         i, kind = self._route(adapter)
         local = self.engines[i].add_request(prompt, max_new_tokens,
                                             adapter=adapter)
-        self.routing["routed"] += 1
-        self.routing[kind] += 1
+        self._routing["routed"].inc()
+        self._routing[kind].inc()
         crid = self._next_crid
         self._next_crid += 1
         self._rid_map[(i, local)] = crid
@@ -131,7 +146,7 @@ class EngineCluster:
                 return moved
             crid = self._rid_map.pop((hi, req.rid))
             self._rid_map[(lo, self.engines[lo].submit(req))] = crid
-            self.routing["rebalanced"] += 1
+            self._routing["rebalanced"].inc()
             moved += 1
 
     def drain(self, idx: int) -> int:
@@ -145,7 +160,7 @@ class EngineCluster:
             crid = self._rid_map.pop((idx, req.rid))
             lo = self._least_loaded(exclude=idx)
             self._rid_map[(lo, self.engines[lo].submit(req))] = crid
-            self.routing["rebalanced"] += 1
+            self._routing["rebalanced"].inc()
             moved += 1
         return moved
 
@@ -203,6 +218,11 @@ class EngineCluster:
         return out
 
     # -- stats ----------------------------------------------------------------
+    @property
+    def routing(self) -> Dict[str, int]:
+        """Read-only value view of the routing counters (pre-obs keys)."""
+        return {k: c.value for k, c in self._routing.items()}
+
     @property
     def stats(self) -> Dict[str, Any]:
         """Single-engine-shaped aggregate (the keys ``describe`` and the
@@ -270,7 +290,8 @@ class EngineCluster:
                        else None),
             })
         return {"replicas": len(self.engines), "aggregate": agg,
-                "routing": routing, "per_replica": per}
+                "routing": routing, "per_replica": per,
+                "slo": self.slo.report() if self.slo is not None else None}
 
 
 def format_cluster_report(cs: Dict[str, Any]) -> str:
@@ -308,4 +329,6 @@ def format_cluster_report(cs: Dict[str, Any]) -> str:
                          f"{kv['page_size']}tok alloc={kv['alloc']} "
                          f"prefix_hits={kv['prefix_hits']} "
                          f"kv_stalls={kv['kv_stalls']}")
+    if cs.get("slo") is not None:
+        lines.append(SLOMonitor.format_report(cs["slo"]))
     return "\n".join(lines)

@@ -29,10 +29,17 @@ adapter bank.
     # quantize/replica flags as the token lanes)
     PYTHONPATH=src python -m repro.launch.serve --arch lipconvnet-15 \
         --smoke --family image --requests 16 --demo-adapters 3
+
+    # observability: per-request trace spans (TTFT/TPOT/stall attribution)
+    # exported for chrome://tracing, periodic SLO report, JSON tick log
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+        --requests 16 --arrival-rate 8 --trace --trace-out /tmp/trace.json \
+        --report-interval 1 --log-json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -44,6 +51,7 @@ from repro.core.runtime import ModelRuntime
 from repro.distrib import EngineCluster, format_cluster_report, serve_mesh
 from repro.launch.mesh import make_mesh
 from repro.models import registry
+from repro.obs import SLOMonitor, TraceRecorder
 from repro.serve.engine import (PagedServeEngine, ServeEngine,
                                 StaticServeEngine, latency_percentiles)
 from repro.serve.image import ImageServeEngine
@@ -67,23 +75,59 @@ def make_demo_adapters(names, params, peft_cfg, seed=1, scale=0.1):
     return out
 
 
-def drive_streaming(eng, requests, arrivals):
+def drive_streaming(eng, requests, arrivals, tick_hook=None):
     """Admit requests as they 'arrive' (Poisson sim) while stepping the
     continuous scheduler; returns results once traffic drains. ``eng`` is
-    anything engine-shaped — a single engine or an ``EngineCluster``."""
+    anything engine-shaped — a single engine or an ``EngineCluster``.
+    ``tick_hook`` (optional) runs after every scheduler tick — the
+    launcher's periodic SLO report / --log-json emitter. An SLO-breached
+    cluster (``eng.accepting`` False) HOLDS arrivals until the monitor
+    clears — admission backpressure, not drops."""
     t0 = time.perf_counter()
     i = 0
     while i < len(requests) or not eng.idle:
         now = time.perf_counter() - t0
-        while i < len(requests) and arrivals[i] <= now:
+        while (i < len(requests) and arrivals[i] <= now
+               and getattr(eng, "accepting", True)):
             eng.add_request(**requests[i])
             i += 1
         if eng.idle:                     # nothing in flight: wait for traffic
             time.sleep(min(0.005, max(arrivals[i] - now, 0.0)))
             continue
         eng.step()
+        if tick_hook is not None:
+            tick_hook()
     eng.add_wall(time.perf_counter() - t0)
     return {r.rid: r.output for r in eng.finished}
+
+
+def make_tick_observer(eng, slo, interval, log_json):
+    """Per-tick callback: every ``interval`` seconds (every tick when 0)
+    emit either the human SLO report or one ``--log-json`` record — the
+    machine-readable mirror of the same numbers."""
+    state = {"t0": time.perf_counter(), "last": time.perf_counter()}
+
+    def observe():
+        now = time.perf_counter()
+        if interval > 0 and now - state["last"] < interval:
+            return
+        state["last"] = now
+        if log_json:
+            rec = {"event": "tick", "t_s": round(now - state["t0"], 6),
+                   "queue_depth": eng.queue_depth,
+                   "active": eng.num_active,
+                   "requests": eng.stats["requests"],
+                   "tokens_generated": eng.stats["tokens_generated"],
+                   "decode_steps": eng.stats["decode_steps"],
+                   "prefills": eng.stats["prefills"],
+                   "admission_stalls": eng.stats["admission_stalls"]}
+            if slo is not None:
+                rec["slo"] = slo.report()
+            print(json.dumps(rec))
+        elif slo is not None:
+            print(SLOMonitor.format_report(slo.report()))
+
+    return observe
 
 
 def describe(eng, results, engine_name, dt):
@@ -165,6 +209,22 @@ def main():
                     help="KV pool HBM budget in BYTES (paged engine); the "
                          "page count is static — exhaustion stalls "
                          "admission. 0 = stall-free worst-case pool")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-request lifecycle spans (submit/"
+                         "stall/prefill/tokens/finish) with TTFT/TPOT; "
+                         "all lanes including --family image")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export finished traces: .jsonl = one event per "
+                         "line, anything else = Chrome trace_event JSON "
+                         "(chrome://tracing / Perfetto); implies --trace")
+    ap.add_argument("--report-interval", type=float, default=0.0,
+                    help="print the sliding-window SLO report (p50/p95/p99 "
+                         "TTFT+TPOT, tok/s, stall rates) every N seconds "
+                         "while serving; implies --trace")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit structured per-tick JSON records to stdout "
+                         "— the machine-readable mirror of the human "
+                         "report (throttled by --report-interval)")
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -289,16 +349,23 @@ def main():
             out.append(r)
         return out
 
+    # ---- observability: one tracer + SLO monitor across every lane ---------
+    want_trace = (args.trace or args.trace_out is not None
+                  or args.report_interval > 0)
+    slo = SLOMonitor(window=256) if want_trace else None
+    tracer = TraceRecorder(slo=slo) if want_trace else None
+
     if args.engine == "static":
         if rt.banked:
             raise SystemExit("--adapters needs --engine continuous "
                              "(static serving merges ONE adapter offline)")
         eng = StaticServeEngine(rt, max_batch=args.max_batch,
-                                max_len=max_len)
+                                max_len=max_len, tracer=tracer)
     elif stateless:
-        engines = [ImageServeEngine(r, max_batch=args.max_batch)
+        engines = [ImageServeEngine(r, max_batch=args.max_batch,
+                                    tracer=tracer)
                    for r in replica_runtimes(args.replicas)]
-        eng = EngineCluster(engines)
+        eng = EngineCluster(engines, slo=slo)
     else:
         rts = replica_runtimes(args.replicas)
         if args.engine == "paged":
@@ -307,14 +374,15 @@ def main():
                                         page_size=args.page_size,
                                         prefill_chunk=args.prefill_chunk,
                                         hbm_kv_budget=args.hbm_kv_budget
-                                        or None)
+                                        or None, tracer=tracer)
                        for r in rts]
         else:
             engines = [ServeEngine(r, max_batch=args.max_batch,
-                                   max_len=max_len) for r in rts]
+                                   max_len=max_len, tracer=tracer)
+                       for r in rts]
         # N=1 rides the same cluster path: the launcher report below IS
         # cluster_stats(), single-replica being its degenerate case
-        eng = EngineCluster(engines)
+        eng = EngineCluster(engines, slo=slo)
 
     # ---- synthetic traffic -------------------------------------------------
     rng = np.random.default_rng(0)
@@ -338,25 +406,57 @@ def main():
             req["adapter"] = names[i % len(names)]
         requests.append(req)
 
+    tick_hook = None
+    if args.log_json or (args.report_interval > 0 and slo is not None):
+        tick_hook = make_tick_observer(eng, slo, args.report_interval,
+                                       args.log_json)
+
     t0 = time.perf_counter()
     if args.arrival_rate > 0 and args.engine == "continuous":
         arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                              size=args.requests))
-        results = drive_streaming(eng, requests, arrivals)
+        results = drive_streaming(eng, requests, arrivals, tick_hook)
     else:
         if args.arrival_rate > 0:
             print("note: static engine ignores arrival times "
                   "(drain-queue batching)")
         for req in requests:
             eng.add_request(**req)
-        results = eng.run()
+        if tick_hook is not None and hasattr(eng, "step"):
+            t0r = time.perf_counter()
+            while eng.step():
+                tick_hook()
+            eng.add_wall(time.perf_counter() - t0r)
+            results = {r.rid: r.output for r in eng.finished}
+        else:
+            results = eng.run()
     dt = time.perf_counter() - t0
 
     describe(eng, results, args.engine, dt)
     if isinstance(eng, EngineCluster):
         # the ONE residency/routing report — replica rows carry the bank
         # and KV-pool residency that used to be printed ad hoc here
+        # (and the SLO block when tracing is on)
         print(format_cluster_report(eng.cluster_stats()))
+    elif slo is not None:
+        print(SLOMonitor.format_report(slo.report()))
+    if args.log_json:
+        print(json.dumps({
+            "event": "summary", "engine": args.engine,
+            "replicas": args.replicas, "requests": len(results),
+            "tokens_generated": eng.stats["tokens_generated"],
+            "decode_steps": eng.stats["decode_steps"],
+            "prefills": eng.stats["prefills"],
+            "admission_stalls": eng.stats["admission_stalls"],
+            "wall_s": round(dt, 6),
+            "slo": slo.report() if slo is not None else None}))
+    if tracer is not None and args.trace_out:
+        if args.trace_out.endswith(".jsonl"):
+            n = tracer.export_jsonl(args.trace_out)
+        else:
+            n = tracer.export_chrome(args.trace_out)
+        print(f"trace: {len(tracer.finished)} requests, {n} events "
+              f"-> {args.trace_out}")
     sample = results[min(results)]
     print("sample output tokens:", sample[:16])
     return 0

@@ -39,6 +39,7 @@ mesh to shard params/caches like the dry-run does.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional
@@ -50,6 +51,7 @@ from repro.config import ModelConfig
 from repro.core.peft import PrefillRequest
 from repro.core.runtime import ModelRuntime
 from repro.models import registry
+from repro.obs.metrics import REGISTRY
 from .kv import KVPagePool, SlotPages, pages_for_budget
 
 
@@ -70,10 +72,56 @@ class Request:
         return self.t_done - self.t_submit
 
 
-def _new_stats() -> Dict[str, Any]:
-    return {"requests": 0, "tokens_generated": 0, "decode_steps": 0,
-            "prefills": 0, "wall_s": 0.0, "admission_log": [],
-            "admission_stalls": 0}
+class EngineMetrics:
+    """An engine's stats surface, backed by the process metrics plane.
+
+    Writes go through the typed methods below (only engines call those);
+    reads keep the ``eng.stats["requests"]`` dict-style surface every
+    test, bench and driver already uses — same keys as the pre-obs dict,
+    one source of truth in ``repro.obs.REGISTRY``. ``admission_log``
+    stays a live bounded list: it is a diagnostics ring of
+    ``(rid, decode_step)`` tuples, not a scalar instrument.
+    """
+
+    COUNTER_KEYS = ("requests", "tokens_generated", "decode_steps",
+                    "prefills", "admission_stalls")
+
+    def __init__(self, kind: str = "serve"):
+        scope = REGISTRY.scope(kind)
+        self._c = scope.counters(*self.COUNTER_KEYS)
+        self._wall = scope.counter("wall_s")
+        self.admission_log: List[Any] = []
+
+    # -- writes (engine-internal) ---------------------------------------------
+    def inc(self, key: str, n: int = 1) -> None:
+        self._c[key].inc(n)
+
+    def add_wall(self, dt: float) -> None:
+        self._wall.inc(dt)
+
+    def log_admission(self, rid: int) -> None:
+        log = self.admission_log
+        log.append((rid, self._c["decode_steps"].value))
+        if len(log) > 4096:          # diagnostics ring, not a ledger
+            del log[:-2048]
+
+    # -- dict-style reads ------------------------------------------------------
+    def __getitem__(self, key: str) -> Any:
+        if key == "admission_log":
+            return self.admission_log
+        if key == "wall_s":
+            return self._wall.value
+        return self._c[key].value
+
+    def __contains__(self, key: str) -> bool:
+        return (key in self.COUNTER_KEYS
+                or key in ("wall_s", "admission_log"))
+
+    def as_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {k: c.value for k, c in self._c.items()}
+        out["wall_s"] = self._wall.value
+        out["admission_log"] = list(self.admission_log)
+        return out
 
 
 def _stream_prefix(cfg: ModelConfig) -> int:
@@ -125,16 +173,30 @@ def latency_percentiles(requests: List[Request],
 
 class ServeEngine:
     """Continuous-batching engine over ``max_batch`` persistent slots,
-    driving one ``ModelRuntime``."""
+    driving one ``ModelRuntime``.
+
+    ``tracer``: an optional ``repro.obs.TraceRecorder``; when attached the
+    tick loop records each request's lifecycle spans (submit / stalls /
+    prefill / tokens / finish). ``tracer=None`` (the default) skips every
+    hook — tracing costs nothing when off and <5% when on (serve_bench
+    asserts the bound).
+    """
+
+    _kind = "serve"          # metrics-scope prefix + tracer tag family
 
     def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
-                 max_len: int = 256, eos_id: int = 0):
+                 max_len: int = 256, eos_id: int = 0, tracer=None):
         _check_token_family(runtime.cfg)
         self.rt = runtime
         self.cfg = runtime.cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.tracer = tracer
+        self._ttag = (tracer.register_engine(self._kind)
+                      if tracer is not None else "")
+        self._annot = (tracer.annotate if tracer is not None
+                       else lambda name: contextlib.nullcontext())
         self._enc_len = max(max_len // 4, 8)
         self._prefix = _stream_prefix(self.cfg)
 
@@ -154,7 +216,7 @@ class ServeEngine:
         # long-running streaming drivers should call drain_finished()
         # periodically instead of letting history accumulate.
         self.finished: List[Request] = []
-        self.stats = _new_stats()
+        self.stats = EngineMetrics(self._kind)
         # decode-loop AdapterContext cache (satellite: the store-paged lane
         # used to rebuild the context — host LUT indexing + H2D per method —
         # on EVERY decode step; see _context())
@@ -181,6 +243,10 @@ class ServeEngine:
         req = Request(rid, list(prompt), max_new_tokens, adapter=adapter,
                       t_submit=time.perf_counter())
         self._queue.append(req)
+        if self.tracer is not None:
+            self.tracer.submit(self._ttag, rid, adapter=adapter,
+                               prompt_len=len(prompt),
+                               t_submit=req.t_submit)
         return rid
 
     @property
@@ -204,14 +270,19 @@ class ServeEngine:
     def add_wall(self, dt: float) -> None:
         """Account driver wall time (drivers call this instead of poking
         ``stats`` so the cluster can aggregate it the same way)."""
-        self.stats["wall_s"] += dt
+        self.stats.add_wall(dt)
 
     # -- cluster hooks (distrib.cluster) --------------------------------------
     def steal_queued(self) -> Optional[Request]:
         """Pop the YOUNGEST queued (never-admitted) request so the cluster
         can rebalance it onto a less-loaded replica; None when empty.
         Stealing from the tail keeps FIFO order for what stays."""
-        return self._queue.pop() if self._queue else None
+        if not self._queue:
+            return None
+        req = self._queue.pop()
+        if self.tracer is not None:        # re-submits on the new engine
+            self.tracer.drop(self._ttag, req.rid)
+        return req
 
     def submit(self, req: Request) -> int:
         """Enqueue an existing Request under a FRESH local rid (rebalanced
@@ -223,6 +294,10 @@ class ServeEngine:
         req.rid = self._next_id
         self._next_id += 1
         self._queue.append(req)
+        if self.tracer is not None:        # keeps the ORIGINAL submit time
+            self.tracer.submit(self._ttag, req.rid, adapter=req.adapter,
+                               prompt_len=len(req.prompt),
+                               t_submit=req.t_submit)
         return req.rid
 
     # -- internals ------------------------------------------------------------
@@ -246,8 +321,10 @@ class ServeEngine:
         req.t_done = time.perf_counter()
         self._results[req.rid] = req.output
         self.finished.append(req)
-        self.stats["requests"] += 1
-        self.stats["tokens_generated"] += len(req.output)
+        self.stats.inc("requests")
+        self.stats.inc("tokens_generated", len(req.output))
+        if self.tracer is not None:
+            self.tracer.finish(self._ttag, req.rid)
         self._slot_req[slot] = None
         self._slot_ids[slot] = 0            # identity until re-admitted
         self.rt.release_adapter(req.adapter)   # unpin (store-backed banks)
@@ -267,23 +344,28 @@ class ServeEngine:
             req = self._queue[0]
             aid = self.rt.acquire_adapter(req.adapter)
             if aid is None:                  # admission stall, not an error
-                self.stats["admission_stalls"] += 1
+                self.stats.inc("admission_stalls")
+                if self.tracer is not None:
+                    self.tracer.stall(self._ttag, req.rid, "adapter")
                 return
             self._queue.popleft()
             last_idx = self._prefix + len(req.prompt) - 1
             feed = PrefillRequest(batch=self._feed(req.prompt),
                                   last_idx=jnp.asarray(last_idx, jnp.int32),
                                   ctx=self.rt.context([aid]))
-            first, self._state = self._slot_prefill(
-                self.rt.params, feed, self._state,
-                jnp.asarray(slot, jnp.int32))
+            if self.tracer is not None:
+                self.tracer.prefill_start(self._ttag, req.rid)
+            with self._annot("prefill"):
+                first, self._state = self._slot_prefill(
+                    self.rt.params, feed, self._state,
+                    jnp.asarray(slot, jnp.int32))
             first = int(first)
             req.t_first = time.perf_counter()
-            self.stats["prefills"] += 1
-            log = self.stats["admission_log"]
-            log.append((req.rid, self.stats["decode_steps"]))
-            if len(log) > 4096:          # diagnostics ring, not a ledger
-                del log[:-2048]
+            if self.tracer is not None:
+                self.tracer.prefill_end(self._ttag, req.rid)
+                self.tracer.first_token(self._ttag, req.rid)
+            self.stats.inc("prefills")
+            self.stats.log_admission(req.rid)
             self._slot_req[slot] = req
             self._outs[slot] = [first]
             self._pos[slot] = self._prefix + len(req.prompt)
@@ -291,6 +373,10 @@ class ServeEngine:
             self._slot_ids[slot] = aid
             if first == self.eos_id or req.max_new_tokens <= 1:
                 self._finish(slot)
+        # every slot is occupied and work is still queued: head-of-line
+        # wait on a decode slot, not on a resource
+        if self._queue and self.tracer is not None:
+            self.tracer.stall(self._ttag, self._queue[0].rid, "queue")
 
     def _context(self):
         """AdapterContext for the current slot ids, cached across decode
@@ -319,9 +405,10 @@ class ServeEngine:
         tokens = jnp.asarray(self._last[:, None])
         pos = jnp.asarray(self._pos)
         ctx = self._context()
-        nt, _, self._state = self._decode(self.rt.params, ctx, tokens,
-                                          self._state, pos)
-        self.stats["decode_steps"] += 1
+        with self._annot("decode"):
+            nt, _, self._state = self._decode(self.rt.params, ctx, tokens,
+                                              self._state, pos)
+        self.stats.inc("decode_steps")
         return nt
 
     def _decode_commit(self, nt) -> None:
@@ -335,6 +422,8 @@ class ServeEngine:
             self._outs[slot].append(tok)
             self._pos[slot] += 1
             self._last[slot] = tok
+            if self.tracer is not None:
+                self.tracer.token(self._ttag, req.rid)
             if tok == self.eos_id or len(self._outs[slot]) >= req.max_new_tokens:
                 self._finish(slot)
 
@@ -385,7 +474,7 @@ class ServeEngine:
         t0 = time.perf_counter()
         while self.step():
             pass
-        self.stats["wall_s"] += time.perf_counter() - t0
+        self.stats.add_wall(time.perf_counter() - t0)
         res, self._results = self._results, {}
         return res
 
@@ -395,8 +484,10 @@ class StaticServeEngine:
     decode. Adapters (one per deployment) are merged into the runtime's
     weights offline — the paper's zero-overhead serving mode."""
 
+    _kind = "static"
+
     def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
-                 max_len: int = 256, eos_id: int = 0):
+                 max_len: int = 256, eos_id: int = 0, tracer=None):
         _check_token_family(runtime.cfg)
         if runtime.banked:
             raise ValueError(
@@ -408,19 +499,28 @@ class StaticServeEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.tracer = tracer
+        self._ttag = (tracer.register_engine(self._kind)
+                      if tracer is not None else "")
+        self._annot = (tracer.annotate if tracer is not None
+                       else lambda name: contextlib.nullcontext())
         self._queue: List[Request] = []
         self._next_id = 0
         self.finished: List[Request] = []    # completed Requests (latency)
         self._prefill = runtime.prefill_fn()
         self._decode = runtime.decode_fn()
-        self.stats = _new_stats()
+        self.stats = EngineMetrics(self._kind)
 
     def add_request(self, prompt: List[int], max_new_tokens: int = 16) -> int:
         _check_capacity(self.cfg, prompt, max_new_tokens, self.max_len)
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, list(prompt), max_new_tokens,
-                                   t_submit=time.perf_counter()))
+        req = Request(rid, list(prompt), max_new_tokens,
+                      t_submit=time.perf_counter())
+        self._queue.append(req)
+        if self.tracer is not None:
+            self.tracer.submit(self._ttag, rid, prompt_len=len(prompt),
+                               t_submit=req.t_submit)
         return rid
 
     def drain_finished(self) -> List[Request]:
@@ -433,7 +533,7 @@ class StaticServeEngine:
         return len(self._queue)
 
     def add_wall(self, dt: float) -> None:
-        self.stats["wall_s"] += dt
+        self.stats.add_wall(dt)
 
     # -- internals ------------------------------------------------------------
     def _run_batch(self, batch: List[Request]) -> None:
@@ -451,12 +551,19 @@ class StaticServeEngine:
         # (or attend over) the pad tail
         last_idx = np.asarray([prefix + len(r.prompt) - 1 for r in batch],
                               np.int32)
+        if self.tracer is not None:
+            for r in batch:
+                self.tracer.prefill_start(self._ttag, r.rid)
         req = PrefillRequest(batch=feed, last_idx=jnp.asarray(last_idx))
-        logits, state = self._prefill(self.rt.params, req, state)
+        with self._annot("prefill"):
+            logits, state = self._prefill(self.rt.params, req, state)
         last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        self.stats["prefills"] += 1
+        self.stats.inc("prefills")
         for r in batch:
             r.t_first = time.perf_counter()
+            if self.tracer is not None:
+                self.tracer.prefill_end(self._ttag, r.rid)
+                self.tracer.first_token(self._ttag, r.rid)
 
         max_new = max(r.max_new_tokens for r in batch)
         outs = [[int(last[i, 0])] for i in range(b)]
@@ -467,14 +574,17 @@ class StaticServeEngine:
         for t in range(max_new - 1):
             if done.all():
                 break
-            nt, logits, state = self._decode(self.rt.params, None, last,
-                                             state, jnp.asarray(pos0 + t))
-            self.stats["decode_steps"] += 1
+            with self._annot("decode"):
+                nt, logits, state = self._decode(self.rt.params, None, last,
+                                                 state, jnp.asarray(pos0 + t))
+            self.stats.inc("decode_steps")
             last = nt
             vals = np.asarray(nt[:, 0])
             for i in range(b):
                 if not done[i]:
                     outs[i].append(int(vals[i]))
+                    if self.tracer is not None:
+                        self.tracer.token(self._ttag, batch[i].rid)
                     done[i] |= vals[i] == self.eos_id or \
                         len(outs[i]) >= batch[i].max_new_tokens
             if done.all():
@@ -482,7 +592,9 @@ class StaticServeEngine:
         for i, r in enumerate(batch):
             r.output = outs[i][:r.max_new_tokens]
             r.t_done = time.perf_counter()
-            self.stats["tokens_generated"] += len(r.output)
+            self.stats.inc("tokens_generated", len(r.output))
+            if self.tracer is not None:
+                self.tracer.finish(self._ttag, r.rid)
 
     def run(self) -> Dict[int, List[int]]:
         t0 = time.perf_counter()
@@ -494,8 +606,8 @@ class StaticServeEngine:
             for r in batch:
                 results[r.rid] = r.output
                 self.finished.append(r)
-                self.stats["requests"] += 1
-        self.stats["wall_s"] += time.perf_counter() - t0
+                self.stats.inc("requests")
+        self.stats.add_wall(time.perf_counter() - t0)
         return results
 
 
@@ -532,10 +644,12 @@ class PagedServeEngine(ServeEngine):
     residency and scheduling change. Decoder-family runtimes only.
     """
 
+    _kind = "paged"
+
     def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
                  max_len: int = 256, eos_id: int = 0, page_size: int = 8,
                  prefill_chunk: int = 16, num_pages: Optional[int] = None,
-                 hbm_kv_budget: Optional[int] = None):
+                 hbm_kv_budget: Optional[int] = None, tracer=None):
         if runtime._ops.init_paged_state is None:
             raise ValueError(
                 f"family {runtime.cfg.family!r} has no paged KV serve path "
@@ -554,7 +668,7 @@ class PagedServeEngine(ServeEngine):
                 num_pages = max_batch * self.max_pages + 1
         self.num_pages = num_pages
         super().__init__(runtime, max_batch=max_batch, max_len=max_len,
-                         eos_id=eos_id)
+                         eos_id=eos_id, tracer=tracer)
         self._pos[:] = self._parked
         self._decoding = np.zeros(max_batch, bool)
         self._slot_pages: List[Optional[SlotPages]] = [None] * max_batch
@@ -586,12 +700,16 @@ class PagedServeEngine(ServeEngine):
             req = self._queue[0]
             aid = self.rt.acquire_adapter(req.adapter)
             if aid is None:
-                self.stats["admission_stalls"] += 1
+                self.stats.inc("admission_stalls")
+                if self.tracer is not None:
+                    self.tracer.stall(self._ttag, req.rid, "adapter")
                 return
             sp = self.pool.admit(req.adapter, req.prompt, req.max_new_tokens)
             if sp is None:                        # KV stall, not an error
                 self.rt.release_adapter(req.adapter)
-                self.stats["admission_stalls"] += 1
+                self.stats.inc("admission_stalls")
+                if self.tracer is not None:
+                    self.tracer.stall(self._ttag, req.rid, "kv")
                 return
             self._queue.popleft()
             row = self.pool.table_row(sp, self.max_pages + 1)
@@ -605,6 +723,8 @@ class PagedServeEngine(ServeEngine):
             self._pos[slot] = self._parked        # writes park in garbage
             self._prefill_q.append(_PrefillPlan(slot, req, sp,
                                                 next_start=sp.n_cached))
+        if self._queue and self.tracer is not None:     # all slots occupied
+            self.tracer.stall(self._ttag, self._queue[0].rid, "queue")
 
     def _feed_one_chunk(self) -> None:
         """Advance the HEAD prefill plan by one fixed-width chunk. The last
@@ -625,9 +745,14 @@ class PagedServeEngine(ServeEngine):
             batch={"tokens": jnp.asarray(toks)},
             last_idx=jnp.asarray(last_local, jnp.int32),
             ctx=self.rt.context([self._slot_ids[slot]]))
-        first, self._state = self._chunk_prefill(
-            self.rt.params, feed, self._state,
-            jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32))
+        if self.tracer is not None:                # span per prompt chunk
+            self.tracer.prefill_start(self._ttag, req.rid)
+        with self._annot("prefill_chunk"):
+            first, self._state = self._chunk_prefill(
+                self.rt.params, feed, self._state,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32))
+        if self.tracer is not None:
+            self.tracer.prefill_end(self._ttag, req.rid)
         plan.next_start = end
         if not final:
             return
@@ -635,11 +760,10 @@ class PagedServeEngine(ServeEngine):
         self.pool.register(plan.sp)               # publish full prompt pages
         first = int(first)
         req.t_first = time.perf_counter()
-        self.stats["prefills"] += 1
-        log = self.stats["admission_log"]
-        log.append((req.rid, self.stats["decode_steps"]))
-        if len(log) > 4096:
-            del log[:-2048]
+        if self.tracer is not None:
+            self.tracer.first_token(self._ttag, req.rid)
+        self.stats.inc("prefills")
+        self.stats.log_admission(req.rid)
         self._outs[slot] = [first]
         self._pos[slot] = plen
         self._last[slot] = first

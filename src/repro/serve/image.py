@@ -36,7 +36,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.runtime import ModelRuntime
 from repro.models import registry
-from .engine import Request, _new_stats
+from .engine import EngineMetrics, Request
 
 
 def _check_image(cfg: ModelConfig, image) -> np.ndarray:
@@ -51,7 +51,10 @@ def _check_image(cfg: ModelConfig, image) -> np.ndarray:
 class ImageServeEngine:
     """Tick-batched stateless serving over one ``ModelRuntime``."""
 
-    def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8):
+    _kind = "image"
+
+    def __init__(self, runtime: ModelRuntime, *, max_batch: int = 8,
+                 tracer=None):
         if not registry.get(runtime.cfg.family).stateless:
             raise ValueError(
                 f"family {runtime.cfg.family!r} has a prefill/decode "
@@ -59,6 +62,9 @@ class ImageServeEngine:
         self.rt = runtime
         self.cfg = runtime.cfg
         self.max_batch = max_batch
+        self.tracer = tracer
+        self._ttag = (tracer.register_engine(self._kind)
+                      if tracer is not None else "")
         self._infer = runtime.infer_fn()
         self._queue: "collections.deque[Request]" = collections.deque()
         self._active: List[Request] = []     # launched, not yet committed
@@ -66,7 +72,7 @@ class ImageServeEngine:
         self._results: Dict[int, List[int]] = {}
         self.result_logits: Dict[int, np.ndarray] = {}
         self.finished: List[Request] = []
-        self.stats = _new_stats()
+        self.stats = EngineMetrics(self._kind)
 
     # -- submission -----------------------------------------------------------
     def add_request(self, prompt, max_new_tokens: int = 1,
@@ -81,9 +87,12 @@ class ImageServeEngine:
         img = _check_image(self.cfg, prompt)
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, img, max_new_tokens=1,
-                                   adapter=adapter,
-                                   t_submit=time.perf_counter()))
+        req = Request(rid, img, max_new_tokens=1, adapter=adapter,
+                      t_submit=time.perf_counter())
+        self._queue.append(req)
+        if self.tracer is not None:
+            self.tracer.submit(self._ttag, rid, adapter=adapter,
+                               t_submit=req.t_submit)
         return rid
 
     @property
@@ -103,12 +112,17 @@ class ImageServeEngine:
         return not self._queue and not self._active
 
     def add_wall(self, dt: float) -> None:
-        self.stats["wall_s"] += dt
+        self.stats.add_wall(dt)
 
     # -- cluster hooks --------------------------------------------------------
     def steal_queued(self) -> Optional[Request]:
         """Pop the YOUNGEST queued request for cluster rebalancing."""
-        return self._queue.pop() if self._queue else None
+        if not self._queue:
+            return None
+        req = self._queue.pop()
+        if self.tracer is not None:        # re-submits on the new engine
+            self.tracer.drop(self._ttag, req.rid)
+        return req
 
     def submit(self, req: Request) -> int:
         """Enqueue an existing Request under a fresh local rid (rebalanced
@@ -118,6 +132,9 @@ class ImageServeEngine:
         req.rid = self._next_id
         self._next_id += 1
         self._queue.append(req)
+        if self.tracer is not None:        # keeps the ORIGINAL submit time
+            self.tracer.submit(self._ttag, req.rid, adapter=req.adapter,
+                               t_submit=req.t_submit)
         return req.rid
 
     # -- scheduling -----------------------------------------------------------
@@ -133,7 +150,9 @@ class ImageServeEngine:
             req = self._queue[0]
             aid = self.rt.acquire_adapter(req.adapter)
             if aid is None:                  # admission stall, not an error
-                self.stats["admission_stalls"] += 1
+                self.stats.inc("admission_stalls")
+                if self.tracer is not None:
+                    self.tracer.stall(self._ttag, req.rid, "adapter")
                 break
             self._queue.popleft()
             admitted.append(req)
@@ -155,13 +174,14 @@ class ImageServeEngine:
             batch[i] = req.prompt
             slot_ids[i] = ids[i]
         ctx = self.rt.context(slot_ids)
+        if self.tracer is not None:          # the forward IS the prefill
+            for r in admitted:
+                self.tracer.prefill_start(self._ttag, r.rid)
         logits = self._infer(self.rt.params, ctx, jnp.asarray(batch))
         self._active = admitted
-        self.stats["decode_steps"] += 1
-        log = self.stats["admission_log"]
-        log.extend((r.rid, self.stats["decode_steps"]) for r in admitted)
-        if len(log) > 4096:                  # diagnostics ring, not a ledger
-            del log[:-2048]
+        self.stats.inc("decode_steps")
+        for r in admitted:
+            self.stats.log_admission(r.rid)
         return logits
 
     def step_commit(self, pending) -> bool:
@@ -178,8 +198,12 @@ class ImageServeEngine:
                 self._results[req.rid] = req.output
                 self.result_logits[req.rid] = logits
                 self.finished.append(req)
-                self.stats["requests"] += 1
-                self.stats["tokens_generated"] += 1
+                self.stats.inc("requests")
+                self.stats.inc("tokens_generated")
+                if self.tracer is not None:
+                    self.tracer.prefill_end(self._ttag, req.rid)
+                    self.tracer.first_token(self._ttag, req.rid)
+                    self.tracer.finish(self._ttag, req.rid)
                 self.rt.release_adapter(req.adapter)
             self._active = []
         return not self.idle
@@ -206,6 +230,6 @@ class ImageServeEngine:
         t0 = time.perf_counter()
         while self.step():
             pass
-        self.stats["wall_s"] += time.perf_counter() - t0
+        self.stats.add_wall(time.perf_counter() - t0)
         res, self._results = self._results, {}
         return res

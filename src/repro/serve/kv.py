@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.obs.metrics import REGISTRY
 
 GARBAGE_PAGE = 0
 
@@ -86,9 +87,14 @@ class KVPagePool:
         self._page_hash: Dict[int, str] = {}
         # refcount-0 pages with still-published content, LRU order
         self._reusable: "OrderedDict[int, None]" = OrderedDict()
-        self.counters = {"alloc": 0, "freed": 0, "prefix_queries": 0,
-                         "prefix_hits": 0, "cache_evictions": 0,
-                         "kv_stalls": 0}
+        # instruments live in the process metrics plane; stats() is a view
+        scope = REGISTRY.scope("kvpool")
+        self._c = scope.counters("alloc", "freed", "prefix_queries",
+                                 "prefix_hits", "cache_evictions",
+                                 "kv_stalls")
+        self._g_in_use = scope.gauge("in_use")
+        self._g_free = scope.gauge("free")
+        self._g_cached = scope.gauge("cached")
 
     # -- capacity -------------------------------------------------------------
     @property
@@ -132,7 +138,7 @@ class KVPagePool:
         # never claim the page holding the prompt's last token: its logits
         # seed generation, so at least one suffix token is always prefilled
         n_claimable = min(len(hashes), (plen - 1) // ps) if plen else 0
-        self.counters["prefix_queries"] += 1
+        self._c["prefix_queries"].inc()
         claim: List[int] = []
         for h in hashes[:n_claimable]:
             pid = self._by_hash.get(h)
@@ -142,7 +148,7 @@ class KVPagePool:
         n_fresh = total - len(claim)
         if n_fresh > len(self._free) + len(self._reusable) - sum(
                 1 for p in claim if p in self._reusable):
-            self.counters["kv_stalls"] += 1
+            self._c["kv_stalls"].inc()
             return None
         # commit: pin cached pages, then allocate fresh ones
         for pid in claim:
@@ -152,8 +158,8 @@ class KVPagePool:
         pages = list(claim)
         for _ in range(n_fresh):
             pages.append(self._take_free())
-        self.counters["prefix_hits"] += len(claim)
-        self.counters["alloc"] += n_fresh
+        self._c["prefix_hits"].inc(len(claim))
+        self._c["alloc"].inc(n_fresh)
         return SlotPages(pages=pages, n_cached=len(claim) * ps,
                          hashes=hashes, n_prompt_full=len(hashes))
 
@@ -166,7 +172,7 @@ class KVPagePool:
             h = self._page_hash.pop(pid, None)
             if h is not None:
                 self._by_hash.pop(h, None)
-            self.counters["cache_evictions"] += 1
+            self._c["cache_evictions"].inc()
         self._refs[pid] = 1
         return pid
 
@@ -197,7 +203,7 @@ class KVPagePool:
                 self._reusable.move_to_end(pid)
             else:
                 self._free.append(pid)
-                self.counters["freed"] += 1
+                self._c["freed"].inc()
         sp.pages = []
 
     # -- device view ----------------------------------------------------------
@@ -212,9 +218,17 @@ class KVPagePool:
         return row
 
     def stats(self) -> Dict[str, int]:
-        return dict(self.counters, in_use=self.in_use,
-                    free=len(self._free), cached=len(self._reusable),
-                    num_pages=self.num_pages, page_size=self.page_size)
+        """Thin view over the pool's registry instruments — same keys the
+        pre-obs counters dict exposed, plus live occupancy (mirrored into
+        gauges so ``REGISTRY.snapshot()`` sees it too)."""
+        self._g_in_use.set(self.in_use)
+        self._g_free.set(len(self._free))
+        self._g_cached.set(len(self._reusable))
+        out = {k: c.value for k, c in self._c.items()}
+        out.update(in_use=self.in_use, free=len(self._free),
+                   cached=len(self._reusable), num_pages=self.num_pages,
+                   page_size=self.page_size)
+        return out
 
 
 def merge_pool_stats(stats: "List[Dict[str, int]]") -> Dict[str, int]:

@@ -45,10 +45,17 @@ import numpy as np
 
 from repro.core import methods as methods_lib
 from repro.core import peft as peft_lib
+from repro.obs.metrics import REGISTRY
 
 from .store import AdapterStore
 
 Tree = Any
+
+#: reservoir size for the page-in latency histogram. The pre-obs bank kept
+#: an append-forever ``page_in_ms`` LIST, which grew one float per miss for
+#: the life of the process — a real leak under thousand-tenant churn. A
+#: bounded reservoir keeps the p50/p95 queries and constant memory.
+PAGE_IN_HIST_CAP = 1024
 
 
 def split_budget(budget: int, counts: Dict[str, int]) -> Dict[str, int]:
@@ -126,10 +133,14 @@ class PagedAdapterBank:
             m: list(range(self.caps[m], 0, -1)) for m in self._methods}
         # built factor pages on host — evict->re-admit skips bank_build
         self._page_cache: Dict[str, Dict[str, Dict[str, np.ndarray]]] = {}
-        self.counters: Dict[str, Any] = {
-            "hits": 0, "misses": 0, "evictions": 0, "stalls": 0,
-            "builds": 0, "build_cache_hits": 0, "page_in_ms": [],
-            "max_resident": 0}
+        # instruments in the process metrics plane; `counters` (property)
+        # and `stats()` are views. page_in_ms is a BOUNDED histogram now.
+        scope = REGISTRY.scope("bank")
+        self._c = scope.counters("hits", "misses", "evictions", "stalls",
+                                 "builds", "build_cache_hits")
+        self._page_in_ms = scope.histogram("page_in_ms",
+                                           cap=PAGE_IN_HIST_CAP)
+        self._max_resident = scope.gauge("max_resident")
         # bumped on every residency change (page-in / evict): engines key
         # their per-step AdapterContext cache on (slot ids, version), so a
         # context built over stale stacks can never serve a decode step
@@ -212,7 +223,7 @@ class PagedAdapterBank:
             raise self._unknown(name)
         rec = self._resident.get(name)
         if rec is not None:
-            self.counters["hits"] += 1
+            self._c["hits"].inc()
             self._lru.pop(name, None)
             self._lru[name] = None                   # move to MRU
             self._pins[name] = self._pins.get(name, 0) + 1
@@ -224,13 +235,13 @@ class PagedAdapterBank:
                 f"adapter {name!r} uses method {method!r}, added to the "
                 "store after this bank was built — re-attach to size a "
                 "compact region for it")
-        self.counters["misses"] += 1
+        self._c["misses"].inc()
         if not self._free_compact[method]:
             victim = next((n for n in self._lru
                            if self._resident[n][1] == method
                            and not self._pins.get(n)), None)
             if victim is None:
-                self.counters["stalls"] += 1
+                self._c["stalls"].inc()
                 return None
             self._evict(victim)
         cslot = self._free_compact[method].pop()
@@ -240,14 +251,12 @@ class PagedAdapterBank:
 
         t0 = time.perf_counter()
         self._page_in(name, method, cslot)
-        self.counters["page_in_ms"].append(
-            (time.perf_counter() - t0) * 1e3)
+        self._page_in_ms.observe((time.perf_counter() - t0) * 1e3)
         self._lut[method][uslot] = cslot
         self._resident[name] = (uslot, method, cslot)
         self._lru[name] = None
         self._pins[name] = self._pins.get(name, 0) + 1
-        self.counters["max_resident"] = max(self.counters["max_resident"],
-                                            len(self._resident))
+        self._max_resident.set_max(len(self._resident))
         return uslot
 
     def release(self, name: Optional[str]) -> None:
@@ -266,7 +275,7 @@ class PagedAdapterBank:
         self._lut[method][uslot] = 0                 # universal id -> identity
         self._free_universal.append(uslot)
         self._free_compact[method].append(cslot)
-        self.counters["evictions"] += 1
+        self._c["evictions"].inc()
         # the stale page stays in the stack: nothing maps to its compact
         # slot until a new admission overwrites it
 
@@ -278,9 +287,9 @@ class PagedAdapterBank:
         the store's raw params (pulled lazily from disk if backed)."""
         cached = self._page_cache.get(name)
         if cached is not None:
-            self.counters["build_cache_hits"] += 1
+            self._c["build_cache_hits"].inc()
             return cached
-        self.counters["builds"] += 1
+        self._c["builds"].inc()
         mcfg = self.store.cfg_of_method(method)
         ops = methods_lib.get(method)
         raw = self.store.adapters_for(name)
@@ -330,26 +339,35 @@ class PagedAdapterBank:
                 total += per_slot * (self.capacity + 1)
         return total
 
+    @property
+    def counters(self) -> Dict[str, Any]:
+        """Read-only value view of the bank's registry instruments, keyed
+        by the pre-obs short names (tests and tools read these)."""
+        return {k: c.value for k, c in self._c.items()}
+
     def stats(self) -> Dict[str, Any]:
-        lat = self.counters["page_in_ms"]
+        """Thin view over the bank's registry instruments — same keys the
+        pre-obs dict exposed; page-in percentiles now come from the
+        bounded histogram."""
+        c = self.counters
         resident = self.resident_bytes()
         padded = self.padded_bytes()
-        seen = self.counters["hits"] + self.counters["misses"]
+        seen = c["hits"] + c["misses"]
         return {
             "store_adapters": len(self.store),
             "methods": dict(self.caps),
             "capacity": self.capacity,
             "resident": len(self._resident),
-            "max_resident": self.counters["max_resident"],
-            "hits": self.counters["hits"],
-            "misses": self.counters["misses"],
-            "hit_rate": self.counters["hits"] / seen if seen else 0.0,
-            "evictions": self.counters["evictions"],
-            "admission_stalls": self.counters["stalls"],
-            "builds": self.counters["builds"],
-            "build_cache_hits": self.counters["build_cache_hits"],
-            "page_in_ms_p50": float(np.percentile(lat, 50)) if lat else 0.0,
-            "page_in_ms_p95": float(np.percentile(lat, 95)) if lat else 0.0,
+            "max_resident": self._max_resident.value,
+            "hits": c["hits"],
+            "misses": c["misses"],
+            "hit_rate": c["hits"] / seen if seen else 0.0,
+            "evictions": c["evictions"],
+            "admission_stalls": c["stalls"],
+            "builds": c["builds"],
+            "build_cache_hits": c["build_cache_hits"],
+            "page_in_ms_p50": self._page_in_ms.percentile(50),
+            "page_in_ms_p95": self._page_in_ms.percentile(95),
             "resident_bank_bytes": resident,
             "padded_bank_bytes": padded,
             "compaction_ratio": padded / resident if resident else 0.0,
